@@ -1,0 +1,152 @@
+"""Paper figures: Fig.2 (segmentation curves), Fig.3 (drift), Fig.6
+(overhead), Fig.7 (threshold sweep)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (NetworkSim, PredictorConfig, RoboECC, Thresholds,
+                        TraceConfig, Workload, build_graph, build_pool,
+                        calibrate_thresholds, cut_bytes, evaluate_split,
+                        generate_trace, pool_transfer_profile, search,
+                        total_weight_bytes)
+from .paper_tables import NOMINAL_BW, calibrated_devices, net_latency
+
+
+def fig2_segmentation(quiet=False):
+    """Latency vs split point for OpenVLA (linear) vs CogACT (DiT kink)."""
+    lines = []
+    for model in ("openvla", "cogact"):
+        cfg, g, edge, cloud = calibrated_devices(model, "orin")
+        n = len(g)
+        lat = []
+        for s in range(n + 1):
+            e, c, _ = evaluate_split(g, s, edge, cloud, NOMINAL_BW)
+            t = e + c + net_latency(g, s, model)
+            lat.append(t * 1e3)
+        # linearity probe on the LLM-block tail region
+        llm_idx = [i for i, c_ in enumerate(g) if c_.kind == "llm"]
+        tail = lat[llm_idx[len(llm_idx) // 2]:llm_idx[-1]]
+        diffs = np.diff(tail)
+        lines.append(f"fig2_{model}_curve,{np.mean(lat) * 1e3:.0f},"
+                     f"min={min(lat):.1f}ms@{int(np.argmin(lat))} "
+                     f"llm_region_slope_std={np.std(diffs):.3f}")
+        if model == "cogact":
+            # structural transition: latency jumps at the llm->dit boundary
+            first_dit = next(i for i, c_ in enumerate(g)
+                             if c_.kind == "dit")
+            jump = abs(lat[first_dit + 1] - lat[first_dit])
+            base = np.mean(np.abs(diffs)) + 1e-9
+            lines.append(f"fig2_cogact_dit_kink,{jump * 1e3:.0f},"
+                         f"jump={jump:.2f}ms vs llm slope {base:.2f}ms")
+        if not quiet:
+            print("  " + lines[-1])
+    return lines
+
+
+def fig3_drift(quiet=False):
+    """The paper's exact example: cut [1,17,3072] (102KB) vs [1,17,768]
+    (25.5KB); optimal split moves when 10 MB/s drops to 1 MB/s."""
+    lines = []
+    old_cut = 17 * 3072 * 2     # 104448 B ~ 102 KB
+    new_cut = 17 * 768 * 2      # 26112 B ~ 25.5 KB
+    for bw, name in ((10e6, "good"), (1e6, "bad")):
+        t_old = old_cut / bw * 1e3
+        t_new = new_cut / bw * 1e3
+        lines.append(f"fig3_{name}_old_cut,{t_old * 1e3:.0f},"
+                     f"{t_old:.1f}ms for 102KB @{bw / 1e6:.0f}MB/s")
+        lines.append(f"fig3_{name}_new_cut,{t_new * 1e3:.0f},"
+                     f"{t_new:.1f}ms for 25.5KB @{bw / 1e6:.0f}MB/s")
+    # paper: 9.9ms -> 99.6ms -> move -> 24.9ms
+    assert abs(old_cut / 10e6 * 1e3 - 10.4) < 1.0
+    assert abs(old_cut / 1e6 * 1e3 - 104.4) < 6.0
+    assert abs(new_cut / 1e6 * 1e3 - 26.1) < 2.0
+    if not quiet:
+        for ln in lines:
+            print("  " + ln)
+    return lines
+
+
+def fig6_overhead(quiet=False):
+    """Parameter-sharing pool + LSTM size as % of model weights."""
+    lines = []
+    for model in ("openvla", "cogact"):
+        cfg, g, edge, cloud = calibrated_devices(model, "orin")
+        seg = search(g, edge, cloud, NOMINAL_BW,
+                     cloud_budget_bytes=12.1e9)
+        pool = build_pool(g, seg.split, overhead_target=0.028)
+        from repro.core import PredictorConfig, train_predictor
+        trace = generate_trace(400, seed=0)
+        pred, _ = train_predictor(trace, PredictorConfig(epochs=5))
+        lstm_frac = pred.n_bytes() / total_weight_bytes(g)
+        lines.append(
+            f"fig6_{model}_pool,{pool.overhead_frac * 1e8:.0f},"
+            f"pool={pool.overhead_frac * 100:.2f}% (paper 2.55-2.62%) "
+            f"lstm={lstm_frac * 100:.4f}%")
+        assert pool.overhead_frac < 0.04
+        assert lstm_frac < 0.01
+        if not quiet:
+            print("  " + lines[-1])
+    return lines
+
+
+def fig7_thresholds(quiet=False):
+    """T_low / T_high calibration sweep (paper §V-C-2 procedure)."""
+    cfg, g, edge, cloud = calibrated_devices("openvla", "orin")
+    seg = search(g, edge, cloud, NOMINAL_BW, cloud_budget_bytes=12.1e9)
+    pool = build_pool(g, seg.split, overhead_target=0.03)
+    trace = generate_trace(1200, TraceConfig(), seed=5)
+    deltas = np.diff(trace)
+
+    from repro.core import adjust
+
+    def eval_fn(thr: Thresholds) -> float:
+        split = seg.split
+        lat = []
+        for t in range(64, 400):
+            d = adjust(g, pool, split, trace[t], trace[t - 1], thr)
+            split = d.split
+            e, c, _ = evaluate_split(g, split, edge, cloud, trace[t])
+            lat.append(e + c + net_latency(g, split, "openvla", bw=trace[t]))
+        return float(np.mean(lat))
+
+    thr = calibrate_thresholds(deltas, eval_fn, n_grid=5)
+    base = eval_fn(Thresholds(high=float("inf"), low=float("-inf")))  # never adjust
+    best = eval_fn(thr)
+    line = (f"fig7_thresholds,{best * 1e6:.0f},"
+            f"T_high={thr.high / 1e6:.2f}MB/s T_low={thr.low / 1e6:.2f}MB/s "
+            f"avg={best * 1e3:.1f}ms vs no-adjust {base * 1e3:.1f}ms")
+    assert best <= base * 1.001, "calibrated thresholds must not lose"
+    if not quiet:
+        print("  " + line)
+    return [line]
+
+
+def adjustment_overhead_vs_gain(quiet=False):
+    """Paper §V-C-1: adjust overhead ~10.7ms vs ~32.6ms average gain."""
+    cfg = get_config("openvla-7b")
+    ctl = RoboECC(cfg, *calibrated_devices("openvla", "orin")[2:4],
+                  cloud_budget_bytes=12.1e9,
+                  thresholds=Thresholds(high=1.5e6, low=-1.5e6))
+    trace = generate_trace(3000, seed=2)
+    ctl.fit_predictor(trace[:2000], PredictorConfig(epochs=80))
+    net = NetworkSim(trace[2000:])
+    net.step(40)
+    with_adj, overheads = [], []
+    for _ in range(120):
+        r = ctl.tick(net)
+        with_adj.append(r.total_s - r.adjust_overhead_s)
+        overheads.append(r.adjust_overhead_s)
+    ctl2 = RoboECC(cfg, ctl.edge_dev, ctl.cloud_dev,
+                   cloud_budget_bytes=12.1e9)
+    net2 = NetworkSim(trace[2000:])
+    net2.step(40)
+    without = [ctl2.tick(net2, adjust_enabled=False).total_s
+               for _ in range(120)]
+    gain = (np.mean(without) - np.mean(with_adj)) * 1e3
+    ovh = np.mean(overheads[3:]) * 1e3
+    line = (f"adjust_overhead_vs_gain,{ovh * 1e3:.0f},"
+            f"overhead={ovh:.1f}ms gain={gain:.1f}ms (paper: 10.7 vs 32.6)")
+    if not quiet:
+        print("  " + line)
+    return [line]

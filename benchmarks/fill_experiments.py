@@ -1,0 +1,166 @@
+"""Fill EXPERIMENTS.md markers from dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.fill_experiments
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .roofline import ARTIFACT_DIR, markdown, table
+
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def dryrun_status() -> str:
+    lines = ["| mesh | ok | skipped (long_500k, documented) | error |",
+             "|---|---|---|---|"]
+    for mesh in ("16x16", "2x16x16"):
+        ok = sk = err = 0
+        for path in glob.glob(os.path.join(ARTIFACT_DIR, "*.json")):
+            name = os.path.basename(path)
+            if not name.endswith(f"__{mesh}.json"):
+                continue  # tagged variants / other meshes
+            with open(path) as f:
+                st = json.load(f).get("status")
+            ok += st == "ok"
+            sk += st == "skipped"
+            err += st == "error"
+        lines.append(f"| {mesh} | {ok} | {sk} | {err} |")
+    return "\n".join(lines)
+
+
+def roofline_notes() -> str:
+    rows = [r for r in table() if "compute_ms" in r]
+    if not rows:
+        return ""
+    worst = min(rows, key=lambda r: r["compute_ms"] / max(
+        r["compute_ms"], r["memory_analytic_ms"], r["collective_ms"]))
+    coll = max(rows, key=lambda r: r["collective_ms"] / max(
+        r["compute_ms"], r["memory_analytic_ms"], r["collective_ms"], 1e-12))
+    out = [
+        "Per-cell one-line reads (what would move the dominant term):",
+        "",
+        "* **train_4k cells** are collective-dominated at TP=16: 4 residual"
+        " all-reduces/layer (fwd+bwd) scale with activations, not params —"
+        " fix = FSDP for the <10B archs (§Perf C) or fewer TP shards.",
+        "* **prefill_32k cells**: same 2-per-layer TP all-reduce wall;"
+        " int8-ring combine halves it (§Perf B); ring/sequence attention"
+        " would remove it.",
+        "* **decode_32k cells** are KV-bound: the baseline gathers the"
+        " model-sharded cache every layer — sequence-parallel flash-decode"
+        " (§Perf A) reduces wire by ~3 orders of magnitude.",
+        "* **long_500k (mamba2/zamba2)**: state-recurrent decode is"
+        " parameter-bound (memory term), already near its roofline;"
+        " collective term negligible.",
+        "* **MoE cells** (deepseek/granite): EP keeps the combine-psum at"
+        " dense-FFN cost; dominant term matches the dense analogue.",
+        "",
+        f"Worst compute-fraction cell: {worst['arch']} x {worst['shape']}"
+        f" ({worst['compute_ms'] / max(worst['compute_ms'], worst['memory_analytic_ms'], worst['collective_ms']):.2f}).",
+        f" Most collective-bound: {coll['arch']} x {coll['shape']}.",
+    ]
+    return "\n".join(out)
+
+
+def perf_section() -> str:
+    from .perf_report import collective_kinds, compare
+    parts = []
+    parts.append("""### A. decode_32k / llama3.2-3b — most collective-bound cell
+
+**Iteration 1 — hypothesis:** the baseline decode all-gathers the
+model-sharded KV cache every layer (HLO shows 140 all-gathers = 35 GiB/dev
++ 42 GiB of resharding permutes per step -> collective term 639 ms, the
+dominant term); napkin math says a sequence-parallel flash-decode (cache
+sharded on T, shards combine with pmax/psum of (B,H)-stat tensors) needs
+~25 MB/layer of psum instead — **~10³x less wire**, collective term
+< 1 ms.  **Change:** `cfg.decode_attn="sp"` shard_map kernel
+(models/attention.py `_sp_flash_decode`), cache layout `(B, T→model,
+KV*hd)`.
+
+**Iteration 1a — engineering detours (recorded):** the first two
+formulations crashed GSPMD at production scale — `lax.axis_index` in a
+partial-manual region lowers to an unsupported `PartitionId` (fixed by
+feeding pre-sharded position iotas), and the partial-manual
+(`axis_names={"model"}`) form then hit a hard `hlo_instruction.cc:1558
+Invalid binary instruction opcode copy` check failure at >= 64 host
+devices (logs in benchmarks/artifacts/perf_A.log).  Switching to a
+FULL-manual shard_map over every mesh axis (batch explicitly over
+`(pod, data)`, cache over `model`, cache update computed locally per
+shard) avoids the partitioner paths entirely.
+
+**Measurement — hypothesis CONFIRMED on the 16x16 production mesh:**
+""")
+    parts.append(compare("llama3.2-3b", "decode_32k", "sp",
+                         "sequence-parallel flash-decode (beyond-paper)"))
+    parts.append("""
+Collective term **639 ms -> 3.73 ms (171x)**; HLO memory term halves (no
+more gathered-cache traffic); the cell flips from collective-bound to its
+parameter+cache memory floor.  Numerics exact (max err 8e-6 vs the TP
+baseline over prefill+4 decode steps).  Per-step wire is now 28 layers x
+(pmax/psum stats + one (B,1,H,hd) psum) ≈ 62 MB/dev vs 21.2 GiB/dev
+gathered baseline — matching the napkin estimate within 2x.
+""")
+    parts.append("baseline collectives: "
+                 + collective_kinds("llama3.2-3b", "decode_32k"))
+    parts.append("variant collectives:  "
+                 + collective_kinds("llama3.2-3b", "decode_32k", "sp"))
+    parts.append("""
+### B. prefill_32k / command-r-35b — paper-representative serving shape
+
+**Iteration 1 — hypothesis:** prefill is TP-all-reduce-bound (2 per layer x
+40 layers of (B,S,8192) bf16 residual all-reduces ≈ 172 GB/dev wire);
+quantising the TP combine to int8+scales (the paper's own wire-compression
+insight applied to intra-pod links) should halve the dominant term at ~1 %
+activation error (measured 0.94 % end-to-end on 8 devices).  **Change:**
+`cfg.tp_collective="int8_ring"` — shard_map row-parallel projections with a
+hand-rolled int8 ring all-reduce (models/layers.py `int8_ring_proj`).
+**Measurement — hypothesis REFUTED:**
+""")
+    parts.append(compare("command-r-35b", "prefill_32k", "int8ring",
+                         "int8-ring TP combine (beyond-paper attempt)"))
+    parts.append("""
+**Lesson:** the fori-loop ring (dynamic chunk slice + ppermute per hop,
+requantise each hop) lowers to ~16x MORE wire than the fused bf16
+all-reduce: inside a partial-manual shard_map GSPMD cannot fuse the ring,
+each hop moves full-tensor-sized intermediates, and the while-loop hides the
+schedule from overlap.  A hand-rolled collective has to beat XLA's
+decomposed ring all-reduce, which already pipelines at (2(N-1)/N)x bytes —
+halving dtype is worth 2x only if the schedule stays fused.  The right
+int8-combine is a compiler-level reduce-scatter/all-gather pair in s8 (not
+expressible from JAX today); we keep the bf16 all-reduce as the shipped
+default and record the negative result.  (The int8 ring IS still the right
+tool for the *gradient* all-reduce, where one collective per step amortises
+the ring overhead — see train/compression.py tests.)""")
+    parts.append("""
+### C. train_4k / llama3.2-3b — worst roofline fraction
+
+**Iteration 1 — hypothesis:** a 3B model on 256 chips does not need TP=16;
+the 160 GiB/dev of per-layer residual all-reduces is pure deployment
+choice.  FSDP (params sharded over all 256 devices, activations
+batch-sharded only) replaces them with per-layer parameter all-gathers:
+~2x params bytes ≈ 1.7 GiB/dev — **~100x predicted wire reduction**, flops
+unchanged.  **Change:** `make_rules(strategy="fsdp")`.  **Measurement:**
+""")
+    parts.append(compare("llama3.2-3b", "train_4k", "fsdp",
+                         "FSDP / ZeRO-3 layout (beyond-paper)"))
+    return "\n".join(parts)
+
+
+def main():
+    with open(EXP) as f:
+        text = f.read()
+    text = text.replace("<!-- DRYRUN_STATUS -->", dryrun_status())
+    text = text.replace("<!-- ROOFLINE_TABLE -->",
+                        markdown() + "\n\n(2x16x16 table: same reader with "
+                        "`mesh='2x16x16'`; artifacts in the same directory.)")
+    text = text.replace("<!-- ROOFLINE_NOTES -->", roofline_notes())
+    text = text.replace("<!-- PERF_SECTION -->", perf_section())
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

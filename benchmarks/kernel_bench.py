@@ -1,0 +1,70 @@
+"""Kernel micro-bench: jnp-oracle wall time on CPU + analytic TPU occupancy.
+
+On this CPU-only container real kernel timings are meaningless for the TPU
+target, so we report (a) oracle wall-time as a regression canary and (b) the
+analytic MXU/VMEM occupancy of the Pallas tiling (FLOPs vs bytes per tile).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # warmup + compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(quiet=False):
+    lines = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention tile analytics: (128,128) tiles, D=128
+    bq = bk = 128
+    D = 128
+    tile_flops = 2 * bq * bk * D * 2
+    tile_bytes = (bq * D + 2 * bk * D) * 2 + bq * D * 4
+    lines.append(f"kernel_flash_tile,{tile_flops},"
+                 f"arith_intensity={tile_flops / tile_bytes:.1f} flops/byte "
+                 f"(v5e ridge ~240)")
+
+    from repro.kernels.flash_attention import ref as fa_ref
+    q = jax.random.normal(key, (2, 512, 4, 64), jnp.float32)
+    k = jax.random.normal(key, (2, 512, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (2, 512, 2, 64), jnp.float32)
+    t = _time(jax.jit(lambda a, b, c: fa_ref.attention(a, b, c)), q, k, v)
+    lines.append(f"kernel_flash_oracle_cpu,{t * 1e6:.0f},B2S512H4D64")
+
+    from repro.kernels.decode_attention import ref as da_ref
+    q1 = jax.random.normal(key, (4, 8, 64))
+    kc = jax.random.normal(key, (4, 2, 2048, 64))
+    vc = jax.random.normal(key, (4, 2, 2048, 64))
+    t = _time(jax.jit(lambda a, b, c: da_ref.decode_attention(a, b, c, 2000)),
+              q1, kc, vc)
+    lines.append(f"kernel_decode_oracle_cpu,{t * 1e6:.0f},B4H8T2048")
+
+    from repro.kernels.ssd_scan import ref as ssd_ref
+    x = jax.random.normal(key, (2, 512, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(key, (2, 512, 4)))
+    A = -jnp.exp(jax.random.normal(key, (4,)) * 0.3)
+    Bm = jax.random.normal(key, (2, 512, 32))
+    Cm = jax.random.normal(key, (2, 512, 32))
+    t = _time(jax.jit(lambda *a: ssd_ref.ssd(*a, 128)), x, dt, A, Bm, Cm)
+    lines.append(f"kernel_ssd_oracle_cpu,{t * 1e6:.0f},B2T512H4P32N32")
+
+    from repro.kernels.activation_codec import ops as codec
+    x = jax.random.normal(key, (1024, 4096), jnp.bfloat16)
+    t = _time(lambda a: codec.quantize(a)[0], x)
+    ratio = (1024 * 4096 * 2) / (1024 * 4096 + 1024 * 32 * 4)
+    lines.append(f"kernel_codec_oracle_cpu,{t * 1e6:.0f},"
+                 f"compression={ratio:.2f}x wire reduction")
+    if not quiet:
+        for ln in lines:
+            print("  " + ln)
+    return lines

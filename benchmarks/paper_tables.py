@@ -1,0 +1,179 @@
+"""Paper Tables II / III / IV reproduction.
+
+Calibration (DESIGN.md §8): Table I peak specs + one efficiency factor per
+device fitted to the paper's OWN edge-only / cloud-only rows (the paper's
+"hardware performance data").  Everything else — the split, the latency
+decomposition, the speedups — comes out of RoboECC's models.  Validated
+claims: speedup bands 3.16-3.28x (Orin+A100) / 2.10-2.23x (Thor+A100),
+RoboECC beating Fixed-Seg, and the Table IV ablation ordering.
+
+Network model: VLA inference crosses the link once for the prompt/feature
+transfer plus twice per autoregressive action token (activation over, token
+id back) — OpenVLA's 7-token decode is what makes its network share large
+(~120 ms in the paper) while CogACT's single-pass DiT is ~10 ms.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.configs import get_config
+from repro.core import (Workload, build_graph, cut_bytes, evaluate_split,
+                        fixed_split, fit_eta, layer_latency, search)
+from repro.core.hardware import A100, ORIN, THOR, DeviceSpec
+
+NOMINAL_BW = 10e6          # bytes/s (paper Fig. 3 "good network")
+RTT = 0.0065               # per crossing
+
+PAPER = {
+    # (model, edge): {row: (cloud_ms, edge_ms, total_ms)}
+    ("openvla", "orin"): {
+        "edge_only": (0, 1119.4, 1119.4), "cloud_only": (151.2, 0, 151.2),
+        "fixed": (87.9, 717.8, 923.3), "roboecc": (136.7, 94.5, 354.4),
+        "budget_gb": 12.1},
+    ("openvla", "thor"): {
+        "edge_only": (0, 628.9, 628.9), "cloud_only": (151.2, 0, 151.2),
+        "fixed": (89.5, 378.4, 587.2), "roboecc": (137.1, 51.3, 300.1),
+        "budget_gb": 12.1},
+    ("cogact", "orin"): {
+        "edge_only": (0, 775.3, 775.3), "cloud_only": (111.4, 0, 111.4),
+        "fixed": (46.9, 437.2, 572.5), "roboecc": (81.9, 143.2, 236.1),
+        "budget_gb": 12.0},
+    ("cogact", "thor"): {
+        "edge_only": (0, 429.6, 429.6), "cloud_only": (111.4, 0, 111.4),
+        "fixed": (47.2, 240.4, 375.4), "roboecc": (82.7, 105.7, 192.7),
+        "budget_gb": 12.0},
+}
+
+
+def _workload(model: str) -> Workload:
+    if model == "openvla":
+        return Workload(s_new=17, decode_steps=7)
+    return Workload(s_new=17, decode_steps=0)      # CogACT: DiT single pass
+
+
+def _crossings(model: str) -> int:
+    w = _workload(model)
+    return 1 + 2 * w.decode_steps
+
+
+def net_latency(graph, split, model: str, bw=NOMINAL_BW, rtt=RTT,
+                input_bytes=0.0) -> float:
+    wire = cut_bytes(graph, split, input_bytes)
+    if wire == 0:
+        return 0.0
+    return wire / bw + rtt * _crossings(model)
+
+
+@dataclasses.dataclass
+class Row:
+    method: str
+    cloud_ms: float
+    edge_ms: float
+    net_ms: float
+    total_ms: float
+    cloud_load_gb: float
+    edge_load_gb: float
+
+
+def calibrated_devices(model: str, edge_name: str):
+    cfg = get_config("openvla-7b" if model == "openvla" else "cogact-7b")
+    w = _workload(model)
+    g = build_graph(cfg, w)
+    p = PAPER[(model, edge_name)]
+    edge0 = ORIN if edge_name == "orin" else THOR
+    edge = fit_eta(g, edge0, p["edge_only"][2] / 1e3)
+    cloud = fit_eta(g, A100, p["cloud_only"][2] / 1e3)
+    return cfg, g, edge, cloud
+
+
+def table_rows(model: str, edge_name: str) -> Dict[str, Row]:
+    cfg, g, edge, cloud = calibrated_devices(model, edge_name)
+    w = _workload(model)
+    p = PAPER[(model, edge_name)]
+    budget = p["budget_gb"] * 1e9
+    total_w = sum(c.weight_bytes for c in g)
+
+    def row(method: str, split: int, net_on: bool = True) -> Row:
+        e, c, _ = evaluate_split(g, split, edge, cloud, NOMINAL_BW)
+        n = net_latency(g, split, model,
+                        input_bytes=w.input_bytes) if net_on else 0.0
+        if split == len(g):
+            n = 0.0
+        cl = sum(x.weight_bytes for x in g[split:])
+        return Row(method, c * 1e3, e * 1e3, n * 1e3, (e + c + n) * 1e3,
+                   cl / 1e9, (total_w - cl) / 1e9)
+
+    n = len(g)
+    seg = search(g, edge, cloud, NOMINAL_BW, cloud_budget_bytes=budget,
+                 input_bytes=w.input_bytes)
+    return {
+        "edge_only": row("Edge-Only", n),
+        "cloud_only": row("Cloud-Only", 0),
+        "fixed": row("Fixed Seg", fixed_split(g)),
+        "roboecc": row("RoboECC", seg.split),
+    }
+
+
+def run_table(model: str, quiet: bool = False):
+    """Returns list of CSV lines 'name,us_per_call,derived'."""
+    lines = []
+    for edge_name in ("orin", "thor"):
+        rows = table_rows(model, edge_name)
+        p = PAPER[(model, edge_name)]
+        speedup = rows["edge_only"].total_ms / rows["roboecc"].total_ms
+        paper_speedup = p["edge_only"][2] / p["roboecc"][2]
+        for key, r in rows.items():
+            lines.append(
+                f"table_{model}_{edge_name}_{key},{r.total_ms * 1e3:.0f},"
+                f"edge={r.edge_ms:.1f}ms cloud={r.cloud_ms:.1f}ms "
+                f"net={r.net_ms:.1f}ms cloud_load={r.cloud_load_gb:.1f}GB")
+        lines.append(
+            f"table_{model}_{edge_name}_speedup,{speedup * 1e6:.0f},"
+            f"x{speedup:.2f} vs paper x{paper_speedup:.2f}")
+        assert rows["roboecc"].total_ms < rows["fixed"].total_ms, \
+            "RoboECC must beat Fixed-Seg"
+        if not quiet:
+            for ln in lines[-5:]:
+                print("  " + ln)
+    return lines
+
+
+def run_ablation(quiet: bool = False):
+    """Table IV: Edge-Only -> +Co-Aware Seg -> +Network-Aware Adjustment."""
+    cfg, g, edge, cloud = calibrated_devices("openvla", "orin")
+    w = _workload("openvla")
+    budget = PAPER[("openvla", "orin")]["budget_gb"] * 1e9
+    n = len(g)
+    lines = []
+    # row 1: edge only
+    e1, _, _ = evaluate_split(g, n, edge, cloud, NOMINAL_BW)
+    # row 2: + segmentation (static split, nominal bandwidth planning only)
+    seg = search(g, edge, cloud, NOMINAL_BW, cloud_budget_bytes=budget,
+                 input_bytes=w.input_bytes)
+    e2, c2, _ = evaluate_split(g, seg.split, edge, cloud, NOMINAL_BW)
+    # degraded network costs the static split dearly:
+    bad_bw = 1.5e6
+    n2 = net_latency(g, seg.split, "openvla", bw=bad_bw,
+                     input_bytes=w.input_bytes)
+    t2 = e2 + c2 + n2
+    # row 3: + network-aware adjustment moves to the min-transfer pool layer
+    from repro.core import build_pool, pool_transfer_profile
+    import numpy as np
+    pool = build_pool(g, seg.split, overhead_target=0.03)
+    vols = pool_transfer_profile(g, pool)
+    s3 = list(pool.splits())[int(np.argmin(vols))]
+    e3, c3, _ = evaluate_split(g, s3, edge, cloud, NOMINAL_BW)
+    n3 = net_latency(g, s3, "openvla", bw=bad_bw, input_bytes=w.input_bytes)
+    t3 = e3 + c3 + n3
+    rows = [("edge_only", 0.0, e1 * 1e3, e1 * 1e3),
+            ("co_aware_seg", c2 * 1e3, e2 * 1e3, t2 * 1e3),
+            ("net_aware_adjust", c3 * 1e3, e3 * 1e3, t3 * 1e3)]
+    assert rows[1][3] < rows[0][3] > rows[2][3]
+    assert rows[2][3] <= rows[1][3], "adjustment must not hurt"
+    for name, c, e, t in rows:
+        lines.append(f"table4_{name},{t * 1e3:.0f},"
+                     f"cloud={c:.1f}ms edge={e:.1f}ms total={t:.1f}ms")
+        if not quiet:
+            print("  " + lines[-1])
+    return lines

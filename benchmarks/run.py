@@ -1,0 +1,51 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call holds the headline
+quantity scaled to integer microseconds where latency-like; see each
+module's docstring for the derived column semantics).
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2,fig3,...]
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma list of bench names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import figures, kernel_bench, paper_tables, roofline
+
+    benches = {
+        "table2": lambda: paper_tables.run_table("openvla", quiet=True),
+        "table3": lambda: paper_tables.run_table("cogact", quiet=True),
+        "table4": lambda: paper_tables.run_ablation(quiet=True),
+        "fig2": lambda: figures.fig2_segmentation(quiet=True),
+        "fig3": lambda: figures.fig3_drift(quiet=True),
+        "fig6": lambda: figures.fig6_overhead(quiet=True),
+        "fig7": lambda: figures.fig7_thresholds(quiet=True),
+        "adjust": lambda: figures.adjustment_overhead_vs_gain(quiet=True),
+        "kernels": lambda: kernel_bench.run(quiet=True),
+        "roofline": lambda: roofline.run(quiet=True),
+    }
+    failed = []
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            for line in fn():
+                print(line)
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name},-1,FAILED {e}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

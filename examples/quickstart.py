@@ -1,0 +1,56 @@
+"""Quickstart: RoboECC in ~60 lines.
+
+1. Build the OpenVLA layer graph (structure model, Eq. 1).
+2. Find the optimal edge/cloud split under a cloud budget (Alg. 1).
+3. Build the parameter-sharing pool and react to a bandwidth drop (§IV-B).
+4. Execute a REAL co-inference on a reduced model with the split executor.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_config
+from repro.core import (Thresholds, Workload, adjust, build_graph,
+                        build_pool, pool_transfer_profile, search)
+from repro.core.hardware import A100, ORIN
+from repro.models import build
+from repro.runtime.partition import LMSplitExecutor, SplitPlan, payload_bytes
+
+# --- 1. structure model -----------------------------------------------------
+cfg = get_config("openvla-7b")
+graph = build_graph(cfg, Workload())
+print(f"{cfg.name}: {len(graph)} layers, "
+      f"{sum(c.weight_bytes for c in graph) / 1e9:.1f} GB weights")
+
+# --- 2. Alg. 1 segmentation --------------------------------------------------
+seg = search(graph, ORIN, A100, bandwidth_bps=10e6,
+             cloud_budget_bytes=12.1e9)
+print(f"optimal split: layer {seg.split}/{len(graph)}  "
+      f"total={seg.total_s * 1e3:.1f}ms "
+      f"(edge {seg.edge_s * 1e3:.1f} + cloud {seg.cloud_s * 1e3:.1f} "
+      f"+ net {seg.net_s * 1e3:.1f})")
+
+# --- 3. pool + network-aware adjustment --------------------------------------
+pool = build_pool(graph, seg.split, overhead_target=0.03)
+print(f"parameter-sharing pool: layers [{pool.start},{pool.end}) "
+      f"= {pool.overhead_frac * 100:.2f}% weight overhead")
+thr = Thresholds(high=2e6, low=-2e6)
+decision = adjust(graph, pool, seg.split, nb_pred_bps=1e6,
+                  nb_real_bps=10e6, thr=thr)   # predictor says: dropping!
+print(f"bandwidth 10->1 MB/s predicted: move split {seg.split} -> "
+      f"{decision.split} ({decision.reason})")
+
+# --- 4. real split execution on a reduced model -------------------------------
+small = get_config("llama3.2-3b").reduced().replace(n_layers=8)
+model = build(small)
+params = model.init(jax.random.PRNGKey(0))
+executor = LMSplitExecutor(small, SplitPlan(pool_start=3, pool_end=6,
+                                            use_codec=True))
+tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 17), 0,
+                            small.vocab_size)
+for split in (3, 4, 5):
+    logits, payload = executor.run(params, tokens, split)
+    print(f"split={split}: edge->cloud payload "
+          f"{payload_bytes(payload) / 1e3:.1f} KB, "
+          f"logits {tuple(logits.shape)}")
+print("OK")

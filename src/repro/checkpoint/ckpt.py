@@ -1,0 +1,160 @@
+"""Sharded checkpointing: atomic, retention-managed, async, restartable.
+
+Layout: ``<dir>/step_<N>/arrays.npz`` + ``meta.json``.  Leaves are saved
+host-gathered (this container is single-host; the per-leaf key scheme
+``a/b/c`` maps 1:1 onto a tensorstore/GCS layout for the multi-host case —
+swap ``_write_arrays`` to write one file per shard).  Writes go to a temp
+dir + atomic rename, so a crash mid-save never corrupts the latest
+checkpoint; ``AsyncCheckpointer`` overlaps serialisation with training.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Tree = Any
+
+
+def _flatten(tree: Tree, prefix: str = "") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+        return out
+    out[prefix[:-1] if prefix.endswith("/") else prefix] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> Tree:
+    root: Dict = {}
+    for key, v in flat.items():
+        parts = key.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return root
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Tree,
+                    extra: Optional[Dict] = None, keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(jax.tree_util.tree_map(np.asarray, tree))
+    # npz can't round-trip ml_dtypes (bf16 etc.) — store raw bytes + dtype
+    enc, dtypes = {}, {}
+    for k, v in flat.items():
+        if v.dtype.str not in _NATIVE:
+            dtypes[k] = str(v.dtype)
+            v = v.view(np.uint8)
+        enc[k] = v
+    np.savez(os.path.join(tmp, "arrays.npz"), **enc)
+    meta = {"step": step, "time": time.time(), "extra": extra or {},
+            "n_arrays": len(flat), "dtypes": dtypes}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _apply_retention(ckpt_dir, keep)
+    return final
+
+
+def _apply_retention(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_"):
+            try:
+                out.append(int(name.split("_", 1)[1]))
+            except ValueError:
+                pass
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+_NATIVE = {np.dtype(t).str for t in
+           ("float64", "float32", "float16", "int64", "int32", "int16",
+            "int8", "uint8", "uint16", "uint32", "uint64", "bool")}
+
+
+def load_checkpoint(ckpt_dir: str, step: Optional[int] = None
+                    ) -> Tuple[int, Tree, Dict]:
+    import ml_dtypes
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    dtypes = meta.get("dtypes", {})
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {}
+        for k in z.files:
+            v = z[k]
+            if k in dtypes:
+                v = v.view(np.dtype(getattr(ml_dtypes, dtypes[k])))
+            flat[k] = v
+    return step, _unflatten(flat), meta.get("extra", {})
+
+
+def restore_into(tree_like: Tree, loaded: Tree) -> Tree:
+    """Cast/shape-check loaded numpy arrays onto an existing tree structure
+    (e.g. re-device_put with the right shardings)."""
+    import jax.numpy as jnp
+
+    def one(ref, val):
+        assert ref.shape == val.shape, (ref.shape, val.shape)
+        return jnp.asarray(val, dtype=ref.dtype)
+
+    return jax.tree_util.tree_map(one, tree_like, loaded)
+
+
+class AsyncCheckpointer:
+    """Background-thread writer; at most one save in flight."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+
+    def save(self, step: int, tree: Tree, extra: Optional[Dict] = None):
+        self.wait()
+        # materialise on host *before* handing to the thread so the trainer
+        # can donate/overwrite device buffers immediately
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+
+        def _run():
+            self.last_path = save_checkpoint(self.ckpt_dir, step, host_tree,
+                                             extra, self.keep)
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,40 @@
+"""RoboECC core — the paper's contribution.
+
+* structure.py    — Eq. 1 structure model (flattened layer graphs)
+* hardware.py     — Eq. 2 hardware roofline model (Table I + TPU v5e)
+* segmentation.py — Alg. 1 optimal split search
+* predictor.py    — LSTM bandwidth predictor (Eq. 3 granularity check)
+* pool.py         — parameter-sharing pool
+* adjustment.py   — ΔNB / T_high / T_low fine-grained adjustment
+* network.py      — bandwidth trace simulator
+* controller.py   — end-to-end RoboECC controller
+"""
+from .adjustment import AdjustmentDecision, Thresholds, adjust, \
+    calibrate_thresholds
+from .controller import RoboECC, TickResult
+from .hardware import (A100, DEVICES, ORIN, THOR, TPU_V5E, DeviceSpec,
+                       RooflineTerms, fit_eta, layer_latency, roofline,
+                       stack_latency)
+from .network import NetworkSim, TraceConfig, generate_trace
+from .pool import Pool, build_pool, pool_transfer_profile
+from .predictor import (Predictor, PredictorConfig, check_granularity,
+                        lstm_forward, train_predictor)
+from .segmentation import (SegmentationResult, cut_bytes, evaluate_split,
+                           exhaustive_best, fixed_split, search)
+from .structure import LayerCost, Workload, build_graph, total_flops, \
+    total_weight_bytes
+
+__all__ = [
+    "AdjustmentDecision", "Thresholds", "adjust", "calibrate_thresholds",
+    "RoboECC", "TickResult",
+    "A100", "DEVICES", "ORIN", "THOR", "TPU_V5E", "DeviceSpec",
+    "RooflineTerms", "fit_eta", "layer_latency", "roofline", "stack_latency",
+    "NetworkSim", "TraceConfig", "generate_trace",
+    "Pool", "build_pool", "pool_transfer_profile",
+    "Predictor", "PredictorConfig", "check_granularity", "lstm_forward",
+    "train_predictor",
+    "SegmentationResult", "cut_bytes", "evaluate_split", "exhaustive_best",
+    "fixed_split", "search",
+    "LayerCost", "Workload", "build_graph", "total_flops",
+    "total_weight_bytes",
+]

@@ -1,0 +1,76 @@
+"""Network-aware fine-grained segmentation adjustment — paper §IV-B-3.
+
+``ΔNB = NB_pred(t+1) − NB_real(t)``.  If ``ΔNB > T_high`` (bandwidth will
+rise) move the split to the pool layer with the **maximum** transfer volume
+(exploit the link); if ``ΔNB < T_low`` (bandwidth will drop) move to the
+**minimum**-transfer layer (hide the bad link); otherwise keep the current
+split.  Compute-load deltas inside the pool are ignored (paper: "impacts on
+both sides are negligible").
+
+Threshold calibration follows the paper §V-C-2: ``T_high`` starts at the
+maximum historical ``ΔNB``; ``T_low`` is then grid-searched on a validation
+trace; ``T_high`` is re-searched afterwards (Fig. 7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from .pool import Pool
+from .segmentation import cut_bytes
+from .structure import LayerCost
+
+
+@dataclasses.dataclass
+class Thresholds:
+    high: float                  # bytes/s
+    low: float
+
+
+@dataclasses.dataclass
+class AdjustmentDecision:
+    split: int
+    moved: bool
+    reason: str                  # "up" | "down" | "hold"
+    delta_nb: float
+
+
+def adjust(graph: Sequence[LayerCost], pool: Pool, current_split: int,
+           nb_pred_bps: float, nb_real_bps: float, thr: Thresholds
+           ) -> AdjustmentDecision:
+    delta = nb_pred_bps - nb_real_bps
+    splits = list(pool.splits())
+    volumes = [cut_bytes(graph, s) for s in splits]
+    if delta > thr.high:
+        s = splits[int(np.argmax(volumes))]
+        return AdjustmentDecision(s, s != current_split, "up", delta)
+    if delta < thr.low:
+        s = splits[int(np.argmin(volumes))]
+        return AdjustmentDecision(s, s != current_split, "down", delta)
+    return AdjustmentDecision(current_split, False, "hold", delta)
+
+
+def calibrate_thresholds(
+        deltas: np.ndarray,
+        eval_fn: Callable[[Thresholds], float],
+        n_grid: int = 9) -> Thresholds:
+    """Paper §V-C-2 procedure. ``eval_fn`` returns avg latency for a
+    candidate threshold pair on a validation trace (lower is better)."""
+    t_high = float(np.max(deltas))
+    lows = np.quantile(deltas[deltas < 0], np.linspace(0.05, 0.95, n_grid)) \
+        if np.any(deltas < 0) else np.array([-1.0])
+    best_low, best = None, None
+    for tl in lows:
+        lat = eval_fn(Thresholds(t_high, float(tl)))
+        if best is None or lat < best:
+            best, best_low = lat, float(tl)
+    highs = np.quantile(deltas[deltas > 0], np.linspace(0.05, 0.95, n_grid)) \
+        if np.any(deltas > 0) else np.array([t_high])
+    best_high = t_high
+    for th in highs:
+        lat = eval_fn(Thresholds(float(th), best_low))
+        if lat < best:
+            best, best_high = lat, float(th)
+    return Thresholds(best_high, best_low)

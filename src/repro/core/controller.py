@@ -1,0 +1,127 @@
+"""RoboECC end-to-end controller (paper Fig. 1c / Fig. 4).
+
+Pipeline:
+  1. structure model (Eq. 1)  ->  flattened layer graph
+  2. hardware model (Eq. 2)   ->  per-layer edge/cloud latencies
+  3. Alg. 1                   ->  optimal split under the cloud budget
+  4. parameter-sharing pool   ->  movable region around the split
+  5. LSTM predictor + ΔNB thresholds -> per-tick fine-grained adjustment
+
+``tick()`` advances one control step against a NetworkSim and returns the
+latency decomposition for that inference — this drives the paper-table
+benchmarks and the serving examples.  ``adjust_overhead_s`` is the *measured
+wall time* of the adjustment decision on this host (paper §V-C-1 reports
+10.7 ms on their hosts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .adjustment import AdjustmentDecision, Thresholds, adjust
+from .hardware import DeviceSpec, layer_latency
+from .network import NetworkSim
+from .pool import Pool, build_pool
+from .predictor import Predictor, PredictorConfig, train_predictor
+from .segmentation import SegmentationResult, cut_bytes, evaluate_split, search
+from .structure import LayerCost, Workload, build_graph
+
+
+@dataclasses.dataclass
+class TickResult:
+    split: int
+    edge_s: float
+    cloud_s: float
+    net_s: float
+    total_s: float
+    decision: Optional[AdjustmentDecision]
+    adjust_overhead_s: float
+    bw_real_bps: float
+    bw_pred_bps: float
+
+
+class RoboECC:
+    def __init__(self, cfg: ModelConfig, edge: DeviceSpec, cloud: DeviceSpec,
+                 *, workload: Workload = Workload(),
+                 cloud_budget_bytes: Optional[float] = None,
+                 pool_overhead_target: float = 0.026,
+                 nominal_bw_bps: float = 10e6,
+                 thresholds: Optional[Thresholds] = None,
+                 use_codec: bool = False):
+        self.cfg = cfg
+        self.edge_dev, self.cloud_dev = edge, cloud
+        self.workload = workload
+        self.use_codec = use_codec
+        self.graph: List[LayerCost] = build_graph(cfg, workload)
+        self.cloud_budget_bytes = cloud_budget_bytes
+        self.seg: SegmentationResult = search(
+            self.graph, edge, cloud, nominal_bw_bps,
+            cloud_budget_bytes=cloud_budget_bytes,
+            input_bytes=workload.input_bytes)
+        self.pool: Pool = build_pool(self.graph, self.seg.split,
+                                     pool_overhead_target)
+        self.split = self.seg.split
+        self.thresholds = thresholds or Thresholds(high=2e6, low=-2e6)
+        self.predictor: Optional[Predictor] = None
+
+    # ------------------------------------------------------------- predictor
+    def fit_predictor(self, historical_bps: np.ndarray,
+                      pcfg: PredictorConfig = PredictorConfig(),
+                      seed: int = 0) -> None:
+        self.predictor, _ = train_predictor(historical_bps, pcfg, seed)
+
+    # ------------------------------------------------------------- laten cies
+    def latency_at(self, split: int, bw_bps: float, rtt_s: float = 0.0):
+        e, c, t = evaluate_split(self.graph, split, self.edge_dev,
+                                 self.cloud_dev, bw_bps, rtt_s=rtt_s,
+                                 input_bytes=self.workload.input_bytes)
+        if self.use_codec and 0 < split < len(self.graph):
+            wire = cut_bytes(self.graph, split)
+            # int8 codec: 2 bytes -> 1 byte + 1/32 scale overhead
+            t = (wire * (0.5 + 1 / 32.0)) / bw_bps + rtt_s
+        return e, c, t
+
+    # ------------------------------------------------------------------ tick
+    def tick(self, net: NetworkSim, adjust_enabled: bool = True) -> TickResult:
+        bw_real = net.now_bps
+        decision = None
+        bw_pred = bw_real
+        t0 = time.perf_counter()
+        if adjust_enabled and self.predictor is not None:
+            window = net.window(self.predictor.cfg.window)
+            bw_pred = self.predictor.predict(window)
+            decision = adjust(self.graph, self.pool, self.split, bw_pred,
+                              bw_real, self.thresholds)
+            self.split = decision.split
+        overhead = time.perf_counter() - t0
+        # the *next* tick's bandwidth is what the transfer actually sees
+        net.step()
+        bw_serve = net.now_bps
+        e, c, t = self.latency_at(self.split, bw_serve, net.rtt_s)
+        return TickResult(split=self.split, edge_s=e, cloud_s=c, net_s=t,
+                          total_s=e + c + t + (overhead if adjust_enabled else 0.0),
+                          decision=decision, adjust_overhead_s=overhead,
+                          bw_real_bps=bw_real, bw_pred_bps=bw_pred)
+
+    # ------------------------------------------------------------ elasticity
+    def replan(self, *, edge: Optional[DeviceSpec] = None,
+               cloud: Optional[DeviceSpec] = None,
+               cloud_budget_bytes: Optional[float] = None,
+               nominal_bw_bps: float = 10e6) -> SegmentationResult:
+        """Elastic re-planning after a tier change (device loss/join):
+        re-run Alg. 1 with the surviving device set.  Losing the edge tier
+        degenerates to cloud-only (split=0) — the paper's baseline."""
+        if edge is not None:
+            self.edge_dev = edge
+        if cloud is not None:
+            self.cloud_dev = cloud
+        self.seg = search(self.graph, self.edge_dev, self.cloud_dev,
+                          nominal_bw_bps, cloud_budget_bytes=cloud_budget_bytes,
+                          input_bytes=self.workload.input_bytes)
+        self.pool = build_pool(self.graph, self.seg.split)
+        self.split = self.seg.split
+        return self.seg

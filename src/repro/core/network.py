@@ -1,0 +1,79 @@
+"""Network bandwidth simulation (paper §III-B setting).
+
+A Markov-modulated bandwidth process with AR(1) noise, diurnal drift and
+random congestion spikes — the "internet bandwidth fluctuations" RoboECC
+must adapt to.  Traces are seeded + reproducible; units are BYTES/s.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TraceConfig:
+    mean_bps: float = 10e6          # 10 MB/s (paper Fig. 3 "good" regime)
+    bad_bps: float = 1e6            # 1 MB/s (paper Fig. 3 degraded regime)
+    p_degrade: float = 0.02         # per-step regime transitions
+    p_recover: float = 0.15
+    ar_rho: float = 0.9             # AR(1) smoothness
+    ar_sigma: float = 0.08          # relative noise
+    spike_prob: float = 0.01        # sudden congestion dips
+    spike_depth: float = 0.25
+    diurnal_amp: float = 0.15
+    diurnal_period: int = 2_000
+    floor_bps: float = 0.05e6
+
+
+def generate_trace(n_steps: int, cfg: TraceConfig = TraceConfig(),
+                   seed: int = 0) -> np.ndarray:
+    """Bandwidth (bytes/s) at each control-loop tick."""
+    rng = np.random.default_rng(seed)
+    bw = np.empty(n_steps)
+    regime_bad = False
+    x = 0.0                         # AR(1) log-noise
+    for t in range(n_steps):
+        if regime_bad:
+            regime_bad = rng.random() >= cfg.p_recover
+        else:
+            regime_bad = rng.random() < cfg.p_degrade
+        base = cfg.bad_bps if regime_bad else cfg.mean_bps
+        x = cfg.ar_rho * x + rng.normal(0.0, cfg.ar_sigma)
+        diurnal = 1.0 + cfg.diurnal_amp * np.sin(
+            2 * np.pi * t / cfg.diurnal_period)
+        v = base * np.exp(x) * diurnal
+        if rng.random() < cfg.spike_prob:
+            v *= cfg.spike_depth
+        bw[t] = max(v, cfg.floor_bps)
+    return bw
+
+
+class NetworkSim:
+    """Replays a trace; answers transfer-time queries at the current tick."""
+
+    def __init__(self, trace: np.ndarray, tick_s: float = 0.05,
+                 rtt_s: float = 0.005):
+        self.trace = np.asarray(trace, dtype=np.float64)
+        self.tick_s = tick_s
+        self.rtt_s = rtt_s
+        self.t = 0
+
+    @property
+    def now_bps(self) -> float:
+        return float(self.trace[min(self.t, len(self.trace) - 1)])
+
+    def transfer_s(self, n_bytes: float) -> float:
+        return n_bytes / self.now_bps + self.rtt_s
+
+    def step(self, n: int = 1) -> None:
+        self.t += n
+
+    def window(self, n: int) -> np.ndarray:
+        """Last n observed bandwidth samples (for the predictor)."""
+        lo = max(0, self.t - n)
+        w = self.trace[lo:self.t]
+        if len(w) < n:
+            w = np.concatenate([np.full(n - len(w), self.trace[0]), w])
+        return w

@@ -1,0 +1,119 @@
+"""Optimal model segmentation — paper Alg. 1.
+
+Split semantics: split index ``S`` means layers ``[0, S)`` run on the edge
+and ``[S, n)`` on the cloud; the cut activation is the output of layer
+``S-1`` (for ``S=0``, the raw model input is shipped — cloud-only; for
+``S=n`` nothing is shipped — edge-only).
+
+The search walks from the last layer towards the front (paper: "start from
+the last layer and identify the optimal segmentation point within the
+allowable cloud-side load range"), i.e. it grows the cloud set until the
+cloud load budget ``B_cloud`` is exhausted, tracking the latency-optimal
+feasible split.  All inputs come from the analytic structure+hardware
+models, so the search itself costs microseconds (paper §IV-A-3: "extremely
+low computational load ... negligible overhead").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from .hardware import DeviceSpec, layer_latency
+from .structure import LayerCost
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentationResult:
+    split: int
+    total_s: float
+    edge_s: float
+    cloud_s: float
+    net_s: float
+    cloud_load_bytes: float
+    edge_load_bytes: float
+    feasible: List[int]          # splits satisfying the budget
+    latencies: List[float]       # total latency per candidate split index
+
+
+def cut_bytes(graph: Sequence[LayerCost], split: int,
+              input_bytes: float = 0.0) -> float:
+    """Wire bytes at split S (output activation of layer S-1)."""
+    if split == 0:
+        return input_bytes
+    if split >= len(graph):
+        return 0.0
+    return graph[split - 1].out_transfer_bytes
+
+
+def evaluate_split(graph: Sequence[LayerCost], split: int,
+                   edge: DeviceSpec, cloud: DeviceSpec,
+                   bandwidth_bps: float, *, rtt_s: float = 0.0,
+                   input_bytes: float = 0.0):
+    edge_s = sum(layer_latency(c, edge) for c in graph[:split])
+    cloud_s = sum(layer_latency(c, cloud) for c in graph[split:])
+    wire = cut_bytes(graph, split, input_bytes)
+    # bandwidth in BYTES/s throughout the repo
+    net_s = (wire / bandwidth_bps + rtt_s) if wire else 0.0
+    return edge_s, cloud_s, net_s
+
+
+def search(graph: Sequence[LayerCost], edge: DeviceSpec, cloud: DeviceSpec,
+           bandwidth_bps: float, cloud_budget_bytes: Optional[float] = None,
+           *, rtt_s: float = 0.0, input_bytes: float = 0.0
+           ) -> SegmentationResult:
+    """Alg. 1: scan S from n (edge-only) towards 0 while the cloud-side load
+    fits the budget; keep the latency-optimal feasible split."""
+    n = len(graph)
+    budget = cloud_budget_bytes if cloud_budget_bytes is not None else float("inf")
+    feasible: List[int] = []
+    latencies: List[float] = []
+    best = None
+    cloud_load = 0.0
+    for s in range(n, -1, -1):          # S = n, n-1, ..., 0
+        if s < n:
+            cloud_load += graph[s].weight_bytes
+        if cloud_load > budget:
+            break                        # paper line 4: budget exhausted
+        e, c, t = evaluate_split(graph, s, edge, cloud, bandwidth_bps,
+                                 rtt_s=rtt_s, input_bytes=input_bytes)
+        total = e + c + t
+        feasible.append(s)
+        latencies.append(total)
+        if best is None or total < best[1]:
+            best = (s, total, e, c, t, cloud_load)
+    assert best is not None, "no feasible split (budget < 0?)"
+    s, total, e, c, t, load = best
+    edge_load = sum(g.weight_bytes for g in graph[:s])
+    return SegmentationResult(split=s, total_s=total, edge_s=e, cloud_s=c,
+                              net_s=t, cloud_load_bytes=load,
+                              edge_load_bytes=edge_load,
+                              feasible=feasible, latencies=latencies)
+
+
+def exhaustive_best(graph: Sequence[LayerCost], edge: DeviceSpec,
+                    cloud: DeviceSpec, bandwidth_bps: float,
+                    cloud_budget_bytes: Optional[float] = None,
+                    **kw) -> int:
+    """Brute-force argmin over feasible splits (property-test oracle)."""
+    n = len(graph)
+    budget = cloud_budget_bytes if cloud_budget_bytes is not None else float("inf")
+    best_s, best_t = None, None
+    for s in range(n + 1):
+        load = sum(c.weight_bytes for c in graph[s:])
+        if load > budget:
+            continue
+        e, c, t = evaluate_split(graph, s, edge, cloud, bandwidth_bps, **kw)
+        if best_t is None or e + c + t < best_t:
+            best_s, best_t = s, e + c + t
+    return best_s
+
+
+def fixed_split(graph: Sequence[LayerCost]) -> int:
+    """Baseline: ~50/50 weight split (paper's "Fixed Seg")."""
+    total = sum(c.weight_bytes for c in graph)
+    acc = 0.0
+    for i, c in enumerate(graph):
+        acc += c.weight_bytes
+        if acc >= total / 2:
+            return i + 1
+    return len(graph) // 2

@@ -1,0 +1,100 @@
+"""Synthetic data pipeline: deterministic, per-host sharded, restartable.
+
+Produces LM token streams (Zipf-ish unigram + short-range repetition so the
+~100M-param training example shows a real falling loss curve), VLA
+trajectories, and bandwidth traces for the predictor.  A production swap-in
+would replace ``_synth_tokens`` with a tokenized shard reader; the iterator
+contract (``state`` -> resumable) is what the checkpointing relies on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    family: str = "dense"          # which batch keys to emit
+    d_model: int = 0               # frames/vision stub width
+    n_vision_tokens: int = 0
+    n_patches: int = 0
+    vit_dim: int = 0
+    action_dim: int = 7
+    action_horizon: int = 16
+
+
+class SyntheticStream:
+    """Deterministic, seekable batch stream (step index = state)."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self.step = 0
+
+    # ------------------------------------------------------------ checkpoint
+    def state(self) -> Dict:
+        return {"step": self.step}
+
+    def restore(self, state: Dict) -> None:
+        self.step = int(state["step"])
+
+    # ------------------------------------------------------------- batches
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng((self.cfg.seed, step))
+
+    def _synth_tokens(self, rng, B, S, V) -> np.ndarray:
+        # Zipf unigram + copy structure: second half repeats the first.
+        base = rng.zipf(1.3, size=(B, S)) % V
+        half = S // 2
+        base[:, half:half * 2] = base[:, :half]
+        return base.astype(np.int32)
+
+    def next(self) -> Dict[str, np.ndarray]:
+        c = self.cfg
+        rng = self._rng(self.step)
+        self.step += 1
+        toks = self._synth_tokens(rng, c.global_batch, c.seq_len + 1,
+                                  c.vocab_size)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if c.family == "audio":
+            batch["frames"] = rng.standard_normal(
+                (c.global_batch, c.seq_len, c.d_model)).astype(np.float32)
+        if c.family == "vlm":
+            batch["vision"] = rng.standard_normal(
+                (c.global_batch, c.n_vision_tokens, c.d_model)
+            ).astype(np.float32)
+        if c.family == "vla":
+            batch = {
+                "patches": rng.standard_normal(
+                    (c.global_batch, c.n_patches, c.vit_dim)
+                ).astype(np.float32),
+                "tokens": batch["tokens"][:, :64],
+                "actions": rng.uniform(
+                    -1, 1, (c.global_batch, c.action_horizon, c.action_dim)
+                ).astype(np.float32),
+            }
+        return batch
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.next()
+
+
+def shard_batch(batch: Dict, mesh, rules) -> Dict:
+    """Host numpy batch -> globally-sharded jax arrays."""
+    import jax
+    from jax.sharding import NamedSharding
+    from ..models.sharding import resolve
+    out = {}
+    for k, v in batch.items():
+        axes = ("batch",) + (None,) * (v.ndim - 1)
+        if k in ("tokens", "labels"):
+            axes = ("batch", "seq")
+        sh = NamedSharding(mesh, resolve(axes, rules))
+        out[k] = jax.device_put(v, sh)
+    return out

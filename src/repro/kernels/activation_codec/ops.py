@@ -1,0 +1,42 @@
+"""jit'd public wrappers for the activation codec.
+
+``impl``: "jnp" (XLA everywhere), "pallas" (TPU target), "interpret"
+(Pallas body executed in Python — CPU validation).  Arbitrary-rank inputs
+are flattened to (rows, D).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block"))
+def quantize(x: jax.Array, impl: str = "jnp", block: int = ref.BLOCK
+             ) -> Tuple[jax.Array, jax.Array]:
+    shape = x.shape
+    D = shape[-1]
+    if impl == "jnp" or block != ref.BLOCK:
+        return ref.quantize_int8(x, block)
+    rows = x.size // D
+    x2 = x.reshape(rows, D)
+    q, s = kernel.quantize_int8_pallas(x2, interpret=(impl == "interpret"))
+    return q.reshape(shape), s.reshape(*shape[:-1], D // block)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block", "dtype"))
+def dequantize(q: jax.Array, s: jax.Array, dtype=jnp.bfloat16,
+               impl: str = "jnp", block: int = ref.BLOCK) -> jax.Array:
+    shape = q.shape
+    D = shape[-1]
+    if impl == "jnp" or block != ref.BLOCK:
+        return ref.dequantize_int8(q, s, dtype, block)
+    rows = q.size // D
+    out = kernel.dequantize_int8_pallas(
+        q.reshape(rows, D), s.reshape(rows, D // block), dtype,
+        interpret=(impl == "interpret"))
+    return out.reshape(shape)

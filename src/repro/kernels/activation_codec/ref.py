@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the activation codec (int8 per-row-block quantisation).
+
+RoboECC ships the cut-layer activation over the edge-cloud network; this
+codec shrinks it 2x (bf16->int8) with per-(row, 128-col-block) scales.  The
+oracle defines the exact semantics the Pallas kernel must match.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+def quantize_int8(x: jnp.ndarray, block: int = BLOCK
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (..., D) with D % block == 0 -> (int8 (..., D), f32 scales (..., D/block))."""
+    *lead, D = x.shape
+    assert D % block == 0, (D, block)
+    xb = x.astype(jnp.float32).reshape(*lead, D // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(*lead, D), scale[..., 0]
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.bfloat16,
+                    block: int = BLOCK) -> jnp.ndarray:
+    *lead, D = q.shape
+    xb = q.reshape(*lead, D // block, block).astype(jnp.float32)
+    out = xb * scale[..., None]
+    return out.reshape(*lead, D).astype(dtype)
+
+
+def wire_bytes(shape, block: int = BLOCK) -> int:
+    """Bytes on the network for a quantised activation of `shape`."""
+    n = 1
+    for d in shape:
+        n *= d
+    return n + (n // block) * 4

@@ -1,0 +1,99 @@
+"""Pallas TPU flash-decode: one query token vs a long KV cache.
+
+Grid ``(B*H, T/BK)``; the K-block axis is innermost/sequential, carrying the
+online-softmax state in VMEM scratch.  The live cache length arrives via
+scalar prefetch (``PrefetchScalarGridSpec``) so the same compiled kernel
+serves every decode position — blocks entirely past ``kv_len`` are skipped
+with ``pl.when`` (no HBM reads for dead cache: at 32k context and 128-deep
+blocks that's the difference between reading the whole cache and reading
+only the live prefix).  GQA via head->kv-head index mapping, same as the
+prefill kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BK = 256
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, bk: int, nk: int):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[0]
+    k_lo = ik * bk
+
+    @pl.when(k_lo < kv_len)
+    def _compute():
+        q = q_ref[0]                                    # (1, D)
+        k = k_ref[0]                                    # (BK, D)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (1, BK)
+        ki = k_lo + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(ki < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(m_new <= NEG_INF / 2, 0.0, jnp.exp(s - m_new))
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            kv_len: jax.Array, *, bk: int = DEFAULT_BK,
+                            interpret: bool = False) -> jax.Array:
+    """q: (BH, 1, D); k, v: (BKV, T, D); kv_len: int32 scalar (traced OK)."""
+    BH, _, D = q.shape
+    BKV, T, _ = k.shape
+    assert BH % BKV == 0
+    group = BH // BKV
+    bk = min(bk, T)
+    assert T % bk == 0
+    nk = T // bk
+    kernel = functools.partial(_kernel, scale=D ** -0.5, bk=bk, nk=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BH, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda bh, ik, len_ref: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, D),
+                         lambda bh, ik, len_ref, _g=group: (bh // _g, ik, 0)),
+            pl.BlockSpec((1, bk, D),
+                         lambda bh, ik, len_ref, _g=group: (bh // _g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda bh, ik, len_ref: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, 1, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(kv_len, jnp.int32).reshape(1), q, k, v)

@@ -1,0 +1,28 @@
+"""jit'd wrapper for flash-decode; runtime layout (B,KV,T,D) caches."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "bk"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len, impl: str = "pallas",
+                     bk: int = kernel.DEFAULT_BK) -> jax.Array:
+    """q: (B, 1, H, D) or (B, H, D); k, v: (B, KV, T, D) -> (B, 1, H, D)."""
+    if q.ndim == 4:
+        q = q[:, 0]
+    B, H, D = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    if impl == "jnp":
+        return ref.decode_attention(q, k, v, kv_len)
+    qf = q.reshape(B * H, 1, D)
+    kf = k.reshape(B * KV, T, D)
+    vf = v.reshape(B * KV, T, D)
+    of = kernel.decode_attention_pallas(qf, kf, vf, kv_len, bk=bk,
+                                        interpret=(impl == "interpret"))
+    return of.reshape(B, H, D)[:, None]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for single-token GQA decode attention with length mask."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     kv_len: int) -> jnp.ndarray:
+    """q: (B, H, D); k, v: (B, KV, T, D); positions >= kv_len are masked.
+
+    Returns (B, 1, H, D) — matching the serve-step layout.
+    """
+    B, H, D = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    if KV != H:
+        g = H // KV
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhd,bhtd->bht", q, k,
+                        preferred_element_type=jnp.float32) * (D ** -0.5)
+    mask = jnp.arange(T)[None, None, :] < kv_len
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bht,bhtd->bhd", w, v)
+    return out[:, None]

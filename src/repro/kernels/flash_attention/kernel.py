@@ -1,0 +1,109 @@
+"""Pallas TPU flash attention (prefill, causal, GQA by index-mapped KV).
+
+Classic online-softmax blocking: grid ``(B*H, S/BQ, T/BK)``; the innermost
+(k-block) axis runs sequentially on TPU, carrying (m, l, acc) in VMEM
+scratch.  GQA needs no KV repeat — the K/V BlockSpec index maps head
+``h -> h // group`` so each KV head's tile is fetched once per group from
+HBM.  Block shapes default to (128, 128): MXU-aligned, and the working set
+(q 128xD + k/v 128xD + acc 128xD fp32) stays a few hundred KB in VMEM for
+D <= 256.  Causal masking skips fully-masked K blocks via ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, bq: int, bk: int, nk: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = iq * bq
+    k_lo = ik * bk
+
+    def _compute():
+        q = q_ref[0]                       # (BQ, D)
+        k = k_ref[0]                       # (BK, D)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (BQ, BK)
+        if causal:
+            qi = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            ki = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qi >= ki, s, NEG_INF)
+        m_prev = m_ref[...]                # (BQ, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # rows with no valid key yet (m_new == -inf) must contribute 0
+        p = jnp.where(m_new <= NEG_INF / 2, 0.0, jnp.exp(s - m_new))
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip K blocks strictly above the diagonal
+        pl.when(k_lo <= q_lo + bq - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, bq: int = DEFAULT_BQ,
+                           bk: int = DEFAULT_BK,
+                           interpret: bool = False) -> jax.Array:
+    """q: (BH, S, D); k, v: (BKV, T, D) with BH % BKV == 0 (GQA groups)."""
+    BH, S, D = q.shape
+    BKV, T, _ = k.shape
+    assert BH % BKV == 0
+    group = BH // BKV
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
+    nq, nk = S // bq, T // bk
+    grid = (BH, nq, nk)
+    kernel = functools.partial(_kernel, scale=D ** -0.5, causal=causal,
+                               bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, D),
+                         lambda bh, iq, ik, _g=group: (bh // _g, ik, 0)),
+            pl.BlockSpec((1, bk, D),
+                         lambda bh, iq, ik, _g=group: (bh // _g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,28 @@
+"""jit'd wrapper: (B,S,H,D)/(B,T,KV,D) layout -> flash attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "impl", "bq", "bk"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, impl: str = "pallas",
+                    bq: int = kernel.DEFAULT_BQ,
+                    bk: int = kernel.DEFAULT_BK) -> jax.Array:
+    """q: (B, S, H, D); k, v: (B, T, KV, D) -> (B, S, H, D)."""
+    if impl == "jnp":
+        return ref.attention(q, k, v, causal=causal)
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, T, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, T, D)
+    of = kernel.flash_attention_pallas(qf, kf, vf, causal=causal, bq=bq,
+                                       bk=bk,
+                                       interpret=(impl == "interpret"))
+    return of.reshape(B, H, S, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for causal flash attention (GQA-aware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True) -> jnp.ndarray:
+    """q: (B, S, H, D); k, v: (B, T, KV, D). fp32 softmax, GQA by repeat."""
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    if KV != H:
+        g = H // KV
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    logits = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * (D ** -0.5)
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", w, v)

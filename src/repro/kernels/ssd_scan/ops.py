@@ -1,0 +1,40 @@
+"""jit'd wrapper matching the model layout (B, T, H, P)."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, *, chunk: int, impl: str = "pallas"
+             ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,T,H,P); dt: (B,T,H); A: (H,); Bm/Cm: (B,T,N).
+
+    Returns (y (B,T,H,P), final state (B,H,N,P)) — same contract as
+    models.ssm.ssd_chunked.
+    """
+    if impl == "jnp":
+        return ref.ssd(x, dt, A, Bm, Cm, chunk)
+    B, T, H, P = x.shape
+    pad = (-T) % chunk if T > chunk else (chunk - T if T < chunk else 0)
+    if T < chunk:
+        chunk = T
+        pad = 0
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, Tp, P)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, Tp)
+    y, s = kernel.ssd_scan_pallas(xf, dtf, A, Bm, Cm, chunk=chunk,
+                                  interpret=(impl == "interpret"))
+    y = y.reshape(B, H, Tp, P).transpose(0, 2, 1, 3)[:, :T]
+    return y, s.reshape(B, H, *s.shape[1:])

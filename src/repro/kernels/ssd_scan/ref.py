@@ -1,0 +1,14 @@
+"""Oracle for the SSD scan kernel: the model's own chunked-jnp implementation."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from ...models.ssm import ssd_chunked
+
+
+def ssd(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, Bm: jnp.ndarray,
+        Cm: jnp.ndarray, chunk: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,T,H,P); dt: (B,T,H); A: (H,); Bm/Cm: (B,T,N)."""
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk)

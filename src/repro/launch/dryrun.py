@@ -1,0 +1,367 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the
+first two lines below force 512 host placeholder devices BEFORE jax
+initialises.  Nothing else in the repo sets this flag.
+
+Per cell this driver:
+  1. builds the unrolled-layers model (exact HLO costs — DESIGN.md §6),
+  2. lowers the right step (train_step / prefill / serve_step) with full
+     in/out shardings on the production mesh,
+  3. ``.compile()``s it (the SPMD partitioner must succeed — this is the
+     multi-pod runnability proof),
+  4. records memory_analysis / cost_analysis / parsed collective schedule /
+     roofline terms into a JSON artifact under benchmarks/artifacts/dryrun/.
+"""
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ASSIGNED, get_config, get_shape, shape_applicable, SHAPES
+from ..core.hardware import TPU_V5E, roofline
+from ..models import build
+from ..models.sharding import make_rules, shape_tree, sharding_tree, use_mesh
+from ..train.optimizer import OptConfig, opt_state_specs, zero_rules
+from ..train.train_loop import TrainState, make_train_step
+from .hlo_analysis import parse_collectives, summarize
+from .mesh import make_production_mesh
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "../../../benchmarks/artifacts/dryrun")
+
+
+def _sharded_bytes(specs, mesh, rules) -> float:
+    """Per-device bytes of a ParamSpec tree under the given rules."""
+    from ..models.sharding import is_spec, resolve
+    import numpy as _np
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 0.0
+    for s in jax.tree_util.tree_leaves(specs, is_leaf=is_spec):
+        n = float(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+        pspec = resolve(s.axes, rules)
+        denom = 1
+        for entry in pspec:
+            if entry is None:
+                continue
+            for ax in ((entry,) if isinstance(entry, str) else entry):
+                denom *= sizes.get(ax, 1)
+        total += n / denom
+    return total
+
+
+def analytic_residency(model, cfg, shape, mesh, rules) -> Dict:
+    """TPU-expected per-device residency (bf16 semantics).
+
+    The CPU backend float-normalises bf16 dots to f32 and its thunk
+    scheduler is not memory-minimising, so `memory_analysis()` temp sizes
+    over-report vs the TPU target (EXPERIMENTS.md §Dry-run discusses the
+    delta); this analytic model is the fits-in-HBM estimate.
+    """
+    from ..train.optimizer import opt_state_specs, zero_rules
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_shards = 1
+    br = rules.get("batch")
+    for ax in ((br,) if isinstance(br, str) else (br or ())):
+        batch_shards *= sizes.get(ax, 1)
+    model_shards = sizes.get("model", 1)
+    B_loc = max(shape.global_batch // batch_shards, 1)
+    d = cfg.d_model or cfg.vit_dim
+    S = shape.seq_len
+    out = {"params": _sharded_bytes(model.param_specs, mesh, rules)}
+    if shape.kind == "train":
+        # deployable config: 8-way gradient-accumulation microbatching
+        # (per-step flops/collectives identical; the dry-run lowers the
+        # single-macrobatch form for exact HLO cost accounting, DESIGN §6)
+        n_micro = 8
+        B_mb = max(B_loc // n_micro, 1)
+        ospecs = opt_state_specs(model.param_specs, mesh, rules, zero1=True)
+        zr = zero_rules(rules, mesh)
+        out["adam_moments"] = 2 * _sharded_bytes(ospecs, mesh, zr)
+        out["grads"] = out["params"] * 2          # f32 accumulation buffer
+        act_mult = (1 + cfg.ssm_expand) if cfg.family in ("ssm", "hybrid") \
+            else 1
+        out["remat_activations"] = cfg.n_layers * B_mb * S * d * 2 * act_mult
+        out["logits_shard"] = B_mb * S * max(cfg.vocab_size, 1) * 2 \
+            / model_shards
+        out["working_set"] = 4 * B_mb * S * d * 2
+    elif shape.kind == "prefill":
+        cspecs = model.cache_specs(shape.global_batch, S, src_len=S)
+        out["kv_cache"] = _sharded_bytes(cspecs, mesh, rules)
+        out["working_set"] = 6 * B_loc * S * d * 2
+    else:
+        cspecs = model.cache_specs(shape.global_batch, S, src_len=S)
+        out["kv_cache"] = _sharded_bytes(cspecs, mesh, rules)
+        out["working_set"] = 8 * B_loc * 1 * d * 2 + B_loc * S * 4
+    out["total"] = sum(v for v in out.values())
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (train) / 2·N·D (inference); N_active for MoE."""
+    n = cfg.n_params()
+    if cfg.n_experts:
+        expert = 3 * cfg.d_model * cfg.moe_d_ff
+        n_moe_layers = cfg.n_layers - cfg.first_dense_layers
+        n -= n_moe_layers * (cfg.n_experts - cfg.moe_top_k) * expert
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # one token per request
+
+
+def _cell(arch: str, shape_name: str, multi_pod: bool,
+          opt_overrides: Optional[Dict] = None, *, strategy: str = "tp",
+          decode_attn: str = "tp", tp_collective: str = "ar",
+          scan_layers: bool = False) -> Dict:
+    shape = get_shape(shape_name)
+    cfg = get_config(arch).replace(scan_layers=scan_layers,
+                                   decode_attn=decode_attn,
+                                   tp_collective=tp_collective)
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    rules = make_rules(cfg, mesh, shape.kind, strategy=strategy)
+    if tp_collective == "int8_ring":
+        rules["__tp_int8__"] = True
+    model = build(cfg)
+    opt_overrides = opt_overrides or {}
+
+    t0 = time.time()
+    with use_mesh(mesh, rules):
+        if shape.kind == "train":
+            lowered = _lower_train(model, cfg, shape, mesh, rules,
+                                   **opt_overrides)
+        elif shape.kind == "prefill":
+            lowered = _lower_prefill(model, cfg, shape, mesh, rules)
+        else:
+            lowered = _lower_decode(model, cfg, shape, mesh, rules)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    coll_sum = summarize(colls)
+
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    wire_dev = float(coll_sum["total_wire_bytes_per_device"])
+    wire16_dev = float(coll_sum["total_wire_bytes_bf16_per_device"])
+    terms = roofline(flops_dev * n_dev, bytes_dev * n_dev, wire16_dev * n_dev,
+                     n_dev, TPU_V5E)
+    mf = model_flops(cfg, shape)
+    residency = analytic_residency(model, cfg, shape, mesh, rules)
+
+    out = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "analytic_residency_per_device": residency,
+        "per_device": {
+            "hlo_flops": flops_dev,
+            "hlo_bytes": bytes_dev,
+            "collective_wire_bytes": wire_dev,
+            "collective_wire_bytes_bf16": wire16_dev,
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_hbm_bytes": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "global": {
+            "hlo_flops": flops_dev * n_dev,
+            "hlo_bytes": bytes_dev * n_dev,
+            "collective_wire_bytes": wire_dev * n_dev,
+            "collective_wire_bytes_bf16": wire16_dev * n_dev,
+        },
+        "roofline": {
+            "compute_s": terms.compute_s,
+            "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "dominant": terms.dominant,
+            "bound_s": terms.bound_s,
+        },
+        "model_flops": mf,
+        "useful_flops_ratio": mf / (flops_dev * n_dev)
+        if flops_dev else 0.0,
+        "collectives": coll_sum,
+    }
+    return out
+
+
+# ------------------------------------------------------------------ lowering
+def _key_struct():
+    k = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    return jax.ShapeDtypeStruct(k.shape, k.dtype)
+
+
+def _lower_train(model, cfg, shape, mesh, rules, n_microbatches: int = 1,
+                 grad_compression=None):
+    pspecs = model.param_specs
+    p_shapes = shape_tree(pspecs)
+    p_shard = sharding_tree(pspecs, mesh, rules)
+    ospecs = opt_state_specs(pspecs, mesh, rules, zero1=True)
+    zrules = zero_rules(rules, mesh)
+    o_shapes = shape_tree(ospecs)
+    o_shard = sharding_tree(ospecs, mesh, zrules)
+    in_specs = model.input_specs(shape)
+    b_shapes = shape_tree(in_specs)
+    b_shard = sharding_tree(in_specs, mesh, rules)
+
+    state_shapes = TrainState(jax.ShapeDtypeStruct((), jnp.int32),
+                              p_shapes, o_shapes,
+                              jax.tree_util.tree_map(lambda x: x, o_shapes))
+    repl = NamedSharding(mesh, P())
+    state_shard = TrainState(repl, p_shard, o_shard,
+                             jax.tree_util.tree_map(lambda x: x, o_shard))
+
+    step = make_train_step(model, OptConfig(),
+                           n_microbatches=n_microbatches,
+                           grad_compression=grad_compression)
+    metrics_shard = {"loss": repl, "grad_norm": repl, "step": repl}
+    fn = jax.jit(step,
+                 in_shardings=(state_shard, b_shard, repl),
+                 out_shardings=(state_shard, metrics_shard),
+                 donate_argnums=(0,))
+    return fn.lower(state_shapes, b_shapes, _key_struct())
+
+
+def _lower_prefill(model, cfg, shape, mesh, rules):
+    pspecs = model.param_specs
+    p_shapes = shape_tree(pspecs)
+    p_shard = sharding_tree(pspecs, mesh, rules)
+    in_specs = model.input_specs(shape)
+    b_shapes = shape_tree(in_specs)
+    b_shard = sharding_tree(in_specs, mesh, rules)
+    fn = jax.jit(lambda p, b: model.prefill(p, b),
+                 in_shardings=(p_shard, b_shard))
+    return fn.lower(p_shapes, b_shapes)
+
+
+def _lower_decode(model, cfg, shape, mesh, rules):
+    pspecs = model.param_specs
+    p_shapes = shape_tree(pspecs)
+    p_shard = sharding_tree(pspecs, mesh, rules)
+    cspecs = model.cache_specs(shape.global_batch, shape.seq_len,
+                               src_len=shape.seq_len)
+    c_shapes = shape_tree(cspecs)
+    c_shard = sharding_tree(cspecs, mesh, rules)
+    in_specs = model.input_specs(shape)
+    b_shapes = shape_tree(in_specs)
+    b_shard = sharding_tree(in_specs, mesh, rules)
+    repl = NamedSharding(mesh, P())
+    fn = jax.jit(lambda p, c, t, pos: model.decode(p, c, t, pos),
+                 in_shardings=(p_shard, c_shard, b_shard["tokens"], repl),
+                 donate_argnums=(1,))
+    return fn.lower(p_shapes, c_shapes, b_shapes["tokens"],
+                    jax.ShapeDtypeStruct((), jnp.int32))
+
+
+# ------------------------------------------------------------------ driver
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (assigned pool)")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="",
+                    help="artifact suffix for experiment variants")
+    ap.add_argument("--grad-compression", default=None)
+    ap.add_argument("--strategy", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--decode-attn", default="tp", choices=["tp", "sp"])
+    ap.add_argument("--tp-collective", default="ar",
+                    choices=["ar", "int8_ring"])
+    ap.add_argument("--scan-layers", action="store_true",
+                    help="scan layer stacks (fast compiles; collective "
+                         "costs via while-body trip multiplier)")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED) if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                tag = f"__{args.tag}" if args.tag else ""
+                fname = f"{arch}__{shape}__{mesh_name}{tag}.json".replace(
+                    "/", "_")
+                path = os.path.join(args.out, fname)
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status") != "error":
+                        print(f"[skip-cached] {fname}")
+                        continue
+                    print(f"[retry-error] {fname}")
+                print(f"[run] {arch} x {shape} x {mesh_name}", flush=True)
+                try:
+                    opt = {"n_microbatches": args.microbatches,
+                           "grad_compression": args.grad_compression}
+                    res = _cell(arch, shape, multi, opt,
+                                strategy=args.strategy,
+                                decode_attn=args.decode_attn,
+                                tp_collective=args.tp_collective,
+                                scan_layers=args.scan_layers)
+                except Exception as e:  # noqa: BLE001 - record failures
+                    res = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": str(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                results.append(res)
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    r = res["roofline"]
+                    extra = (f" dom={r['dominant']}"
+                             f" comp={r['compute_s']*1e3:.2f}ms"
+                             f" mem={r['memory_s']*1e3:.2f}ms"
+                             f" coll={r['collective_s']*1e3:.2f}ms"
+                             f" peak={res['per_device']['peak_hbm_bytes']/2**30:.2f}GiB"
+                             f" est={res['analytic_residency_per_device']['total']/2**30:.2f}GiB"
+                             f" compile={res['compile_s']:.0f}s")
+                elif status == "error":
+                    extra = " " + res["error"][:200]
+                print(f"[{status}] {arch} x {shape} x {mesh_name}{extra}",
+                      flush=True)
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

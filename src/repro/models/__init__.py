@@ -1,0 +1,7 @@
+"""Model zoo substrate: layers, attention, MoE, SSM, assemblies per family."""
+from .model import Model, build
+from .sharding import (ParamSpec, init_params, make_rules, shape_tree,
+                       sharding_tree, shard, spec, use_mesh)
+
+__all__ = ["Model", "build", "ParamSpec", "init_params", "make_rules",
+           "shape_tree", "sharding_tree", "shard", "spec", "use_mesh"]

@@ -1,0 +1,154 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+Audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings ``(B, S_src, d_model)``; a single learned
+projection marks the frontend boundary.  Decoder = causal self-attn +
+cross-attn + MLP.  Decode caches: per-layer self KV + precomputed cross KV.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from .layers import embed, embed_spec, linear_spec, mlp, mlp_specs, rmsnorm, \
+    rmsnorm_spec, softmax_xent, unembed
+from .sharding import spec
+from .transformer import run_stack, run_stack_decode, _layer_slice
+
+
+def enc_block_specs(cfg, layers):
+    return {
+        "ln1": rmsnorm_spec(cfg.d_model, layers),
+        "attn": A.attn_specs(cfg, layers),
+        "ln2": rmsnorm_spec(cfg.d_model, layers),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff, layers),
+    }
+
+
+def dec_block_specs(cfg, layers):
+    return {
+        "ln1": rmsnorm_spec(cfg.d_model, layers),
+        "self_attn": A.attn_specs(cfg, layers),
+        "lnx": rmsnorm_spec(cfg.d_model, layers),
+        "cross_attn": A.attn_specs(cfg, layers, cross=True),
+        "ln2": rmsnorm_spec(cfg.d_model, layers),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff, layers),
+    }
+
+
+def encdec_specs(cfg) -> Dict:
+    d = cfg.d_model
+    s = {
+        "frontend_proj": linear_spec(d, d, ("d_model", None)),
+        "enc_blocks": enc_block_specs(cfg, cfg.n_enc_layers),
+        "enc_norm": rmsnorm_spec(d),
+        "embed": embed_spec(cfg.vocab_size, d),
+        "dec_blocks": dec_block_specs(cfg, cfg.n_dec_layers),
+        "final_norm": rmsnorm_spec(d),
+    }
+    if not cfg.tie_embeddings:
+        s["head"] = embed_spec(cfg.vocab_size, d)
+    return s
+
+
+def encode(cfg, params, frames: jax.Array, *, remat: bool):
+    """frames: (B, S_src, d_model) stub embeddings -> encoder output."""
+    x = jnp.einsum("...d,df->...f", frames.astype(jnp.dtype(cfg.dtype)),
+                   params["frontend_proj"])
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def one(pl, h):
+        a = A.attn_forward(cfg, pl["attn"], rmsnorm(h, pl["ln1"], cfg.norm_eps),
+                           positions, causal=False)
+        h = h + a
+        h = h + mlp(pl["mlp"], rmsnorm(h, pl["ln2"], cfg.norm_eps))
+        return h, None, jnp.float32(0)
+
+    x, _, _ = run_stack(cfg, params["enc_blocks"], x, one, cfg.n_enc_layers,
+                        remat=remat)
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(cfg, pl, h, positions, enc_out=None, cross_kv=None,
+               return_kv=False):
+    a = A.attn_forward(cfg, pl["self_attn"], rmsnorm(h, pl["ln1"], cfg.norm_eps),
+                       positions, causal=True, return_kv=return_kv)
+    a, kv = a if return_kv else (a, None)
+    h = h + a
+    c, ckv = A.cross_attn_forward(cfg, pl["cross_attn"],
+                                  rmsnorm(h, pl["lnx"], cfg.norm_eps),
+                                  kv_x=enc_out, kv_cache=cross_kv)
+    h = h + c
+    h = h + mlp(pl["mlp"], rmsnorm(h, pl["ln2"], cfg.norm_eps))
+    return h, kv, ckv
+
+
+def encdec_loss(cfg, params, frames, tokens, labels) -> jax.Array:
+    enc_out = encode(cfg, params, frames, remat=cfg.remat)
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(tokens.shape[1])
+
+    def one(pl, h):
+        h, _, _ = _dec_block(cfg, pl, h, positions, enc_out=enc_out)
+        return h, None, jnp.float32(0)
+
+    x, _, _ = run_stack(cfg, params["dec_blocks"], x, one, cfg.n_dec_layers,
+                        remat=cfg.remat)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    return softmax_xent(unembed(w, x, cfg.vocab_size), labels)
+
+
+def encdec_prefill(cfg, params, frames, tokens):
+    """Encode src + teacher-force `tokens` prefix; return (logits, caches)."""
+    enc_out = encode(cfg, params, frames, remat=False)
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(tokens.shape[1])
+
+    def one(pl, h):
+        h, kv, ckv = _dec_block(cfg, pl, h, positions, enc_out=enc_out,
+                                return_kv=True)
+        return h, {"self": kv, "cross": ckv}, jnp.float32(0)
+
+    x, caches, _ = run_stack(cfg, params["dec_blocks"], x, one,
+                             cfg.n_dec_layers, remat=False, collect=True)
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    return unembed(w, x, cfg.vocab_size), caches
+
+
+def encdec_decode(cfg, params, caches, tokens, pos):
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+
+    def dec(pl, h, c):
+        a, kv = A.attn_decode(cfg, pl["self_attn"],
+                              rmsnorm(h, pl["ln1"], cfg.norm_eps), pos,
+                              c["self"])
+        h = h + a
+        cr, _ = A.cross_attn_forward(cfg, pl["cross_attn"],
+                                     rmsnorm(h, pl["lnx"], cfg.norm_eps),
+                                     kv_cache=c["cross"])
+        h = h + cr
+        h = h + mlp(pl["mlp"], rmsnorm(h, pl["ln2"], cfg.norm_eps))
+        return h, {"self": kv, "cross": c["cross"]}
+
+    x, caches = run_stack_decode(cfg, params["dec_blocks"], caches, x, dec,
+                                 cfg.n_dec_layers)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    return unembed(w, x, cfg.vocab_size), caches
+
+
+def encdec_cache_specs(cfg, batch: int, max_len: int, src_len: int) -> Dict:
+    L = cfg.n_dec_layers
+    self_kv = A.kv_cache_specs(cfg, batch, max_len)
+    cross_kv = A.kv_cache_specs(cfg, batch, src_len)
+    stack = lambda tree: jax.tree_util.tree_map(
+        lambda s: spec((L,) + s.shape, ("layers",) + s.axes, dtype=s.dtype,
+                       init="zeros"),
+        tree, is_leaf=lambda v: hasattr(v, "axes"))
+    return {"self": stack(self_kv), "cross": stack(cross_kv)}

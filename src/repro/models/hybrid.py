@@ -1,0 +1,153 @@
+"""Hybrid SSM + shared-attention backbone (zamba2-1.2b).
+
+38 Mamba2 blocks; ONE shared transformer block (attn + MLP, weights shared)
+is invoked before every ``cfg.shared_attn_every``-th Mamba block.  Each
+invocation *site* keeps its own KV cache (same weights, different
+activations) — an extreme in-model analogue of the paper's parameter-sharing
+pool (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from .layers import embed, embed_spec, mlp, mlp_specs, rmsnorm, rmsnorm_spec, \
+    softmax_xent, unembed
+from .sharding import spec
+from .ssm import (mamba_decode, mamba_forward, mamba_prefill, mamba_specs,
+                  ssm_state_specs)
+from .transformer import run_stack, run_stack_decode, _layer_slice
+
+
+def n_sites(cfg) -> int:
+    return math.ceil(cfg.n_layers / cfg.shared_attn_every)
+
+
+def hybrid_specs(cfg) -> Dict:
+    d = cfg.d_model
+    s = {
+        "embed": embed_spec(cfg.vocab_size, d),
+        "mamba": mamba_specs(cfg, cfg.n_layers),
+        "shared": {  # ONE block, reused at every site
+            "ln1": rmsnorm_spec(d),
+            "attn": A.attn_specs(cfg),
+            "ln2": rmsnorm_spec(d),
+            "mlp": mlp_specs(d, cfg.d_ff),
+        },
+        "final_norm": rmsnorm_spec(d),
+    }
+    if not cfg.tie_embeddings:
+        s["head"] = embed_spec(cfg.vocab_size, d)
+    return s
+
+
+def _shared_fwd(cfg, p, x, positions, return_kv=False):
+    a = A.attn_forward(cfg, p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+                       positions, causal=True, return_kv=return_kv)
+    a, kv = a if return_kv else (a, None)
+    x = x + a
+    x = x + mlp(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps))
+    return (x, kv) if return_kv else x
+
+
+def _groups(cfg):
+    """[(site_idx, layer_lo, layer_hi)] — shared block fires before layer_lo."""
+    k = cfg.shared_attn_every
+    return [(g, g * k, min((g + 1) * k, cfg.n_layers))
+            for g in range(n_sites(cfg))]
+
+
+def hybrid_hidden(cfg, params, tokens, *, remat):
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(tokens.shape[1])
+    for g, lo, hi in _groups(cfg):
+        x = _shared_fwd(cfg, params["shared"], x, positions)
+        grp = jax.tree_util.tree_map(lambda w: w[lo:hi], params["mamba"])
+
+        def one(pl, h):
+            return h + mamba_forward(cfg, pl, h), None, jnp.float32(0)
+
+        x, _, _ = run_stack(cfg, grp, x, one, hi - lo, remat=remat)
+    return x
+
+
+def hybrid_loss(cfg, params, tokens, labels) -> jax.Array:
+    x = hybrid_hidden(cfg, params, tokens, remat=cfg.remat)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    return softmax_xent(unembed(w, x, cfg.vocab_size), labels)
+
+
+def hybrid_prefill(cfg, params, tokens):
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(tokens.shape[1])
+    attn_caches, ssm_states = [], []
+    for g, lo, hi in _groups(cfg):
+        x, kv = _shared_fwd(cfg, params["shared"], x, positions,
+                            return_kv=True)
+        attn_caches.append(kv)
+        grp = jax.tree_util.tree_map(lambda w: w[lo:hi], params["mamba"])
+
+        def one(pl, h):
+            out, st = mamba_prefill(cfg, pl, h)
+            return h + out, st, jnp.float32(0)
+
+        x, states, _ = run_stack(cfg, grp, x, one, hi - lo, remat=False,
+                                 collect=True)
+        ssm_states.append(states)
+    caches = {
+        "attn": jax.tree_util.tree_map(lambda *l: jnp.stack(l), *attn_caches),
+        "ssm": jax.tree_util.tree_map(lambda *l: jnp.concatenate(l),
+                                      *ssm_states),
+    }
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    return unembed(w, x, cfg.vocab_size), caches
+
+
+def hybrid_decode(cfg, params, caches, tokens, pos):
+    caches = dict(caches)
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    new_attn = []
+    for g, lo, hi in _groups(cfg):
+        site_kv = _layer_slice(caches["attn"], g)
+        h = rmsnorm(x, params["shared"]["ln1"], cfg.norm_eps)
+        a, site_kv = A.attn_decode(cfg, params["shared"]["attn"], h, pos,
+                                   site_kv)
+        x = x + a
+        x = x + mlp(params["shared"]["mlp"],
+                    rmsnorm(x, params["shared"]["ln2"], cfg.norm_eps))
+        new_attn.append(site_kv)
+        grp = jax.tree_util.tree_map(lambda w: w[lo:hi], params["mamba"])
+        sgrp = jax.tree_util.tree_map(lambda w: w[lo:hi], caches["ssm"])
+
+        def dec(pl, h_, st):
+            out, st = mamba_decode(cfg, pl, h_, st)
+            return h_ + out, st
+
+        x, nst = run_stack_decode(cfg, grp, sgrp, x, dec, hi - lo)
+        caches["ssm"] = jax.tree_util.tree_map(
+            lambda full, new, _lo=lo: jax.lax.dynamic_update_slice(
+                full, new, (_lo,) + (0,) * (full.ndim - 1)),
+            caches["ssm"], nst)
+    caches["attn"] = jax.tree_util.tree_map(lambda *l: jnp.stack(l), *new_attn)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    return unembed(w, x, cfg.vocab_size), caches
+
+
+def hybrid_cache_specs(cfg, batch: int, max_len: int) -> Dict:
+    ns = n_sites(cfg)
+    per_attn = A.kv_cache_specs(cfg, batch, max_len)
+    stack = lambda tree, n: jax.tree_util.tree_map(
+        lambda s: spec((n,) + s.shape, ("layers",) + s.axes, dtype=s.dtype,
+                       init="zeros"),
+        tree, is_leaf=lambda v: hasattr(v, "axes"))
+    return {
+        "attn": stack(per_attn, ns),
+        "ssm": stack(ssm_state_specs(cfg, batch), cfg.n_layers),
+    }

@@ -1,0 +1,240 @@
+"""Uniform model API over all families.
+
+``build(cfg)`` returns a :class:`Model` exposing
+
+* ``param_specs``               — ParamSpec tree (shapes + logical axes)
+* ``init(key)``                 — random params
+* ``loss_fn(params, batch, key)``        — training loss (scalar)
+* ``prefill(params, batch)``    — (last-logits, cache)
+* ``decode(params, cache, tokens, pos)`` — one serve step
+* ``cache_specs(batch, max_len)``        — decode-cache ParamSpec tree
+* ``input_specs(shape)``        — dry-run input ParamSpec dict per ShapeConfig
+
+Inputs/caches are ParamSpec trees too, so the dry-run derives
+ShapeDtypeStructs + NamedShardings from one source of truth
+(``sharding.shape_tree`` / ``sharding.sharding_tree``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import encdec as E
+from . import hybrid as H
+from . import ssm as S
+from . import transformer as T
+from . import vla as V
+from . import vlm as VL
+from .sharding import init_params, spec
+
+Tree = Any
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    param_specs: Tree
+    loss_fn: Callable
+    prefill: Callable
+    decode: Callable
+    cache_specs: Callable
+    input_specs: Callable
+    forward: Optional[Callable] = None   # VLA: action inference
+
+    def init(self, key: jax.Array) -> Tree:
+        return init_params(self.param_specs, key)
+
+
+def _tok_specs(shape: ShapeConfig, with_labels: bool) -> Dict:
+    B, Ssz = shape.global_batch, shape.seq_len
+    out = {"tokens": spec((B, Ssz), ("batch", "seq"), dtype=jnp.int32,
+                          init="zeros")}
+    if with_labels:
+        out["labels"] = spec((B, Ssz), ("batch", "seq"), dtype=jnp.int32,
+                             init="zeros")
+    return out
+
+
+def build(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+
+    # ---------------------------------------------------------------- dense/moe
+    if fam in ("dense", "moe"):
+        def loss_fn(params, batch, key=None):
+            return T.lm_loss(cfg, params, batch["tokens"], batch["labels"])
+
+        def prefill(params, batch):
+            return T.lm_prefill(cfg, params, batch["tokens"])
+
+        def decode(params, cache, tokens, pos):
+            return T.lm_decode(cfg, params, cache, tokens, pos)
+
+        def cache_specs(batch, max_len, **_):
+            return T.lm_cache_specs(cfg, batch, max_len)
+
+        def input_specs(shape: ShapeConfig):
+            if shape.kind == "train":
+                return _tok_specs(shape, True)
+            if shape.kind == "prefill":
+                return _tok_specs(shape, False)
+            return {"tokens": spec((shape.global_batch, 1), ("batch", "seq"),
+                                   dtype=jnp.int32, init="zeros")}
+
+        return Model(cfg, T.lm_specs(cfg), loss_fn, prefill, decode,
+                     cache_specs, input_specs)
+
+    # ---------------------------------------------------------------- ssm
+    if fam == "ssm":
+        def loss_fn(params, batch, key=None):
+            return S.ssm_lm_loss(cfg, params, batch["tokens"], batch["labels"])
+
+        def prefill(params, batch):
+            return S.ssm_lm_prefill(cfg, params, batch["tokens"])
+
+        def decode(params, cache, tokens, pos):
+            return S.ssm_lm_decode(cfg, params, cache, tokens, pos)
+
+        def cache_specs(batch, max_len=0, **_):
+            return S.ssm_lm_cache_specs(cfg, batch)
+
+        def input_specs(shape: ShapeConfig):
+            if shape.kind == "train":
+                return _tok_specs(shape, True)
+            if shape.kind == "prefill":
+                return _tok_specs(shape, False)
+            return {"tokens": spec((shape.global_batch, 1), ("batch", "seq"),
+                                   dtype=jnp.int32, init="zeros")}
+
+        return Model(cfg, S.ssm_lm_specs(cfg), loss_fn, prefill, decode,
+                     cache_specs, input_specs)
+
+    # ---------------------------------------------------------------- hybrid
+    if fam == "hybrid":
+        def loss_fn(params, batch, key=None):
+            return H.hybrid_loss(cfg, params, batch["tokens"], batch["labels"])
+
+        def prefill(params, batch):
+            return H.hybrid_prefill(cfg, params, batch["tokens"])
+
+        def decode(params, cache, tokens, pos):
+            return H.hybrid_decode(cfg, params, cache, tokens, pos)
+
+        def cache_specs(batch, max_len, **_):
+            return H.hybrid_cache_specs(cfg, batch, max_len)
+
+        def input_specs(shape: ShapeConfig):
+            if shape.kind == "train":
+                return _tok_specs(shape, True)
+            if shape.kind == "prefill":
+                return _tok_specs(shape, False)
+            return {"tokens": spec((shape.global_batch, 1), ("batch", "seq"),
+                                   dtype=jnp.int32, init="zeros")}
+
+        return Model(cfg, H.hybrid_specs(cfg), loss_fn, prefill, decode,
+                     cache_specs, input_specs)
+
+    # ---------------------------------------------------------------- audio
+    if fam == "audio":
+        def loss_fn(params, batch, key=None):
+            return E.encdec_loss(cfg, params, batch["frames"],
+                                 batch["tokens"], batch["labels"])
+
+        def prefill(params, batch):
+            return E.encdec_prefill(cfg, params, batch["frames"],
+                                    batch["tokens"])
+
+        def decode(params, cache, tokens, pos):
+            return E.encdec_decode(cfg, params, cache, tokens, pos)
+
+        def cache_specs(batch, max_len, src_len=None, **_):
+            return E.encdec_cache_specs(cfg, batch, max_len,
+                                        src_len or max_len)
+
+        def input_specs(shape: ShapeConfig):
+            B, Ssz = shape.global_batch, shape.seq_len
+            frames = spec((B, Ssz, cfg.d_model), ("batch", "seq", None),
+                          init="zeros")
+            if shape.kind == "train":
+                return {"frames": frames, **_tok_specs(shape, True)}
+            if shape.kind == "prefill":
+                # encode S_src frames + BOS teacher-forcing token
+                return {"frames": frames,
+                        "tokens": spec((B, 1), ("batch", "seq"),
+                                       dtype=jnp.int32, init="zeros")}
+            return {"tokens": spec((B, 1), ("batch", "seq"),
+                                   dtype=jnp.int32, init="zeros")}
+
+        return Model(cfg, E.encdec_specs(cfg), loss_fn, prefill, decode,
+                     cache_specs, input_specs)
+
+    # ---------------------------------------------------------------- vlm
+    if fam == "vlm":
+        def loss_fn(params, batch, key=None):
+            return VL.vlm_loss(cfg, params, batch["tokens"], batch["vision"],
+                               batch["labels"])
+
+        def prefill(params, batch):
+            return VL.vlm_prefill(cfg, params, batch["tokens"],
+                                  batch["vision"])
+
+        def decode(params, cache, tokens, pos):
+            return VL.vlm_decode(cfg, params, cache, tokens, pos)
+
+        def cache_specs(batch, max_len, **_):
+            return VL.vlm_cache_specs(cfg, batch, max_len)
+
+        def input_specs(shape: ShapeConfig):
+            B = shape.global_batch
+            vis = spec((B, cfg.n_vision_tokens, cfg.d_model),
+                       ("batch", None, None), init="zeros")
+            if shape.kind == "train":
+                return {"vision": vis, **_tok_specs(shape, True)}
+            if shape.kind == "prefill":
+                return {"vision": vis, **_tok_specs(shape, False)}
+            return {"tokens": spec((B, 1), ("batch", "seq"),
+                                   dtype=jnp.int32, init="zeros")}
+
+        return Model(cfg, VL.vlm_specs(cfg), loss_fn, prefill, decode,
+                     cache_specs, input_specs)
+
+    # ---------------------------------------------------------------- vla
+    if fam == "vla":
+        def loss_fn(params, batch, key):
+            return V.vla_loss(cfg, params, batch["patches"], batch["tokens"],
+                              batch["actions"], key)
+
+        def forward(params, batch, key=None):
+            return V.vla_forward(cfg, params, batch["patches"],
+                                 batch["tokens"], key)
+
+        def prefill(params, batch):
+            raise NotImplementedError("VLA serves whole requests; use forward")
+
+        def decode(params, cache, tokens, pos):
+            raise NotImplementedError("VLA serves whole requests; use forward")
+
+        def cache_specs(batch, max_len, **_):
+            return {}
+
+        def input_specs(shape: ShapeConfig):
+            B = shape.global_batch
+            out = {
+                "patches": spec((B, cfg.n_patches, cfg.vit_dim),
+                                ("batch", None, None), init="zeros"),
+                "tokens": spec((B, 64), ("batch", "seq"), dtype=jnp.int32,
+                               init="zeros"),
+            }
+            if shape.kind == "train":
+                out["actions"] = spec(
+                    (B, cfg.action_horizon, cfg.action_dim),
+                    ("batch", None, None), dtype=jnp.float32, init="zeros")
+            return out
+
+        return Model(cfg, V.vla_specs(cfg), loss_fn, prefill, decode,
+                     cache_specs, input_specs, forward=forward)
+
+    raise ValueError(f"unknown family {fam!r}")

@@ -1,0 +1,322 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked prefill + O(1) decode.
+
+Layout/sharding: the inner dim ``d_inner = expand * d_model`` (and therefore
+the SSD head dim) shards on ``model``; the B/C projections (state dim N,
+shared across heads, n_groups=1) are small and stay replicated.  The chunked
+SSD materialises per-chunk (Q, Q, H) decay-masked scores — with H sharded on
+``model`` and batch on ``data`` this stays a few hundred MB/device at the
+assigned shapes (see DESIGN.md §5).
+
+``ssd_chunked`` is the pure-jnp implementation that doubles as the oracle for
+the ``kernels/ssd_scan`` Pallas kernel.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import linear_spec, rmsnorm, rmsnorm_spec
+from .sharding import shard, spec
+
+
+# ------------------------------------------------------------------ specs
+def mamba_specs(cfg, layers: Optional[int] = None) -> Dict:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H, W = cfg.ssm_nheads, cfg.ssm_conv
+    L = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+    return {
+        "norm": rmsnorm_spec(d, layers),
+        "wz": linear_spec(d, di, ("d_model", "inner"), layers),
+        "wx": linear_spec(d, di, ("d_model", "inner"), layers),
+        "wB": linear_spec(d, N, ("d_model", None), layers),
+        "wC": linear_spec(d, N, ("d_model", None), layers),
+        "wdt": linear_spec(d, H, ("d_model", "inner"), layers),
+        "dt_bias": spec(L + (H,), lax_ + ("inner",), init="zeros"),
+        "A_log": spec(L + (H,), lax_ + ("inner",), init="zeros"),
+        "D": spec(L + (H,), lax_ + ("inner",), init="ones"),
+        "conv_x": spec(L + (W, di), lax_ + (None, "inner"), scale=0.5),
+        "conv_B": spec(L + (W, N), lax_ + (None, None), scale=0.5),
+        "conv_C": spec(L + (W, N), lax_ + (None, None), scale=0.5),
+        "gate_norm": spec(L + (di,), lax_ + ("inner",), init="ones"),
+        "wo": linear_spec(di, d, ("inner", "d_model"), layers),
+    }
+
+
+def ssm_state_specs(cfg, batch: int) -> Dict:
+    """Decode-time recurrent state (per layer)."""
+    di, N = cfg.d_inner, cfg.ssm_state
+    H, P, W = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_conv
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ssd": spec((batch, H, N, P), ("batch", "act_inner", None, None),
+                    dtype=jnp.float32, init="zeros"),
+        "conv_x": spec((batch, W - 1, di), ("batch", None, "act_inner"),
+                       dtype=dt, init="zeros"),
+        "conv_B": spec((batch, W - 1, N), ("batch", None, None), dtype=dt,
+                       init="zeros"),
+        "conv_C": spec((batch, W - 1, N), ("batch", None, None), dtype=dt,
+                       init="zeros"),
+    }
+
+
+# ------------------------------------------------------------------ helpers
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B,T,C); w: (W,C). Depthwise causal conv, silu activation."""
+    W = w.shape[0]
+    T = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + T] * w[i] for i in range(W))
+    return jax.nn.silu(y)
+
+
+def _conv_step(x: jax.Array, w: jax.Array, cache: jax.Array):
+    """x: (B,C); cache: (B,W-1,C). Returns (y (B,C), new cache)."""
+    W = w.shape[0]
+    y = x * w[-1] + sum(cache[:, i] * w[i] for i in range(W - 1))
+    new = jnp.concatenate([cache[:, 1:], x[:, None]], axis=1)
+    return jax.nn.silu(y), new
+
+
+# ------------------------------------------------------------------ SSD core
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array,
+                Bm: jax.Array, Cm: jax.Array, chunk: int,
+                initial_state: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD forward.
+
+    x:  (B, T, H, P)   inputs (already includes dt weighting? no — raw)
+    dt: (B, T, H)      positive step sizes
+    A:  (H,)           negative decay rates
+    Bm: (B, T, N), Cm: (B, T, N)  (n_groups=1, shared across heads)
+    Returns (y (B,T,H,P), final_state (B,H,N,P)).
+    """
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    pad = (-T) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // Q
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    dA = dtc * A.astype(jnp.float32)                       # (B,nc,Q,H) <= 0
+    dA_cs = jnp.cumsum(dA, axis=2)                          # inclusive cumsum
+    xdt = xc * dtc[..., None].astype(xc.dtype)
+
+    # ---- intra-chunk (quadratic within chunk, decay-masked)
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]  # (B,nc,Q,K,H)
+    ii = jnp.arange(Q)
+    causal = ii[:, None] >= ii[None, :]
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc,
+                    preferred_element_type=jnp.float32)
+    scores = (CB[..., None] * L).astype(xc.dtype)           # (B,nc,Q,K,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", scores, xdt)
+
+    # ---- chunk states
+    decay_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)        # (B,nc,Q,H)
+    wgt = xdt * decay_end[..., None].astype(xc.dtype)
+    S_c = jnp.einsum("bckn,bckhp->bchnp", Bc, wgt,
+                     preferred_element_type=jnp.float32)    # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])               # (B,nc,H)
+
+    # ---- inter-chunk recurrence
+    S0 = (initial_state if initial_state is not None
+          else jnp.zeros((Bsz, H, N, P), jnp.float32))
+
+    def step(S, inp):
+        S_chunk, dec = inp                                   # (B,H,N,P),(B,H)
+        S_in = S
+        S = S * dec[:, :, None, None] + S_chunk
+        return S, S_in
+
+    S_final, S_ins = jax.lax.scan(
+        step, S0, (S_c.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    S_ins = S_ins.swapaxes(0, 1)                             # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqn,bchnp->bcqhp", Cc,
+                         S_ins.astype(xc.dtype))
+    y_inter = y_inter * jnp.exp(dA_cs)[..., None].astype(xc.dtype)
+    y = (y_intra + y_inter).reshape(Bsz, Tp, H, P)
+    return y[:, :T], S_final
+
+
+def ssd_step(S: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array,
+             Bm: jax.Array, Cm: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single recurrent step. S:(B,H,N,P) x:(B,H,P) dt:(B,H) Bm/Cm:(B,N)."""
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A.astype(jnp.float32))                # (B,H)
+    upd = jnp.einsum("bn,bhp->bhnp", Bm.astype(jnp.float32),
+                     (x * dt[..., None]).astype(jnp.float32))
+    S = S * dA[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), S)
+    return y.astype(x.dtype), S
+
+
+# ------------------------------------------------------------------ block
+def _proj(cfg, p, u):
+    """Shared input projections + activations for prefill and decode."""
+    z = jnp.einsum("...d,df->...f", u, p["wz"])
+    xi = jnp.einsum("...d,df->...f", u, p["wx"])
+    Bm = jnp.einsum("...d,dn->...n", u, p["wB"])
+    Cm = jnp.einsum("...d,dn->...n", u, p["wC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("...d,dh->...h", u, p["wdt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    return z, xi, Bm, Cm, dt
+
+
+def mamba_forward(cfg, p: Dict, x: jax.Array, *, impl: Optional[str] = None):
+    """Full-sequence Mamba2 block (pre-norm, residual outside)."""
+    B, T, d = x.shape
+    H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    u = rmsnorm(x, p["norm"], cfg.norm_eps)
+    z, xi, Bm, Cm, dt = _proj(cfg, p, u)
+    xi = shard(xi, "batch", "seq", "act_inner")
+    xi = _causal_conv(xi, p["conv_x"])
+    Bm = _causal_conv(Bm, p["conv_B"])
+    Cm = _causal_conv(Cm, p["conv_C"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xi.reshape(B, T, H, P)
+    impl = impl or cfg.attn_impl
+    if impl == "pallas":
+        from ..kernels.ssd_scan import ops as ssd_ops
+        y, S = ssd_ops.ssd_scan(xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+    else:
+        y, S = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + xh * p["D"].astype(xh.dtype)[:, None]
+    y = y.reshape(B, T, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["gate_norm"], cfg.norm_eps)
+    y = shard(y, "batch", "seq", "act_inner")
+    return jnp.einsum("...f,fd->...d", y, p["wo"])
+
+
+def _tail(pre_conv_in: jax.Array, W: int) -> jax.Array:
+    """Last W-1 raw (pre-activation) conv inputs, for decode handoff."""
+    B, T, C = pre_conv_in.shape
+    pad = max(W - 1 - T, 0)
+    x = jnp.pad(pre_conv_in, ((0, 0), (pad, 0), (0, 0)))
+    return x[:, -(W - 1):]
+
+
+def mamba_prefill(cfg, p: Dict, x: jax.Array):
+    """Forward + recurrent state for decode handoff."""
+    B, T, d = x.shape
+    H, P, N, W = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_conv
+    u = rmsnorm(x, p["norm"], cfg.norm_eps)
+    z, xi_raw, Bm_raw, Cm_raw, dt = _proj(cfg, p, u)
+    xi_raw = shard(xi_raw, "batch", "seq", "act_inner")
+    xi = _causal_conv(xi_raw, p["conv_x"])
+    Bm = _causal_conv(Bm_raw, p["conv_B"])
+    Cm = _causal_conv(Cm_raw, p["conv_C"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xi.reshape(B, T, H, P)
+    y, S = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + xh * p["D"].astype(xh.dtype)[:, None]
+    y = y.reshape(B, T, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("...f,fd->...d", y, p["wo"])
+    state = {"ssd": S,
+             "conv_x": _tail(xi_raw, W),
+             "conv_B": _tail(Bm_raw, W),
+             "conv_C": _tail(Cm_raw, W)}
+    return out, state
+
+
+# ================================================================ SSM LM
+def ssm_lm_specs(cfg) -> Dict:
+    from .layers import embed_spec
+    s = {
+        "embed": embed_spec(cfg.vocab_size, cfg.d_model),
+        "mamba": mamba_specs(cfg, cfg.n_layers),
+        "final_norm": rmsnorm_spec(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        s["head"] = embed_spec(cfg.vocab_size, cfg.d_model)
+    return s
+
+
+def ssm_lm_loss(cfg, params, tokens, labels):
+    from .layers import embed, softmax_xent, unembed
+    from .transformer import run_stack
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+
+    def one(pl, h):
+        return h + mamba_forward(cfg, pl, h), None, jnp.float32(0)
+
+    x, _, _ = run_stack(cfg, params["mamba"], x, one, cfg.n_layers,
+                        remat=cfg.remat)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    return softmax_xent(unembed(w, x, cfg.vocab_size), labels)
+
+
+def ssm_lm_prefill(cfg, params, tokens):
+    from .layers import embed, unembed
+    from .transformer import run_stack
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+
+    def one(pl, h):
+        out, st = mamba_prefill(cfg, pl, h)
+        return h + out, st, jnp.float32(0)
+
+    x, states, _ = run_stack(cfg, params["mamba"], x, one, cfg.n_layers,
+                             remat=False, collect=True)
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    return unembed(w, x, cfg.vocab_size), states
+
+
+def ssm_lm_decode(cfg, params, states, tokens, pos):
+    from .layers import embed, unembed
+    from .transformer import run_stack_decode
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+
+    def dec(pl, h, st):
+        out, st = mamba_decode(cfg, pl, h, st)
+        return h + out, st
+
+    x, states = run_stack_decode(cfg, params["mamba"], states, x, dec,
+                                 cfg.n_layers)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    return unembed(w, x, cfg.vocab_size), states
+
+
+def ssm_lm_cache_specs(cfg, batch: int) -> Dict:
+    per = ssm_state_specs(cfg, batch)
+    return jax.tree_util.tree_map(
+        lambda s: spec((cfg.n_layers,) + s.shape, ("layers",) + s.axes,
+                       dtype=s.dtype, init="zeros"),
+        per, is_leaf=lambda v: hasattr(v, "axes"))
+
+
+def mamba_decode(cfg, p: Dict, x: jax.Array, state: Dict):
+    """One-token step. x: (B,1,d)."""
+    B = x.shape[0]
+    H, P = cfg.ssm_nheads, cfg.ssm_headdim
+    u = rmsnorm(x[:, 0], p["norm"], cfg.norm_eps)
+    z, xi, Bm, Cm, dt = _proj(cfg, p, u)
+    xi, cx = _conv_step(xi, p["conv_x"], state["conv_x"])
+    Bm, cB = _conv_step(Bm, p["conv_B"], state["conv_B"])
+    Cm, cC = _conv_step(Cm, p["conv_C"], state["conv_C"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, S = ssd_step(state["ssd"], xi.reshape(B, H, P), dt, A, Bm, Cm)
+    y = y + xi.reshape(B, H, P) * p["D"].astype(y.dtype)[:, None]
+    y = y.reshape(B, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bf,fd->bd", y, p["wo"])[:, None]
+    return out, {"ssd": S, "conv_x": cx, "conv_B": cB, "conv_C": cC}

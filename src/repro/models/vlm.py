@@ -1,0 +1,145 @@
+"""VLM backbone (llama-3.2-vision-11b): decoder LM + gated cross-attn layers.
+
+Every ``cfg.cross_attn_every``-th layer is followed by a gated cross-attention
+sublayer (tanh-gated attn + tanh-gated MLP) over precomputed vision-patch
+embeddings ``(B, n_vision_tokens, d_model)`` (modality frontend is a STUB per
+the assignment).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from .layers import embed, embed_spec, mlp, mlp_specs, rmsnorm, rmsnorm_spec, \
+    softmax_xent, unembed
+from .sharding import spec
+from .transformer import (block_decode, block_forward, dense_block_specs,
+                          run_stack, run_stack_decode, _layer_slice,
+                          lm_cache_specs)
+
+
+def _n_cross(cfg) -> int:
+    return cfg.n_layers // cfg.cross_attn_every
+
+
+def cross_block_specs(cfg, layers):
+    d = cfg.d_model
+    return {
+        "ln1": rmsnorm_spec(d, layers),
+        "attn": A.attn_specs(cfg, layers, cross=True),
+        "gate_attn": spec((layers, 1), ("layers", None), init="zeros"),
+        "ln2": rmsnorm_spec(d, layers),
+        "mlp": mlp_specs(d, cfg.d_ff, layers),
+        "gate_mlp": spec((layers, 1), ("layers", None), init="zeros"),
+    }
+
+
+def vlm_specs(cfg) -> Dict:
+    s = {
+        "embed": embed_spec(cfg.vocab_size, cfg.d_model),
+        "blocks": dense_block_specs(cfg, cfg.n_layers),
+        "cross_blocks": cross_block_specs(cfg, _n_cross(cfg)),
+        "final_norm": rmsnorm_spec(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        s["head"] = embed_spec(cfg.vocab_size, cfg.d_model)
+    return s
+
+
+def _cross_layer(cfg, pl, x, vision=None, kv_cache=None, return_kv=False):
+    h = rmsnorm(x, pl["ln1"], cfg.norm_eps)
+    a, ckv = A.cross_attn_forward(cfg, pl["attn"], h, kv_x=vision,
+                                  kv_cache=kv_cache)
+    x = x + jnp.tanh(pl["gate_attn"].astype(jnp.float32)).astype(x.dtype) * a
+    m = mlp(pl["mlp"], rmsnorm(x, pl["ln2"], cfg.norm_eps))
+    x = x + jnp.tanh(pl["gate_mlp"].astype(jnp.float32)).astype(x.dtype) * m
+    return (x, ckv) if return_kv else x
+
+
+def _hidden(cfg, params, tokens, vision, *, remat, collect_caches=False):
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    vision = vision.astype(x.dtype)
+    positions = jnp.arange(tokens.shape[1])
+    k = cfg.cross_attn_every
+    self_caches, cross_caches = [], []
+    for g in range(_n_cross(cfg)):
+        grp = jax.tree_util.tree_map(lambda w: w[g * k:(g + 1) * k],
+                                     params["blocks"])
+
+        def one(pl, h):
+            h, kv, a = block_forward(cfg, pl, h, positions, is_moe=False,
+                                     return_kv=collect_caches)
+            return h, kv, a
+
+        x, kv, _ = run_stack(cfg, grp, x, one, k, remat=remat,
+                             collect=collect_caches)
+        pl_cross = _layer_slice(params["cross_blocks"], g)
+        if collect_caches:
+            self_caches.append(kv)
+            x, ckv = _cross_layer(cfg, pl_cross, x, vision=vision,
+                                  return_kv=True)
+            cross_caches.append(ckv)
+        else:
+            x = _cross_layer(cfg, pl_cross, x, vision=vision)
+    if collect_caches:
+        self_kv = jax.tree_util.tree_map(lambda *l: jnp.concatenate(l),
+                                         *self_caches)
+        cross_kv = jax.tree_util.tree_map(lambda *l: jnp.stack(l),
+                                          *cross_caches)
+        return x, {"self": self_kv, "cross": cross_kv}
+    return x
+
+
+def vlm_loss(cfg, params, tokens, vision, labels) -> jax.Array:
+    x = _hidden(cfg, params, tokens, vision, remat=cfg.remat)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    return softmax_xent(unembed(w, x, cfg.vocab_size), labels)
+
+
+def vlm_prefill(cfg, params, tokens, vision):
+    x, caches = _hidden(cfg, params, tokens, vision, remat=False,
+                        collect_caches=True)
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    return unembed(w, x, cfg.vocab_size), caches
+
+
+def vlm_decode(cfg, params, caches, tokens, pos):
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    k = cfg.cross_attn_every
+    caches = dict(caches)
+
+    def dec(pl, h, c):
+        return block_decode(cfg, pl, h, pos, c, is_moe=False)
+
+    for g in range(_n_cross(cfg)):
+        grp = jax.tree_util.tree_map(lambda w: w[g * k:(g + 1) * k],
+                                     params["blocks"])
+        cgrp = jax.tree_util.tree_map(lambda w: w[g * k:(g + 1) * k],
+                                      caches["self"])
+        x, nc = run_stack_decode(cfg, grp, cgrp, x, dec, k)
+        caches["self"] = jax.tree_util.tree_map(
+            lambda full, new, _g=g: jax.lax.dynamic_update_slice(
+                full, new, (_g * k,) + (0,) * (full.ndim - 1)),
+            caches["self"], nc)
+        pl_cross = _layer_slice(params["cross_blocks"], g)
+        ckv = _layer_slice(caches["cross"], g)
+        x = _cross_layer(cfg, pl_cross, x, kv_cache=ckv)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    return unembed(w, x, cfg.vocab_size), caches
+
+
+def vlm_cache_specs(cfg, batch: int, max_len: int) -> Dict:
+    self_kv = lm_cache_specs(cfg, batch, max_len)["blocks"]
+    n_cross = _n_cross(cfg)
+    per = A.kv_cache_specs(cfg, batch, cfg.n_vision_tokens)
+    cross = jax.tree_util.tree_map(
+        lambda s: spec((n_cross,) + s.shape, ("layers",) + s.axes,
+                       dtype=s.dtype, init="zeros"),
+        per, is_leaf=lambda v: hasattr(v, "axes"))
+    return {"self": self_kv, "cross": cross}

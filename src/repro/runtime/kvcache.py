@@ -1,0 +1,43 @@
+"""Cache utilities: allocation, prefill->decode padding, accounting."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.sharding import init_params, is_spec, shape_tree
+
+Tree = Any
+
+
+def alloc_cache(model, batch: int, max_len: int, **kw) -> Tree:
+    """Zero-allocate the full decode cache."""
+    specs = model.cache_specs(batch, max_len, **kw)
+    return init_params(specs, jax.random.PRNGKey(0))
+
+
+def pad_cache(cache: Tree, specs: Tree) -> Tree:
+    """Zero-pad every cache leaf up to its full-size spec shape.
+
+    Prefill produces caches sized to the prompt; decode wants max_len-sized
+    buffers.  Dims only ever differ along the sequence axis, so a generic
+    per-dim pad is safe.
+    """
+    shapes = shape_tree(specs)
+
+    def one(x, s):
+        pads = []
+        for have, want in zip(x.shape, s.shape):
+            assert have <= want, (x.shape, s.shape)
+            pads.append((0, want - have))
+        if any(p[1] for p in pads):
+            x = jnp.pad(x, pads)
+        return x.astype(s.dtype)
+
+    return jax.tree_util.tree_map(one, cache, shapes)
+
+
+def cache_bytes(cache: Tree) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(cache))

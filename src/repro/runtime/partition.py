@@ -1,0 +1,248 @@
+"""Edge/cloud partitioned execution — RoboECC's runtime artifact.
+
+The model's layer stack is cut at a *dynamic* split index that lives inside a
+static **parameter-sharing pool** ``[pool_start, pool_end)`` (paper §IV-B-2):
+both tiers hold the pool layers' weights, so moving the split inside the pool
+needs **no weight shipping and no recompilation** — the split index is a
+traced argument, and each pool layer runs under a ``lax.cond`` keyed on
+``layer_idx < split``.
+
+Semantics: the split is fixed for the duration of one request (one VLA action
+inference).  VLA workloads re-prefill every action step (the camera image
+changes), so caches never need to migrate across the cut — this matches the
+paper's setting, where adjustment happens between inferences.
+
+The cut activation is optionally shipped through the int8 activation codec
+(kernels/activation_codec), halving wire bytes — a beyond-paper optimisation
+accounted separately in the benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.activation_codec import ops as codec
+from ..models import transformer as T
+from ..models import vla as V
+from ..models.layers import embed, rmsnorm, unembed
+from ..models.transformer import block_forward, block_decode, _layer_slice
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitPlan:
+    """Static pool placement + codec choice; `split` itself is dynamic."""
+    pool_start: int
+    pool_end: int
+    use_codec: bool = False
+
+    def clamp(self, split: int) -> int:
+        return max(self.pool_start, min(int(split), self.pool_end))
+
+
+# ------------------------------------------------------------------ helpers
+def _masked_stack(cfg, pool_params: Tree, x: jax.Array, positions, split,
+                  offset: int, side: str, *, is_moe: bool):
+    """Run pool layers under lax.cond(active-on-this-side)."""
+    n = jax.tree_util.tree_leaves(pool_params)[0].shape[0]
+
+    def body(h, xs):
+        pl, i = xs
+        on = (i < split) if side == "edge" else (i >= split)
+
+        def run(a):
+            out, _, _ = block_forward(cfg, pl, a, positions, is_moe=is_moe)
+            return out
+
+        h = jax.lax.cond(on, run, lambda a: a, h)
+        return h, None
+
+    idx = jnp.arange(offset, offset + n)
+    x, _ = jax.lax.scan(body, x, (pool_params, idx))
+    return x
+
+
+def _codec_block(D: int) -> int:
+    return 128 if D % 128 == 0 else D
+
+
+def encode_activation(x: jax.Array, use_codec: bool):
+    if not use_codec:
+        return {"x": x}
+    q, s = codec.quantize(x, block=_codec_block(x.shape[-1]))
+    return {"q": q, "s": s}
+
+
+def decode_activation(payload: Dict, dtype=jnp.bfloat16) -> jax.Array:
+    if "x" in payload:
+        return payload["x"]
+    q, s = payload["q"], payload["s"]
+    return codec.dequantize(q, s, jnp.dtype(dtype),
+                            block=q.shape[-1] // s.shape[-1])
+
+
+def payload_bytes(payload: Dict) -> int:
+    return sum(v.size * v.dtype.itemsize for k, v in payload.items()
+               if hasattr(v, "size"))
+
+
+# ================================================================ LM executor
+class LMSplitExecutor:
+    """Dense/MoE decoder-only LM split at a block boundary.
+
+    Layer indexing: 0..L-1 are transformer blocks; embed always on edge,
+    final-norm + unembed always on cloud (the paper segments from the last
+    layer towards the front, keeping the output head cloud-side).
+    """
+
+    def __init__(self, cfg, plan: SplitPlan):
+        assert cfg.family in ("dense", "moe")
+        assert 0 <= plan.pool_start <= plan.pool_end <= cfg.n_layers
+        self.cfg = cfg
+        self.plan = plan
+        self._edge = jax.jit(self._edge_fwd)
+        self._cloud = jax.jit(self._cloud_fwd)
+
+    # -- groups bookkeeping (dense vs moe layer groups)
+    def _block_at(self, params, i: int) -> Tuple[Tree, bool]:
+        cfg = self.cfg
+        if cfg.family == "moe" and i >= cfg.first_dense_layers:
+            return _layer_slice(params["moe_blocks"],
+                                i - cfg.first_dense_layers), True
+        name = "dense_blocks" if cfg.family == "moe" else "blocks"
+        return _layer_slice(params[name], i), False
+
+    def _pool_params(self, params) -> Tuple[Tree, bool]:
+        cfg, plan = self.cfg, self.plan
+        if cfg.family == "moe":
+            nd = cfg.first_dense_layers
+            assert plan.pool_start >= nd or plan.pool_end <= nd, \
+                "pool must not straddle the dense/moe group boundary"
+            if plan.pool_start >= nd:
+                grp = jax.tree_util.tree_map(
+                    lambda w: w[plan.pool_start - nd:plan.pool_end - nd],
+                    params["moe_blocks"])
+                return grp, True
+            grp = jax.tree_util.tree_map(
+                lambda w: w[plan.pool_start:plan.pool_end],
+                params["dense_blocks"])
+            return grp, False
+        grp = jax.tree_util.tree_map(
+            lambda w: w[plan.pool_start:plan.pool_end], params["blocks"])
+        return grp, False
+
+    # -- edge side: embed + [0, pool_start) + masked pool
+    def _edge_fwd(self, params, tokens, split):
+        cfg, plan = self.cfg, self.plan
+        S = tokens.shape[1]
+        positions = jnp.arange(S)
+        x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+        for i in range(plan.pool_start):
+            pl, is_moe = self._block_at(params, i)
+            x, _, _ = block_forward(cfg, pl, x, positions, is_moe=is_moe)
+        pool, is_moe = self._pool_params(params)
+        if plan.pool_end > plan.pool_start:
+            x = _masked_stack(cfg, pool, x, positions, split,
+                              plan.pool_start, "edge", is_moe=is_moe)
+        return encode_activation(x, plan.use_codec)
+
+    # -- cloud side: masked pool + [pool_end, L) + head
+    def _cloud_fwd(self, params, payload, split):
+        cfg, plan = self.cfg, self.plan
+        x = decode_activation(payload, cfg.dtype)
+        positions = jnp.arange(x.shape[1])
+        pool, is_moe = self._pool_params(params)
+        if plan.pool_end > plan.pool_start:
+            x = _masked_stack(cfg, pool, x, positions, split,
+                              plan.pool_start, "cloud", is_moe=is_moe)
+        for i in range(plan.pool_end, cfg.n_layers):
+            pl, is_moe = self._block_at(params, i)
+            x, _, _ = block_forward(cfg, pl, x, positions, is_moe=is_moe)
+        return T.lm_logits(cfg, params, x)
+
+    # -- public API
+    def run(self, params, tokens, split: int):
+        """One co-inference: returns (logits, transfer_payload)."""
+        split = jnp.int32(self.plan.clamp(split))
+        payload = self._edge(params, tokens, split)
+        logits = self._cloud(params, payload, split)
+        return logits, payload
+
+
+# ================================================================ VLA executor
+class VLASplitExecutor:
+    """ViT + LLM (+ action head) split; pool inside the LLM block range.
+
+    Layer indexing (matches core/structure.py): ViT blocks [0, Lv) —
+    always edge-side candidates; LLM blocks [Lv, Lv+L); action head after.
+    The dynamic pool must lie inside the LLM range; the ViT boundary and the
+    action-head side are static placement choices evaluated by the cost
+    model (DESIGN.md §7).
+    """
+
+    def __init__(self, cfg, plan: SplitPlan, action_on_cloud: bool = True):
+        assert cfg.family == "vla"
+        self.cfg = cfg
+        self.plan = plan
+        Lv = cfg.vit_layers
+        assert Lv <= plan.pool_start <= plan.pool_end <= Lv + cfg.n_layers
+        self.action_on_cloud = action_on_cloud
+        self._edge = jax.jit(self._edge_fwd)
+        self._cloud = jax.jit(self._cloud_fwd)
+
+    def _edge_fwd(self, params, patches, tokens, split):
+        cfg, plan = self.cfg, self.plan
+        Lv = cfg.vit_layers
+        img = V.vit_encode(cfg, params["vit"], patches)
+        txt = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+        x = jnp.concatenate([img, txt], axis=1)
+        positions = jnp.arange(x.shape[1])
+        for i in range(plan.pool_start - Lv):
+            pl = _layer_slice(params["blocks"], i)
+            x, _, _ = block_forward(cfg, pl, x, positions, is_moe=False)
+        pool = jax.tree_util.tree_map(
+            lambda w: w[plan.pool_start - Lv:plan.pool_end - Lv],
+            params["blocks"])
+        if plan.pool_end > plan.pool_start:
+            x = _masked_stack(cfg, pool, x, positions, split,
+                              plan.pool_start, "edge", is_moe=False)
+        return encode_activation(x, plan.use_codec)
+
+    def _cloud_fwd(self, params, payload, split, key):
+        cfg, plan = self.cfg, self.plan
+        Lv = cfg.vit_layers
+        x = decode_activation(payload, cfg.dtype)
+        positions = jnp.arange(x.shape[1])
+        pool = jax.tree_util.tree_map(
+            lambda w: w[plan.pool_start - Lv:plan.pool_end - Lv],
+            params["blocks"])
+        if plan.pool_end > plan.pool_start:
+            x = _masked_stack(cfg, pool, x, positions, split,
+                              plan.pool_start, "cloud", is_moe=False)
+        for i in range(plan.pool_end - Lv, cfg.n_layers):
+            pl = _layer_slice(params["blocks"], i)
+            x, _, _ = block_forward(cfg, pl, x, positions, is_moe=False)
+        h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        # action decode (same logic as models.vla.vla_forward tail)
+        if cfg.vla_action_head in ("detok", ""):
+            logits = unembed(params["head"], h[:, -cfg.action_dim:])
+            toks = jnp.argmax(logits, -1)
+            act = (toks.astype(jnp.float32) % 256) / 127.5 - 1.0
+            return act[:, None, :]
+        cog = h[:, -1]
+        if cfg.vla_action_head == "dit":
+            return V.dit_sample(cfg, params["action"], cog, key)
+        raise NotImplementedError(cfg.vla_action_head)
+
+    def run(self, params, patches, tokens, split: int,
+            key: Optional[jax.Array] = None):
+        split = jnp.int32(self.plan.clamp(split))
+        payload = self._edge(params, patches, tokens, split)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        action = self._cloud(params, payload, split, key)
+        return action, payload

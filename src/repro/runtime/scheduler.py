@@ -1,0 +1,139 @@
+"""Serving scheduler: request batching, straggler hedging, elastic replicas.
+
+Simulation-grade but real control logic (unit-tested), designed for the
+1000+-node story:
+
+* ``MicroBatcher`` — admission queue -> fixed-size decode batches with a
+  deadline; late requests ride the next batch (continuous batching lite).
+* ``StragglerMitigator`` — per-replica latency EWMA + p95; hedges a request
+  to the second-best replica when the primary exceeds its hedge deadline
+  (tail-at-scale).  The paper's edge/cloud tiers are just two replicas here.
+* ``ElasticPool`` — replicas join/leave; on loss of the edge tier the
+  RoboECC controller's ``replan()`` degrades to cloud-only (split=0), on
+  re-join it re-runs Alg. 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import defaultdict, deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival_s: float
+    prompt_len: int
+    max_new: int = 16
+
+
+@dataclasses.dataclass
+class Batch:
+    requests: List[Request]
+    formed_s: float
+
+
+class MicroBatcher:
+    def __init__(self, batch_size: int, max_wait_s: float):
+        self.batch_size = batch_size
+        self.max_wait_s = max_wait_s
+        self.queue: deque[Request] = deque()
+
+    def add(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def maybe_form(self, now_s: float) -> Optional[Batch]:
+        if not self.queue:
+            return None
+        oldest = self.queue[0].arrival_s
+        if (len(self.queue) >= self.batch_size
+                or now_s - oldest >= self.max_wait_s):
+            take = [self.queue.popleft()
+                    for _ in range(min(self.batch_size, len(self.queue)))]
+            return Batch(take, now_s)
+        return None
+
+
+class LatencyStats:
+    """EWMA mean + streaming p95 over a sliding window."""
+
+    def __init__(self, alpha: float = 0.2, window: int = 64):
+        self.alpha = alpha
+        self.mean: Optional[float] = None
+        self.samples: deque = deque(maxlen=window)
+
+    def observe(self, s: float) -> None:
+        self.mean = s if self.mean is None else \
+            (1 - self.alpha) * self.mean + self.alpha * s
+        self.samples.append(s)
+
+    def p95(self) -> float:
+        if not self.samples:
+            return float("inf")
+        xs = sorted(self.samples)
+        return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
+
+
+@dataclasses.dataclass
+class HedgeOutcome:
+    replica: str
+    latency_s: float
+    hedged: bool
+    winner: str
+
+
+class StragglerMitigator:
+    def __init__(self, hedge_quantile: float = 0.95):
+        self.stats: Dict[str, LatencyStats] = defaultdict(LatencyStats)
+        self.hedge_quantile = hedge_quantile
+
+    def pick_primary(self, replicas: List[str]) -> str:
+        def key(r):
+            m = self.stats[r].mean
+            return m if m is not None else 0.0
+        return min(replicas, key=key)
+
+    def run(self, replicas: List[str],
+            exec_fn: Callable[[str], float]) -> HedgeOutcome:
+        """exec_fn(replica) -> latency seconds (simulated or measured).
+        Hedge: if primary exceeds its p95, launch on backup; winner = min."""
+        primary = self.pick_primary(replicas)
+        t_primary = exec_fn(primary)
+        deadline = self.stats[primary].p95()
+        hedged, winner, lat = False, primary, t_primary
+        if t_primary > deadline and len(replicas) > 1:
+            backup = self.pick_primary([r for r in replicas if r != primary])
+            t_backup = deadline + exec_fn(backup)  # hedge fires at deadline
+            hedged = True
+            if t_backup < t_primary:
+                winner, lat = backup, t_backup
+        self.stats[primary].observe(t_primary)
+        return HedgeOutcome(primary, lat, hedged, winner)
+
+
+class ElasticPool:
+    """Tracks live replicas via heartbeats; triggers replan callbacks."""
+
+    def __init__(self, on_change: Optional[Callable[[List[str]], None]] = None,
+                 timeout_s: float = 1.0):
+        self.last_beat: Dict[str, float] = {}
+        self.timeout_s = timeout_s
+        self.on_change = on_change
+        self._live: List[str] = []
+
+    def heartbeat(self, replica: str, now_s: float) -> None:
+        self.last_beat[replica] = now_s
+        self._refresh(now_s)
+
+    def _refresh(self, now_s: float) -> None:
+        live = sorted(r for r, t in self.last_beat.items()
+                      if now_s - t <= self.timeout_s)
+        if live != self._live:
+            self._live = live
+            if self.on_change:
+                self.on_change(live)
+
+    def live(self, now_s: float) -> List[str]:
+        self._refresh(now_s)
+        return list(self._live)

@@ -1,0 +1,47 @@
+"""Serving steps: prefill + autoregressive decode with preallocated caches."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kvcache import pad_cache
+
+Tree = Any
+
+
+def prefill_and_pad(model, params: Tree, batch: Dict, max_len: int,
+                    **cache_kw) -> Tuple[jax.Array, Tree]:
+    """Run prefill, then zero-pad caches to `max_len` decode buffers."""
+    logits, cache = model.prefill(params, batch)
+    specs = model.cache_specs(batch["tokens"].shape[0], max_len, **cache_kw)
+    return logits, pad_cache(cache, specs)
+
+
+def make_serve_step(model, donate: bool = True):
+    """jit'd one-token decode step: (params, cache, tokens, pos) ->
+    (logits, cache).  The cache buffer is donated (updated in place)."""
+    fn = functools.partial(_serve_step, model)
+    return jax.jit(fn, donate_argnums=(1,) if donate else ())
+
+
+def _serve_step(model, params, cache, tokens, pos):
+    return model.decode(params, cache, tokens, pos)
+
+
+def greedy_generate(model, params: Tree, batch: Dict, n_steps: int,
+                    max_len: Optional[int] = None, **cache_kw):
+    """Prefill + greedy decode n_steps tokens. Returns (B, n_steps) ids."""
+    prompt_len = batch["tokens"].shape[1]
+    max_len = max_len or (prompt_len + n_steps)
+    logits, cache = prefill_and_pad(model, params, batch, max_len, **cache_kw)
+    step = make_serve_step(model, donate=False)
+    toks = []
+    cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    for i in range(n_steps):
+        toks.append(cur)
+        logits, cache = step(params, cache, cur, jnp.int32(prompt_len + i))
+        cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(toks, axis=1)

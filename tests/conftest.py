@@ -1,0 +1,9 @@
+import os
+import sys
+
+# tests run on the single real CPU device; only the dry-run uses fake devices
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,129 @@
+"""Decode-path correctness: prefill + step-by-step decode must reproduce the
+full teacher-forced forward logits (float32, tight tolerance)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import build
+from repro.runtime.kvcache import pad_cache
+
+ARCHS = ["llama3.2-3b", "glm4-9b", "deepseek-v2-lite-16b",
+         "granite-moe-3b-a800m", "mamba2-1.3b", "zamba2-1.2b"]
+
+
+def _full_logits(cfg, model, params, batch):
+    if cfg.family in ("dense", "moe"):
+        from repro.models.transformer import lm_hidden, lm_logits
+        h, _ = lm_hidden(cfg, params, batch["tokens"], remat=False)
+        return lm_logits(cfg, params, h)
+    if cfg.family == "ssm":
+        from repro.models.ssm import mamba_forward
+        from repro.models.transformer import run_stack
+        from repro.models.layers import embed, rmsnorm, unembed
+        x = embed(params["embed"], batch["tokens"]).astype(
+            jnp.dtype(cfg.dtype))
+
+        def one(pl, h):
+            return h + mamba_forward(cfg, pl, h), None, jnp.float32(0)
+
+        x, _, _ = run_stack(cfg, params["mamba"], x, one, cfg.n_layers,
+                            remat=False)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        w = params["embed"] if cfg.tie_embeddings else params["head"]
+        return unembed(w, x)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import hybrid_hidden
+        from repro.models.layers import rmsnorm, unembed
+        x = hybrid_hidden(cfg, params, batch["tokens"], remat=False)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        w = params["embed"] if cfg.tie_embeddings else params["head"]
+        return unembed(w, x)
+    raise NotImplementedError
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    # moe_capacity_factor=8: GShard capacity drops depend on the token count,
+    # so exact prefill==forward equivalence needs a non-binding capacity
+    cfg = get_config(arch).reduced().replace(dtype="float32",
+                                             moe_capacity_factor=8.0)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, P, T = 2, 5, 10
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                                cfg.vocab_size)
+    full = _full_logits(cfg, model, params, {"tokens": tokens})
+    logits, cache = model.prefill(params, {"tokens": tokens[:, :P]})
+    assert jnp.allclose(logits[:, 0], full[:, P - 1], atol=2e-3), \
+        "prefill last logits mismatch"
+    cache = pad_cache(cache, model.cache_specs(B, T, src_len=P))
+    errs = []
+    for i in range(P, T):
+        logits, cache = model.decode(params, cache, tokens[:, i:i + 1],
+                                     jnp.int32(i))
+        errs.append(float(jnp.max(jnp.abs(logits[:, 0] - full[:, i]))))
+    assert max(errs) < 2e-3, f"decode drift {max(errs)}"
+
+
+def test_encdec_decode_matches_teacher_forcing():
+    cfg = get_config("seamless-m4t-large-v2").reduced().replace(
+        dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S_src, P, T = 2, 12, 4, 8
+    frames = jax.random.normal(jax.random.PRNGKey(1), (B, S_src, cfg.d_model))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0,
+                                cfg.vocab_size)
+    from repro.models.encdec import encode, encdec_prefill, _dec_block
+    from repro.models.layers import embed, rmsnorm, unembed
+    from repro.models.transformer import run_stack
+    # teacher-forced full decoder pass
+    enc_out = encode(cfg, params, frames, remat=False)
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(T)
+
+    def one(pl, h):
+        h, _, _ = _dec_block(cfg, pl, h, positions, enc_out=enc_out)
+        return h, None, jnp.float32(0)
+
+    x, _, _ = run_stack(cfg, params["dec_blocks"], x, one, cfg.n_dec_layers,
+                        remat=False)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    full = unembed(w, x)
+
+    logits, cache = model.prefill(params, {"frames": frames,
+                                           "tokens": tokens[:, :P]})
+    assert jnp.allclose(logits[:, 0], full[:, P - 1], atol=2e-3)
+    cache = pad_cache(cache, model.cache_specs(B, T, src_len=S_src))
+    for i in range(P, T):
+        logits, cache = model.decode(params, cache, tokens[:, i:i + 1],
+                                     jnp.int32(i))
+        assert float(jnp.max(jnp.abs(logits[:, 0] - full[:, i]))) < 2e-3
+
+
+def test_vlm_decode_matches_forward():
+    cfg = get_config("llama-3.2-vision-11b").reduced().replace(
+        dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, P, T = 2, 4, 8
+    vision = jax.random.normal(jax.random.PRNGKey(1),
+                               (B, cfg.n_vision_tokens, cfg.d_model))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0,
+                                cfg.vocab_size)
+    from repro.models.vlm import _hidden
+    from repro.models.layers import rmsnorm, unembed
+    x = _hidden(cfg, params, tokens, vision, remat=False)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    full = unembed(w, x)
+    logits, cache = model.prefill(params, {"tokens": tokens[:, :P],
+                                           "vision": vision})
+    assert jnp.allclose(logits[:, 0], full[:, P - 1], atol=2e-3)
+    cache = pad_cache(cache, model.cache_specs(B, T))
+    for i in range(P, T):
+        logits, cache = model.decode(params, cache, tokens[:, i:i + 1],
+                                     jnp.int32(i))
+        assert float(jnp.max(jnp.abs(logits[:, 0] - full[:, i]))) < 2e-3

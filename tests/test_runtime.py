@@ -1,0 +1,136 @@
+"""Runtime: partition executor equivalence, serving, scheduler, fault."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build
+from repro.models.transformer import lm_hidden, lm_logits
+from repro.runtime.partition import (LMSplitExecutor, SplitPlan,
+                                     VLASplitExecutor, payload_bytes)
+from repro.runtime.scheduler import (ElasticPool, MicroBatcher, Request,
+                                     StragglerMitigator)
+from repro.runtime.serving import greedy_generate
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = get_config("llama3.2-3b").reduced().replace(n_layers=6,
+                                                      dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                cfg.vocab_size)
+    h, _ = lm_hidden(cfg, params, tokens, remat=False)
+    ref = lm_logits(cfg, params, h)
+    return cfg, model, params, tokens, ref
+
+
+def test_lm_split_equivalence_all_pool_positions(lm_setup):
+    cfg, model, params, tokens, ref = lm_setup
+    ex = LMSplitExecutor(cfg, SplitPlan(2, 5))
+    for split in range(2, 6):
+        logits, payload = ex.run(params, tokens, split)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_lm_split_codec_halves_payload(lm_setup):
+    cfg, model, params, tokens, ref = lm_setup
+    raw = LMSplitExecutor(cfg, SplitPlan(2, 5))
+    qz = LMSplitExecutor(cfg, SplitPlan(2, 5, use_codec=True))
+    _, p_raw = raw.run(params, tokens, 3)
+    logits, p_q = qz.run(params, tokens, 3)
+    assert payload_bytes(p_q) < 0.6 * payload_bytes(p_raw)
+    rel = float(jnp.max(jnp.abs(logits - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+    assert rel < 0.05     # int8 cut tensor stays within a few percent
+
+
+def test_moe_split_equivalence():
+    cfg = get_config("granite-moe-3b-a800m").reduced().replace(
+        n_layers=4, dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0,
+                                cfg.vocab_size)
+    h, _ = lm_hidden(cfg, params, tokens, remat=False)
+    ref = lm_logits(cfg, params, h)
+    ex = LMSplitExecutor(cfg, SplitPlan(1, 3))
+    logits, _ = ex.run(params, tokens, 2)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_vla_split_equivalence():
+    cfg = get_config("cogact-7b").reduced().replace(n_layers=4)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(3)
+    patches = jax.random.normal(key, (2, cfg.n_patches, cfg.vit_dim))
+    tokens = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    ref = model.forward(params, {"patches": patches, "tokens": tokens}, key)
+    Lv = cfg.vit_layers
+    ex = VLASplitExecutor(cfg, SplitPlan(Lv + 1, Lv + 3))
+    act, _ = ex.run(params, patches, tokens, Lv + 2, key)
+    np.testing.assert_allclose(np.asarray(act), np.asarray(ref), atol=1e-5)
+
+
+def test_greedy_generate():
+    cfg = get_config("llama3.2-3b").reduced().replace(n_layers=2)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0,
+                                cfg.vocab_size)
+    out = greedy_generate(model, params, {"tokens": tokens}, n_steps=5)
+    assert out.shape == (2, 5)
+    assert bool(jnp.all((out >= 0) & (out < cfg.vocab_size)))
+
+
+# ------------------------------------------------------------- scheduler
+def test_microbatcher_forms_on_size_and_timeout():
+    mb = MicroBatcher(batch_size=3, max_wait_s=0.5)
+    mb.add(Request(0, 0.0, 4))
+    assert mb.maybe_form(0.1) is None
+    mb.add(Request(1, 0.1, 4))
+    mb.add(Request(2, 0.1, 4))
+    b = mb.maybe_form(0.2)
+    assert b is not None and len(b.requests) == 3
+    mb.add(Request(3, 1.0, 4))
+    assert mb.maybe_form(1.1) is None
+    b2 = mb.maybe_form(1.6)          # timeout fires
+    assert b2 is not None and len(b2.requests) == 1
+
+
+def test_straggler_hedging_prefers_fast_replica():
+    sm = StragglerMitigator()
+    lat = {"fast": 0.01, "slow": 0.10}
+    seq = {"n": 0}
+
+    def exec_fn(r):
+        seq["n"] += 1
+        # one tail event on 'fast' after warmup
+        if r == "fast" and seq["n"] == 30:
+            return 1.0
+        return lat[r]
+
+    outs = [sm.run(["fast", "slow"], exec_fn) for _ in range(40)]
+    assert sum(o.hedged for o in outs) >= 1
+    hedged = [o for o in outs if o.hedged]
+    assert all(o.latency_s < 1.0 for o in hedged)  # hedge rescued the tail
+    # before the tail event, routing should prefer the fast replica
+    assert all(o.replica == "fast" for o in outs[5:29])
+
+
+def test_elastic_pool_detects_loss():
+    events = []
+    pool = ElasticPool(on_change=lambda live: events.append(tuple(live)),
+                       timeout_s=1.0)
+    pool.heartbeat("edge", 0.0)
+    pool.heartbeat("cloud", 0.0)
+    assert pool.live(0.5) == ["cloud", "edge"]
+    pool.heartbeat("cloud", 2.0)     # edge went silent
+    assert pool.live(2.0) == ["cloud"]
+    assert events[-1] == ("cloud",)

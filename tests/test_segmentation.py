@@ -1,0 +1,101 @@
+"""Alg. 1 properties (hypothesis): optimality vs brute force, budget, extremes."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import (Workload, build_graph, cut_bytes, evaluate_split,
+                        exhaustive_best, fixed_split, search)
+from repro.core.hardware import A100, ORIN, DeviceSpec
+from repro.core.structure import LayerCost
+
+
+def _rand_graph(draw):
+    n = draw(st.integers(2, 24))
+    layers = []
+    for i in range(n):
+        flops = draw(st.floats(1e6, 1e12))
+        wb = draw(st.floats(1e3, 1e9))
+        tb = draw(st.floats(1e2, 1e7))
+        layers.append(LayerCost(f"l{i}", "llm", flops, wb, wb + 1e4, tb))
+    return layers
+
+
+graphs = st.builds(lambda: None)
+
+
+@st.composite
+def graph_strategy(draw):
+    return _rand_graph(draw)
+
+
+@given(graph_strategy(), st.floats(0.1e6, 100e6),
+       st.floats(0.05, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_alg1_matches_exhaustive(graph, bw, budget_frac):
+    total = sum(c.weight_bytes for c in graph)
+    budget = budget_frac * total
+    # guarantee feasibility: edge-only (split=n) has cloud load 0
+    seg = search(graph, ORIN, A100, bw, cloud_budget_bytes=budget)
+    best = exhaustive_best(graph, ORIN, A100, bw, cloud_budget_bytes=budget)
+    e, c, t = evaluate_split(graph, best, ORIN, A100, bw)
+    assert abs(seg.total_s - (e + c + t)) < 1e-9 * max(1.0, e + c + t), \
+        f"alg1 split {seg.split} not optimal vs {best}"
+
+
+@given(graph_strategy(), st.floats(0.1e6, 100e6))
+@settings(max_examples=30, deadline=None)
+def test_budget_respected(graph, bw):
+    total = sum(c.weight_bytes for c in graph)
+    budget = 0.3 * total
+    seg = search(graph, ORIN, A100, bw, cloud_budget_bytes=budget)
+    cloud_load = sum(c.weight_bytes for c in graph[seg.split:])
+    assert cloud_load <= budget + 1e-6
+
+
+@given(graph_strategy())
+@settings(max_examples=20, deadline=None)
+def test_extremes(graph):
+    n = len(graph)
+    e, c, t = evaluate_split(graph, n, ORIN, A100, 10e6)
+    assert c == 0 and t == 0                      # edge-only
+    e0, c0, t0 = evaluate_split(graph, 0, ORIN, A100, 10e6)
+    assert e0 == 0 and t0 == 0                    # no input bytes configured
+
+
+def test_faster_cloud_pulls_split_down():
+    g = build_graph(get_config("openvla-7b"), Workload())
+    fast = dataclasses.replace(A100, peak_flops=A100.peak_flops * 4,
+                               hbm_bw=A100.hbm_bw * 4)
+    s1 = search(g, ORIN, A100, 10e6).split
+    s2 = search(g, ORIN, fast, 10e6).split
+    assert s2 <= s1
+
+
+def test_lower_bandwidth_pushes_more_to_one_side():
+    g = build_graph(get_config("openvla-7b"), Workload())
+    hi = search(g, ORIN, A100, 50e6)
+    lo = search(g, ORIN, A100, 0.2e6)
+    # at very low bandwidth the optimum avoids transfer-heavy middle cuts
+    assert lo.net_s <= hi.net_s * 300  # sanity: search didn't explode
+    assert lo.split in lo.feasible
+
+
+def test_fixed_split_half_weights():
+    g = build_graph(get_config("openvla-7b"), Workload())
+    fs = fixed_split(g)
+    left = sum(c.weight_bytes for c in g[:fs])
+    total = sum(c.weight_bytes for c in g)
+    assert 0.4 <= left / total <= 0.65
+
+
+def test_fig3_transfer_volumes():
+    """Paper Fig. 3: [1,17,3072] = 102KB and [1,17,768] = 25.5KB."""
+    assert 17 * 3072 * 2 == 104448           # ~102 KB
+    assert 17 * 768 * 2 == 26112             # ~25.5 KB
+    cfg = get_config("llama3.2-3b")          # d_model = 3072
+    g = build_graph(cfg, Workload(s_new=17, decode_steps=0))
+    mid = len(g) // 2
+    assert cut_bytes(g, mid) == 17 * 3072 * 2

@@ -1,0 +1,132 @@
+"""Fleet-scale serving benchmark: vectorized planner + fleet simulator.
+
+Two measurements:
+
+1. **Planner**: a full bandwidth-sweep plan (every registered config × a
+   log-spaced bandwidth grid) via the scalar Alg. 1 loop vs the vectorized
+   ``sweep_search`` — reports wall time of each and the speedup, and checks
+   the two return identical splits everywhere.
+2. **Fleet**: an end-to-end ``FleetSimulator`` run (default 24 robots over
+   4 heterogeneous model configs, 3 cloud replicas, with a mid-run capacity
+   crunch and a full outage window) — reports per-robot p50/p95 latency and
+   fleet-aggregate latency/throughput.
+
+    PYTHONPATH=src python benchmarks/fleet_bench.py [--robots N] [--ticks T]
+
+``run(quiet=True)`` yields the repo-standard ``name,us_per_call,derived``
+CSV lines for ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.core import Workload, build_graph, search, sweep_search
+from repro.core.hardware import A100, ORIN
+from repro.runtime.fleet import (FleetConfig, FleetReport, outage_schedule,
+                                 run_fleet)
+
+DEFAULT_ARCHS = ("openvla-7b", "cogact-7b", "llama3.2-3b", "glm4-9b")
+
+
+# ---------------------------------------------------------------- planner
+def bench_planner(n_bw: int = 64, repeats: int = 3):
+    """Time scalar-vs-vectorized Alg. 1 over (all configs × n_bw bandwidths).
+
+    Returns (scalar_s, vec_s, n_cells, mismatches)."""
+    w = Workload()
+    graphs = {k: build_graph(get_config(k), w) for k in sorted(ARCHS)}
+    bws = np.geomspace(0.05e6, 100e6, n_bw)
+
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        scalar = {k: [search(g, ORIN, A100, float(bw),
+                             input_bytes=w.input_bytes).split
+                      for bw in bws]
+                  for k, g in graphs.items()}
+    scalar_s = (time.perf_counter() - t0) / repeats
+
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        vec = sweep_search(graphs, ORIN, A100, bws,
+                           input_bytes=w.input_bytes)
+    vec_s = (time.perf_counter() - t0) / repeats
+
+    mism = sum(int(vec[k].splits[j]) != scalar[k][j]
+               for k in graphs for j in range(n_bw))
+    return scalar_s, vec_s, len(graphs) * n_bw, mism
+
+
+# ------------------------------------------------------------------ fleet
+def fleet_config(n_robots: int = 24, n_ticks: int = 400, n_replicas: int = 3,
+                 seed: int = 0, archs=DEFAULT_ARCHS) -> FleetConfig:
+    cfg = FleetConfig(n_robots=n_robots, archs=tuple(archs),
+                      n_ticks=n_ticks, n_replicas=n_replicas, seed=seed)
+    cfg.replica_events = outage_schedule(cfg)
+    return cfg
+
+
+def print_report(rep: FleetReport) -> None:
+    print(f"\n{'robot':9s} {'arch':22s} {'n':>4s} {'p50 ms':>8s} "
+          f"{'p95 ms':>8s} {'mean ms':>8s}")
+    for r in rep.robots:
+        print(f"{r.name:9s} {r.arch:22s} {r.n_requests:4d} "
+              f"{r.p50_s * 1e3:8.1f} {r.p95_s * 1e3:8.1f} "
+              f"{r.mean_s * 1e3:8.1f}")
+    print(f"\nfleet: p50 {rep.fleet_p50_s * 1e3:.1f} ms  "
+          f"p95 {rep.fleet_p95_s * 1e3:.1f} ms  "
+          f"throughput {rep.throughput_rps:.1f} req/s  "
+          f"({rep.n_requests} requests, {rep.n_hedged} hedges, "
+          f"{rep.n_replans} replans, "
+          f"{rep.n_outage_completions} outage completions)")
+
+
+def run(quiet: bool = False, n_robots: int = 24, n_ticks: int = 400,
+        n_replicas: int = 3, seed: int = 0) -> List[str]:
+    """CSV lines for benchmarks/run.py: name,us_per_call,derived."""
+    scalar_s, vec_s, cells, mism = bench_planner()
+    assert mism == 0, f"vectorized planner diverged on {mism} cells"
+    lines = [
+        f"fleet_plan_scalar,{scalar_s * 1e6:.0f},{cells}cells",
+        f"fleet_plan_vec,{vec_s * 1e6:.0f},x{scalar_s / vec_s:.1f}",
+    ]
+    t0 = time.perf_counter()
+    rep = run_fleet(fleet_config(n_robots, n_ticks, n_replicas, seed))
+    sim_wall = time.perf_counter() - t0
+    lines += [
+        f"fleet_p50,{rep.fleet_p50_s * 1e6:.0f},{n_robots}robots",
+        f"fleet_p95,{rep.fleet_p95_s * 1e6:.0f},{rep.n_hedged}hedges",
+        f"fleet_throughput,{rep.throughput_rps * 1e3:.0f},req_per_ks",
+        f"fleet_sim_wall,{sim_wall * 1e6:.0f},{rep.n_requests}reqs",
+    ]
+    if not quiet:
+        print(f"planner: scalar {scalar_s * 1e3:.1f} ms vs vectorized "
+              f"{vec_s * 1e3:.2f} ms over {cells} (model × bandwidth) cells "
+              f"-> x{scalar_s / vec_s:.1f}, identical splits")
+        print_report(rep)
+        print(f"sim wall time {sim_wall:.2f} s")
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--robots", type=int, default=24)
+    ap.add_argument("--ticks", type=int, default=400)
+    ap.add_argument("--replicas", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--csv", action="store_true",
+                    help="emit only the CSV lines")
+    args = ap.parse_args()
+    lines = run(quiet=args.csv, n_robots=args.robots, n_ticks=args.ticks,
+                n_replicas=args.replicas, seed=args.seed)
+    if args.csv:
+        for ln in lines:
+            print(ln)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,9 +17,10 @@ def main() -> None:
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import figures, kernel_bench, paper_tables, roofline
+    from . import figures, fleet_bench, kernel_bench, paper_tables, roofline
 
     benches = {
+        "fleet": lambda: fleet_bench.run(quiet=True),
         "table2": lambda: paper_tables.run_table("openvla", quiet=True),
         "table3": lambda: paper_tables.run_table("cogact", quiet=True),
         "table4": lambda: paper_tables.run_ablation(quiet=True),

@@ -19,8 +19,10 @@ from .network import NetworkSim, TraceConfig, generate_trace
 from .pool import Pool, build_pool, pool_transfer_profile
 from .predictor import (Predictor, PredictorConfig, check_granularity,
                         lstm_forward, train_predictor)
-from .segmentation import (SegmentationResult, cut_bytes, evaluate_split,
-                           exhaustive_best, fixed_split, search)
+from .segmentation import (GraphArrays, SegmentationResult, VecSearchResult,
+                           cut_bytes, evaluate_split, exhaustive_best,
+                           fixed_split, graph_arrays, search, search_vec,
+                           sweep_search)
 from .structure import LayerCost, Workload, build_graph, total_flops, \
     total_weight_bytes
 
@@ -33,8 +35,9 @@ __all__ = [
     "Pool", "build_pool", "pool_transfer_profile",
     "Predictor", "PredictorConfig", "check_granularity", "lstm_forward",
     "train_predictor",
-    "SegmentationResult", "cut_bytes", "evaluate_split", "exhaustive_best",
-    "fixed_split", "search",
+    "GraphArrays", "SegmentationResult", "VecSearchResult", "cut_bytes",
+    "evaluate_split", "exhaustive_best", "fixed_split", "graph_arrays",
+    "search", "search_vec", "sweep_search",
     "LayerCost", "Workload", "build_graph", "total_flops",
     "total_weight_bytes",
 ]

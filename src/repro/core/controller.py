@@ -51,13 +51,17 @@ class RoboECC:
                  pool_overhead_target: float = 0.026,
                  nominal_bw_bps: float = 10e6,
                  thresholds: Optional[Thresholds] = None,
-                 use_codec: bool = False):
+                 use_codec: bool = False,
+                 graph: Optional[List[LayerCost]] = None):
         self.cfg = cfg
         self.edge_dev, self.cloud_dev = edge, cloud
         self.workload = workload
         self.use_codec = use_codec
-        self.graph: List[LayerCost] = build_graph(cfg, workload)
+        # `graph` lets a fleet of same-arch robots share one prebuilt graph
+        self.graph: List[LayerCost] = list(graph) if graph is not None \
+            else build_graph(cfg, workload)
         self.cloud_budget_bytes = cloud_budget_bytes
+        self.pool_overhead_target = pool_overhead_target
         self.seg: SegmentationResult = search(
             self.graph, edge, cloud, nominal_bw_bps,
             cloud_budget_bytes=cloud_budget_bytes,
@@ -74,8 +78,11 @@ class RoboECC:
                       seed: int = 0) -> None:
         self.predictor, _ = train_predictor(historical_bps, pcfg, seed)
 
-    # ------------------------------------------------------------- laten cies
+    # ------------------------------------------------------------- latencies
     def latency_at(self, split: int, bw_bps: float, rtt_s: float = 0.0):
+        """(edge_s, cloud_s, net_s) in seconds at ``split`` for a link of
+        ``bw_bps`` BYTES/s — the modeled latency decomposition of one
+        inference without advancing any state."""
         e, c, t = evaluate_split(self.graph, split, self.edge_dev,
                                  self.cloud_dev, bw_bps, rtt_s=rtt_s,
                                  input_bytes=self.workload.input_bytes)
@@ -114,7 +121,14 @@ class RoboECC:
                nominal_bw_bps: float = 10e6) -> SegmentationResult:
         """Elastic re-planning after a tier change (device loss/join):
         re-run Alg. 1 with the surviving device set.  Losing the edge tier
-        degenerates to cloud-only (split=0) — the paper's baseline."""
+        degenerates to cloud-only (split=0) — the paper's baseline.
+
+        Note: ``cloud_budget_bytes`` and ``nominal_bw_bps`` describe the NEW
+        deployment conditions and intentionally do NOT default to the values
+        passed at construction — a tier change usually changes the budget
+        too (e.g. cloud-only fallback must host the whole model).  Re-pass
+        the original budget explicitly to keep it (as the fleet simulator
+        does on replica re-join)."""
         if edge is not None:
             self.edge_dev = edge
         if cloud is not None:
@@ -122,6 +136,7 @@ class RoboECC:
         self.seg = search(self.graph, self.edge_dev, self.cloud_dev,
                           nominal_bw_bps, cloud_budget_bytes=cloud_budget_bytes,
                           input_bytes=self.workload.input_bytes)
-        self.pool = build_pool(self.graph, self.seg.split)
+        self.pool = build_pool(self.graph, self.seg.split,
+                               self.pool_overhead_target)
         self.split = self.seg.split
         return self.seg

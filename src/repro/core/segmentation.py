@@ -16,7 +16,9 @@ low computational load ... negligible overhead").
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence, Union
+
+import numpy as np
 
 from .hardware import DeviceSpec, layer_latency
 from .structure import LayerCost
@@ -106,6 +108,164 @@ def exhaustive_best(graph: Sequence[LayerCost], edge: DeviceSpec,
         if best_t is None or e + c + t < best_t:
             best_s, best_t = s, e + c + t
     return best_s
+
+
+# --------------------------------------------------------------- vectorized
+@dataclasses.dataclass(frozen=True)
+class GraphArrays:
+    """Per-split cost arrays for one layer graph, all of shape ``(n+1,)``
+    indexed by split ``S`` (same semantics as the module docstring).
+
+    Units: latencies in seconds, loads and wire volumes in bytes.  Computed
+    once per (graph, edge, cloud) triple, these arrays turn every downstream
+    latency query into O(1) indexing and every Alg. 1 search into one numpy
+    pass — the fleet simulator's per-tick hot path.
+    """
+    edge_s: np.ndarray          # prefix edge latency of layers [0, S)
+    cloud_s: np.ndarray         # suffix cloud latency of layers [S, n)
+    wire_bytes: np.ndarray      # cut activation bytes at split S
+    cloud_load_bytes: np.ndarray  # weight bytes the cloud must host at S
+    n: int
+
+    def latency(self, split: int, bandwidth_bps: float, rtt_s: float = 0.0):
+        """(edge_s, cloud_s, net_s) at one split — O(1) equivalent of
+        ``evaluate_split`` (bandwidth in bytes/s, result in seconds)."""
+        wire = self.wire_bytes[split]
+        net = wire / bandwidth_bps + rtt_s if wire else 0.0
+        return float(self.edge_s[split]), float(self.cloud_s[split]), net
+
+
+def graph_arrays(graph: Sequence[LayerCost], edge: DeviceSpec,
+                 cloud: DeviceSpec, *, input_bytes: float = 0.0
+                 ) -> GraphArrays:
+    """Precompute prefix/suffix cost arrays for ``search_vec``.
+
+    ``edge_s`` uses a forward cumsum (identical accumulation order to the
+    scalar ``evaluate_split``); ``cloud_s``/``cloud_load_bytes`` are suffix
+    sums.  ``wire_bytes[0]`` is ``input_bytes`` (cloud-only ships the raw
+    observation) and ``wire_bytes[n]`` is 0 (edge-only ships nothing).
+    """
+    n = len(graph)
+    e_lat = np.array([layer_latency(c, edge) for c in graph], dtype=np.float64)
+    c_lat = np.array([layer_latency(c, cloud) for c in graph], dtype=np.float64)
+    w = np.array([c.weight_bytes for c in graph], dtype=np.float64)
+    edge_s = np.concatenate([[0.0], np.cumsum(e_lat)])
+    cloud_s = np.concatenate([np.cumsum(c_lat[::-1])[::-1], [0.0]])
+    load = np.concatenate([np.cumsum(w[::-1])[::-1], [0.0]])
+    wire = np.array([cut_bytes(graph, s, input_bytes) for s in range(n + 1)],
+                    dtype=np.float64)
+    return GraphArrays(edge_s=edge_s, cloud_s=cloud_s, wire_bytes=wire,
+                       cloud_load_bytes=load, n=n)
+
+
+@dataclasses.dataclass(frozen=True)
+class VecSearchResult:
+    """Alg. 1 results for a whole bandwidth sweep (arrays of shape ``(B,)``;
+    bandwidths in bytes/s, latencies in seconds)."""
+    bandwidths_bps: np.ndarray
+    splits: np.ndarray           # optimal split per bandwidth (int)
+    total_s: np.ndarray
+    edge_s: np.ndarray
+    cloud_s: np.ndarray
+    net_s: np.ndarray
+
+
+def search_vec(graph: Sequence[LayerCost], edge: DeviceSpec,
+               cloud: DeviceSpec, bandwidths_bps,
+               cloud_budget_bytes: Optional[float] = None, *,
+               rtt_s: float = 0.0, input_bytes: float = 0.0,
+               arrays: Optional[GraphArrays] = None) -> VecSearchResult:
+    """Vectorized Alg. 1: optimal split for every bandwidth in one pass.
+
+    Equivalent to calling ``search`` once per bandwidth (the scalar path is
+    kept as the property-test oracle) but evaluates the whole
+    (split × bandwidth) latency matrix with numpy.  The feasible set under
+    ``cloud_budget_bytes`` is identical to the scalar scan's because the
+    cloud load is a monotone suffix sum — the scan's early break and a mask
+    admit exactly the same splits.  Ties break towards the largest split,
+    matching the scalar scan (it walks from S=n down and keeps strict
+    improvements only).  Bandwidths in BYTES/s, latencies in seconds.
+    """
+    ga = arrays if arrays is not None else graph_arrays(
+        graph, edge, cloud, input_bytes=input_bytes)
+    bw = np.atleast_1d(np.asarray(bandwidths_bps, dtype=np.float64))
+    budget = cloud_budget_bytes if cloud_budget_bytes is not None \
+        else float("inf")
+    net = np.where(ga.wire_bytes[:, None] > 0,
+                   ga.wire_bytes[:, None] / bw[None, :] + rtt_s, 0.0)
+    totals = ga.edge_s[:, None] + ga.cloud_s[:, None] + net    # (n+1, B)
+    totals = np.where((ga.cloud_load_bytes > budget)[:, None], np.inf, totals)
+    # argmin over flipped split axis -> largest split wins ties (Alg. 1 order)
+    splits = ga.n - np.argmin(totals[::-1], axis=0)
+    cols = np.arange(len(bw))
+    return VecSearchResult(
+        bandwidths_bps=bw, splits=splits, total_s=totals[splits, cols],
+        edge_s=ga.edge_s[splits], cloud_s=ga.cloud_s[splits],
+        net_s=net[splits, cols])
+
+
+def sweep_search(graphs: Mapping[str, Sequence[LayerCost]], edge: DeviceSpec,
+                 cloud: DeviceSpec, bandwidths_bps,
+                 cloud_budget_bytes: Union[None, float,
+                                           Mapping[str, Optional[float]]] = None,
+                 *, rtt_s: float = 0.0,
+                 input_bytes: Union[float, Mapping[str, float]] = 0.0
+                 ) -> Dict[str, VecSearchResult]:
+    """Fleet-scale plan: Alg. 1 over (model × split × bandwidth) in ONE
+    padded numpy pass.
+
+    Graphs of different depths are padded to the deepest model with +inf
+    edge latency (those split indices can never win), so a full
+    bandwidth-sweep plan for every registered config costs a single
+    ``(M, S_max+1, B)`` array evaluation instead of ``M × B`` Python scans.
+    ``cloud_budget_bytes`` and ``input_bytes`` may be scalars or per-model
+    mappings.  Bandwidths in BYTES/s, latencies in seconds.
+    """
+    names = list(graphs)
+    if not names:
+        raise ValueError("sweep_search needs at least one graph")
+    bw = np.atleast_1d(np.asarray(bandwidths_bps, dtype=np.float64))
+
+    def per_model(val, name, default):
+        if isinstance(val, Mapping):
+            v = val.get(name, default)
+        else:
+            v = val if val is not None else default
+        return default if v is None else v
+
+    gas = [graph_arrays(graphs[k], edge, cloud,
+                        input_bytes=per_model(input_bytes, k, 0.0))
+           for k in names]
+    S = max(ga.n for ga in gas) + 1
+    M = len(names)
+
+    def pad(vals, fill):
+        out = np.full((M, S), fill, dtype=np.float64)
+        for i, v in enumerate(vals):
+            out[i, :len(v)] = v
+        return out
+
+    E = pad([ga.edge_s for ga in gas], np.inf)
+    C = pad([ga.cloud_s for ga in gas], 0.0)
+    W = pad([ga.wire_bytes for ga in gas], 0.0)
+    L = pad([ga.cloud_load_bytes for ga in gas], 0.0)
+    budgets = np.array([per_model(cloud_budget_bytes, k, float("inf"))
+                        for k in names], dtype=np.float64)
+
+    net = np.where(W[:, :, None] > 0, W[:, :, None] / bw[None, None, :]
+                   + rtt_s, 0.0)
+    totals = E[:, :, None] + C[:, :, None] + net               # (M, S, B)
+    totals = np.where((L > budgets[:, None])[:, :, None], np.inf, totals)
+    splits = (S - 1) - np.argmin(totals[:, ::-1, :], axis=1)   # (M, B)
+
+    out: Dict[str, VecSearchResult] = {}
+    cols = np.arange(len(bw))
+    for i, k in enumerate(names):
+        s = splits[i]
+        out[k] = VecSearchResult(
+            bandwidths_bps=bw, splits=s, total_s=totals[i][s, cols],
+            edge_s=E[i][s], cloud_s=C[i][s], net_s=net[i][s, cols])
+    return out
 
 
 def fixed_split(graph: Sequence[LayerCost]) -> int:

@@ -158,6 +158,8 @@ def _cell(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):    # older jax: one dict per program
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     colls = parse_collectives(hlo)
     coll_sum = summarize(colls)

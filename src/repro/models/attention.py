@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import shard_map
 from .layers import apply_rope, dense, linear_spec
 from .sharding import ParamSpec, current_mesh, shard, spec
 
@@ -307,11 +308,10 @@ def _sp_flash_decode(cfg, q, kc, vc, k_new, v_new, pos):
                          for a in batch_axes])) if batch_axes else 1, 1):
         bspec = None  # batch=1 long-decode: keep batch replicated
     cspec = P(bspec, "model", None)
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(bspec), cspec, cspec, P(bspec), P(bspec), P("model")),
         out_specs=(P(bspec), cspec, cspec),
-        check_vma=False,
     )(q, kc, vc, k_new, v_new, tglob_full)
 
 

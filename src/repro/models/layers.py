@@ -87,10 +87,11 @@ def int8_ring_proj(h: jax.Array, w: jax.Array) -> jax.Array:
         return ring_allreduce_int8(part, "model", rank=r_[0])
 
     hspec = P(*((None,) * (h.ndim - 1) + ("model",)))
-    return jax.shard_map(local, mesh=mesh,
-                         in_specs=(hspec, P("model", None), P("model")),
-                         out_specs=P(*((None,) * h.ndim)),
-                         axis_names={"model"}, check_vma=False)(h, w, ranks)
+    from ..compat import shard_map
+    return shard_map(local, mesh=mesh,
+                     in_specs=(hspec, P("model", None), P("model")),
+                     out_specs=P(*((None,) * h.ndim)),
+                     axis_names={"model"})(h, w, ranks)
 
 
 def _use_int8_ring() -> bool:

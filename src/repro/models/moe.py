@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
+
 from .layers import linear_spec
 from .sharding import current_mesh, shard, spec
 
@@ -163,12 +165,11 @@ def moe_ffn(cfg, p: Dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
         # tokens: sharded over the batch axes, replicated over `model`
         tok_spec = P(batch_axes if batch_axes else None, None)
-        y = jax.shard_map(
+        y = shard_map(
             shard_fn, mesh=mesh,
             in_specs=(tok_spec, tok_spec, tok_spec,
                       P("model"), P("model"), P("model")),
             out_specs=tok_spec,
-            check_vma=False,
         )(x2d, gates, eids, wg, wu, wd)
 
     y = y.reshape(B, S, d)

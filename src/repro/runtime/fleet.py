@@ -1,0 +1,414 @@
+"""Fleet-scale edge-cloud collaborative serving simulator.
+
+Composes the pieces that exist elsewhere in the repo but never meet:
+
+* per-robot ``RoboECC`` controllers (``core/controller.py``) planned by the
+  **vectorized** Alg. 1 sweep (``core/segmentation.search_vec`` /
+  ``sweep_search``) — one array pass plans every (model × bandwidth) cell;
+* per-robot ``NetworkSim`` bandwidth traces (``core/network.py``), each
+  robot on its own seeded link;
+* ``MicroBatcher`` / ``StragglerMitigator`` / ``ElasticPool`` primitives
+  (``runtime/scheduler.py``) — cloud-side work is batched per replica,
+  hedged across replicas on tail events, and replica loss/join is detected
+  via heartbeats;
+* shared cloud replicas with **finite capacity**: each replica serializes
+  its batches (a ``busy_until`` clock), so queueing delay emerges when the
+  fleet outruns cloud capacity;
+* elasticity: a full cloud outage triggers every controller's ``replan()``
+  (degrading to edge-only, split = n); the first replica re-join replans
+  again and restores collaborative splits.
+
+Everything is deterministic under ``FleetConfig.seed`` — the simulator
+keeps its own ``numpy`` RNG and never reads wall-clock time.  Units follow
+the repo conventions: bandwidth in BYTES/s, latency in seconds.
+
+Simulation loop (one control tick = ``tick_s`` seconds):
+
+1. live replicas heartbeat into the ``ElasticPool``; scheduled loss/join
+   events silence/revive replicas, and pool transitions fire ``replan()``;
+2. every idle robot takes one control step (closed loop: a robot has at
+   most one outstanding request and issues the next observation once the
+   previous action returns): look up the planned split for its current
+   bandwidth in the precomputed plan table, clamp it into the
+   parameter-sharing pool (moves outside the pool would ship weights), and
+   price the edge/net components with O(1) ``GraphArrays`` indexing;
+3. robots with cloud-side work enqueue it on the least-loaded replica's
+   ``MicroBatcher``; formed batches execute with partial overlap (the
+   batching win), a lognormal straggler multiplier, and p95 hedging;
+4. completions are folded into per-robot latency series, reported as
+   per-robot p50/p95 plus fleet-aggregate latency and throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..configs import get_config
+from ..core.controller import RoboECC
+from ..core.hardware import A100, ORIN, DeviceSpec
+from ..core.network import NetworkSim, TraceConfig, generate_trace
+from ..core.segmentation import GraphArrays, graph_arrays, sweep_search
+from ..core.structure import LayerCost, Workload, build_graph
+from .scheduler import ElasticPool, MicroBatcher, Request, StragglerMitigator
+
+
+# ------------------------------------------------------------------ config
+@dataclasses.dataclass(frozen=True)
+class ReplicaEvent:
+    """Scheduled availability change: replica leaves or joins at ``tick``."""
+    tick: int
+    replica: str
+    kind: str                    # "leave" | "join"
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    """Fleet run description.  ``archs`` are cycled across ``n_robots``
+    (robot i runs ``archs[i % len(archs)]``), so ≥3 entries gives a
+    heterogeneous fleet.  Bandwidths in bytes/s, times in seconds."""
+    n_robots: int = 16
+    archs: Sequence[str] = ("openvla-7b", "cogact-7b", "llama3.2-3b")
+    n_ticks: int = 200
+    tick_s: float = 0.05
+    rtt_s: float = 0.005
+    n_replicas: int = 2
+    batch_size: int = 8
+    batch_wait_s: float = 0.02
+    nominal_bw_bps: float = 10e6
+    bw_grid_points: int = 32          # plan-table resolution (log-spaced)
+    bw_grid_lo_bps: float = 0.05e6
+    bw_grid_hi_bps: float = 40e6
+    # per-robot cloud-side weight budget (bytes).  Finite by default — a
+    # shared cloud serving many robots cannot host every full model, which
+    # is what makes the splits collaborative (paper Tab. II uses 12.1 GB)
+    cloud_budget_bytes: Optional[float] = 12.1e9
+    pool_overhead_target: float = 0.026
+    batch_overlap: float = 0.8        # fraction of non-max work overlapped
+    straggler_sigma: float = 0.2      # lognormal sigma on replica exec time
+    tail_prob: float = 0.01           # chance of a tail event per execution
+    tail_scale: float = 5.0           # tail slowdown multiplier
+    heartbeat_timeout_s: float = 0.12
+    trace: TraceConfig = dataclasses.field(default_factory=TraceConfig)
+    workload: Workload = dataclasses.field(default_factory=Workload)
+    edge: DeviceSpec = ORIN
+    cloud: DeviceSpec = A100
+    replica_events: Sequence[ReplicaEvent] = ()
+    seed: int = 0
+
+
+def outage_schedule(cfg: FleetConfig) -> List[ReplicaEvent]:
+    """Default chaos schedule: one replica leaves and re-joins mid-run
+    (capacity crunch), then ALL replicas drop for a window (full outage →
+    every controller replans to edge-only) and come back."""
+    T = cfg.n_ticks
+    ev = []
+    if cfg.n_replicas > 1:
+        ev += [ReplicaEvent(T // 5, "cloud1", "leave"),
+               ReplicaEvent(2 * T // 5, "cloud1", "join")]
+    for i in range(cfg.n_replicas):
+        ev.append(ReplicaEvent(3 * T // 5, f"cloud{i}", "leave"))
+        ev.append(ReplicaEvent(7 * T // 10, f"cloud{i}", "join"))
+    return sorted(ev, key=lambda e: e.tick)
+
+
+# ------------------------------------------------------------------ report
+@dataclasses.dataclass(frozen=True)
+class RobotStats:
+    name: str
+    arch: str
+    n_requests: int
+    mean_s: float
+    p50_s: float
+    p95_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetReport:
+    robots: List[RobotStats]
+    n_requests: int
+    fleet_p50_s: float
+    fleet_p95_s: float
+    throughput_rps: float        # completed requests / simulated second
+    n_hedged: int
+    n_replans: int
+    n_outage_completions: int    # requests served edge-only during outages
+
+    def summary(self) -> str:
+        return (f"{len(self.robots)} robots, {self.n_requests} requests: "
+                f"fleet p50 {self.fleet_p50_s * 1e3:.1f} ms, "
+                f"p95 {self.fleet_p95_s * 1e3:.1f} ms, "
+                f"{self.throughput_rps:.1f} req/s, "
+                f"{self.n_hedged} hedges, {self.n_replans} replans")
+
+
+@dataclasses.dataclass
+class _CloudWork:
+    robot: int
+    issued_s: float              # control step that produced this request
+    ready_s: float               # edge compute + uplink done at this time
+    edge_s: float
+    net_s: float
+    cloud_s: float
+
+
+# --------------------------------------------------------------- simulator
+class FleetSimulator:
+    """Event-driven fleet run; see module docstring for the loop."""
+
+    def __init__(self, cfg: FleetConfig):
+        if cfg.n_robots < 1 or cfg.n_replicas < 1 or not cfg.archs:
+            raise ValueError("fleet needs >=1 robot, >=1 replica and >=1 arch")
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self._dead_cloud = cfg.cloud.with_eta(1e-12, 1e-12)
+
+        # one graph + cost-array set per arch, shared by all its robots
+        self.arch_of: List[str] = [cfg.archs[i % len(cfg.archs)]
+                                   for i in range(cfg.n_robots)]
+        archs = list(dict.fromkeys(self.arch_of))
+        self.graphs: Dict[str, List[LayerCost]] = {
+            a: build_graph(get_config(a), cfg.workload) for a in archs}
+        self.arrays: Dict[str, GraphArrays] = {
+            a: graph_arrays(g, cfg.edge, cfg.cloud,
+                            input_bytes=cfg.workload.input_bytes)
+            for a, g in self.graphs.items()}
+
+        # vectorized Alg. 1 plan table: (model × bandwidth-bin) -> split
+        self.bw_grid = np.geomspace(cfg.bw_grid_lo_bps, cfg.bw_grid_hi_bps,
+                                    cfg.bw_grid_points)
+        # geometric midpoints: searchsorted on these snaps a bandwidth to
+        # the NEAREST grid bin in log space (plain searchsorted on the grid
+        # would always round up to the plan of a faster link)
+        self._bw_mid = np.sqrt(self.bw_grid[:-1] * self.bw_grid[1:])
+        plans = sweep_search(self.graphs, cfg.edge, cfg.cloud, self.bw_grid,
+                             cfg.cloud_budget_bytes, rtt_s=cfg.rtt_s,
+                             input_bytes=cfg.workload.input_bytes)
+        self.plan: Dict[str, np.ndarray] = {a: plans[a].splits for a in archs}
+
+        self.controllers: List[RoboECC] = [
+            RoboECC(get_config(a), cfg.edge, cfg.cloud,
+                    workload=cfg.workload,
+                    cloud_budget_bytes=cfg.cloud_budget_bytes,
+                    pool_overhead_target=cfg.pool_overhead_target,
+                    nominal_bw_bps=cfg.nominal_bw_bps,
+                    graph=self.graphs[a])
+            for a in self.arch_of]
+        self.nets: List[NetworkSim] = [
+            NetworkSim(generate_trace(cfg.n_ticks + 1, cfg.trace,
+                                      seed=cfg.seed * 100_003 + i),
+                       tick_s=cfg.tick_s, rtt_s=cfg.rtt_s)
+            for i in range(cfg.n_robots)]
+
+        self.replica_names = [f"cloud{i}" for i in range(cfg.n_replicas)]
+        self.pool = ElasticPool(on_change=self._on_replicas,
+                                timeout_s=cfg.heartbeat_timeout_s)
+        self.batchers: Dict[str, MicroBatcher] = {
+            r: MicroBatcher(cfg.batch_size, cfg.batch_wait_s)
+            for r in self.replica_names}
+        self.mitigator = StragglerMitigator()
+        self.busy_until: Dict[str, float] = {r: 0.0
+                                             for r in self.replica_names}
+
+        self._down: set = set()
+        self._cloud_up = True
+        self._pending: Dict[int, _CloudWork] = {}
+        self._next_wid = 0
+        self.next_free: List[float] = [0.0] * cfg.n_robots
+        self.latencies: List[List[float]] = [[] for _ in range(cfg.n_robots)]
+        self.n_hedged = 0
+        self.n_replans = 0
+        self.n_outage_completions = 0
+
+    # ----------------------------------------------------------- elasticity
+    def _on_replicas(self, live: List[str]) -> None:
+        """ElasticPool transition: full outage → every robot replans to
+        edge-only (split = n); first re-join → replan restores Alg. 1."""
+        cfg = self.cfg
+        if not live and self._cloud_up:
+            self._cloud_up = False
+            for ctl in self.controllers:
+                ctl.replan(cloud=self._dead_cloud,
+                           nominal_bw_bps=cfg.nominal_bw_bps)
+                self.n_replans += 1
+        elif live and not self._cloud_up:
+            self._cloud_up = True
+            for ctl in self.controllers:
+                ctl.replan(cloud=cfg.cloud,
+                           cloud_budget_bytes=cfg.cloud_budget_bytes,
+                           nominal_bw_bps=cfg.nominal_bw_bps)
+                self.n_replans += 1
+
+    # ------------------------------------------------------------- planning
+    def _planned_split(self, robot: int, bw_bps: float) -> int:
+        """Plan-table lookup (vectorized Alg. 1 result), clamped into the
+        robot's parameter-sharing pool — the split may only move where
+        weights are already resident on both tiers."""
+        arch = self.arch_of[robot]
+        k = int(np.searchsorted(self._bw_mid, bw_bps))
+        split = int(self.plan[arch][k])
+        p = self.controllers[robot].pool
+        return int(np.clip(split, p.start, p.end))
+
+    # ------------------------------------------------------------ execution
+    def _complete(self, robot: int, issued_s: float, latency_s: float) -> None:
+        """Fold a finished request into the robot's series and release the
+        robot's control loop (closed loop: one outstanding request each)."""
+        self.latencies[robot].append(latency_s)
+        self.next_free[robot] = issued_s + latency_s
+
+    def _execute(self, requests: Sequence[Request], live: List[str]) -> None:
+        """Run one formed batch on the best replica, hedging stragglers."""
+        cfg = self.cfg
+        items = [self._pending.pop(rq.rid) for rq in requests]
+        ready = max(it.ready_s for it in items)
+        costs = [it.cloud_s for it in items]
+        peak = max(costs)
+        # batched execution: the heaviest member bounds the pass; the rest
+        # overlaps all but (1 - batch_overlap) of its work
+        base = peak + (sum(costs) - peak) * (1.0 - cfg.batch_overlap)
+
+        def exec_fn(replica: str) -> float:
+            wait = max(0.0, self.busy_until[replica] - ready)
+            slow = float(np.exp(self.rng.normal(0.0, cfg.straggler_sigma)))
+            if self.rng.random() < cfg.tail_prob:
+                slow *= cfg.tail_scale
+            return wait + base * slow
+
+        out = self.mitigator.run(list(live), exec_fn)
+        if out.hedged:
+            self.n_hedged += 1
+        self.busy_until[out.winner] = ready + out.latency_s
+        for it in items:
+            self._complete(it.robot, it.issued_s, it.edge_s + it.net_s
+                           + (ready - it.ready_s) + out.latency_s)
+
+    def _fallback_one(self, it: _CloudWork) -> None:
+        """Cloud unavailable with work in flight: re-execute the request
+        entirely on its robot's edge device (uplink time already spent is
+        kept as sunk cost)."""
+        arrays = self.arrays[self.arch_of[it.robot]]
+        edge_only = float(arrays.edge_s[arrays.n])
+        self._complete(it.robot, it.issued_s,
+                       it.edge_s + it.net_s + edge_only)
+        self.n_outage_completions += 1
+
+    def _fallback(self, requests: Sequence[Request]) -> None:
+        for rq in requests:
+            self._fallback_one(self._pending.pop(rq.rid))
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> FleetReport:
+        cfg = self.cfg
+        events = sorted(cfg.replica_events, key=lambda e: e.tick)
+        ei = 0
+        for tick in range(cfg.n_ticks):
+            now = tick * cfg.tick_s
+            while ei < len(events) and events[ei].tick <= tick:
+                ev = events[ei]
+                (self._down.add if ev.kind == "leave"
+                 else self._down.discard)(ev.replica)
+                ei += 1
+            for r in self.replica_names:
+                if r not in self._down:
+                    self.pool.heartbeat(r, now)
+            # control plane: heartbeat-timeout view (drives replan())
+            live = self.pool.live(now)
+            # data plane: fail-fast — connections to a dead replica error
+            # immediately, before the heartbeat timeout notices
+            routable = [r for r in live if r not in self._down]
+
+            # ---- robots take one control step each (closed loop: a robot
+            # issues its next observation once the previous action returned)
+            for i in range(cfg.n_robots):
+                net = self.nets[i]
+                bw = net.now_bps
+                net.step()                      # link evolves every tick
+                if now < self.next_free[i]:
+                    continue                    # previous request in flight
+                arrays = self.arrays[self.arch_of[i]]
+                if self._cloud_up:
+                    split = self._planned_split(i, bw)
+                    e, c, t = arrays.latency(split, bw, cfg.rtt_s)
+                else:
+                    e, c, t = float(arrays.edge_s[arrays.n]), 0.0, 0.0
+                if c > 0.0 and routable:
+                    wid = self._next_wid
+                    self._next_wid += 1
+                    work = _CloudWork(i, now, now + e + t, e, t, c)
+                    self._pending[wid] = work
+                    self.next_free[i] = float("inf")   # until completion
+                    replica = self.mitigator.pick_primary(routable)
+                    self.batchers[replica].add(Request(wid, now + e + t, 0))
+                elif c > 0.0:
+                    # planned a collaborative split but no replica accepts
+                    # work (undetected outage window): edge re-execution
+                    self._fallback_one(_CloudWork(i, now, now + e + t,
+                                                  e, t, c))
+                else:
+                    self._complete(i, now, e + t)
+                    if not self._cloud_up:
+                        self.n_outage_completions += 1
+
+            # ---- replicas that died with queued work: re-route or fall back
+            for r in self.replica_names:
+                if r in self._down and self.batchers[r].queue:
+                    if routable:
+                        for rq in list(self.batchers[r].queue):
+                            self.batchers[self.mitigator.pick_primary(
+                                routable)].add(rq)
+                        self.batchers[r].queue.clear()
+                    else:
+                        batch = self.batchers[r].flush(now)
+                        while batch is not None:
+                            self._fallback(batch.requests)
+                            batch = self.batchers[r].flush(now)
+
+            # ---- form + execute batches per accepting replica
+            end = now + cfg.tick_s
+            for r in routable:
+                batch = self.batchers[r].maybe_form(end)
+                while batch is not None:
+                    self._execute(batch.requests, routable)
+                    batch = self.batchers[r].maybe_form(end)
+
+        # ---- drain whatever is still queued at the end of the run
+        end = cfg.n_ticks * cfg.tick_s
+        routable = [r for r in self.replica_names if r not in self._down]
+        for r in self.replica_names:
+            batch = self.batchers[r].flush(end)
+            while batch is not None:
+                if routable:
+                    self._execute(batch.requests, routable)
+                else:
+                    self._fallback(batch.requests)
+                batch = self.batchers[r].flush(end)
+        return self._report()
+
+    # --------------------------------------------------------------- report
+    def _report(self) -> FleetReport:
+        cfg = self.cfg
+        robots = []
+        for i, lats in enumerate(self.latencies):
+            xs = np.asarray(lats if lats else [0.0])
+            robots.append(RobotStats(
+                name=f"robot{i:03d}", arch=self.arch_of[i],
+                n_requests=len(lats), mean_s=float(xs.mean()),
+                p50_s=float(np.percentile(xs, 50)),
+                p95_s=float(np.percentile(xs, 95))))
+        allx = np.asarray([x for lats in self.latencies for x in lats]
+                          or [0.0])
+        sim_s = cfg.n_ticks * cfg.tick_s
+        return FleetReport(
+            robots=robots, n_requests=int(sum(r.n_requests for r in robots)),
+            fleet_p50_s=float(np.percentile(allx, 50)),
+            fleet_p95_s=float(np.percentile(allx, 95)),
+            throughput_rps=float(len(allx) / sim_s) if sim_s else 0.0,
+            n_hedged=self.n_hedged, n_replans=self.n_replans,
+            n_outage_completions=self.n_outage_completions)
+
+
+def run_fleet(cfg: FleetConfig) -> FleetReport:
+    """Convenience one-shot: build a ``FleetSimulator`` and run it."""
+    return FleetSimulator(cfg).run()

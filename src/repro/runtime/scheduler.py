@@ -49,10 +49,17 @@ class MicroBatcher:
         oldest = self.queue[0].arrival_s
         if (len(self.queue) >= self.batch_size
                 or now_s - oldest >= self.max_wait_s):
-            take = [self.queue.popleft()
-                    for _ in range(min(self.batch_size, len(self.queue)))]
-            return Batch(take, now_s)
+            return self.flush(now_s)
         return None
+
+    def flush(self, now_s: float) -> Optional[Batch]:
+        """Drain up to one batch regardless of size/deadline (used at tick
+        boundaries and on replica teardown; call repeatedly to empty)."""
+        if not self.queue:
+            return None
+        take = [self.queue.popleft()
+                for _ in range(min(self.batch_size, len(self.queue)))]
+        return Batch(take, now_s)
 
 
 class LatencyStats:

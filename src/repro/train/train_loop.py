@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..models.sharding import current_mesh, resolve
 from .compression import compressed_psum_tree
 from .optimizer import OptConfig, adamw_update
@@ -133,5 +134,5 @@ def _compressed_sync(grads: Tree) -> Tree:
         return jax.tree_util.tree_map(lambda x: x / n, g)
 
     specs = jax.tree_util.tree_map(lambda _: P(), grads)
-    return jax.shard_map(sync, mesh=mesh, in_specs=(specs,),
-                         out_specs=specs, check_vma=False)(grads)
+    return shard_map(sync, mesh=mesh, in_specs=(specs,),
+                     out_specs=specs)(grads)

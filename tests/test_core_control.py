@@ -120,3 +120,42 @@ def test_elastic_replan_cloud_only():
     dead = ORIN.with_eta(1e-9, 1e-9)
     seg = ctl.replan(edge=dead)
     assert seg.split == 0          # cloud-only fallback
+
+
+def test_elastic_pool_heartbeat_drives_replan_cycle():
+    """ElasticPool heartbeat timeout -> on_change -> RoboECC.replan():
+    losing the edge tier degrades to cloud-only (split=0); its re-join
+    re-runs Alg. 1 and restores the original collaborative split."""
+    from repro.runtime.scheduler import ElasticPool
+
+    cfg = get_config("openvla-7b")
+    ctl = RoboECC(cfg, ORIN, A100, cloud_budget_bytes=12.1e9)
+    s0, pool0 = ctl.split, ctl.pool
+    assert s0 > 0
+    dead_edge = ORIN.with_eta(1e-9, 1e-9)
+    replans = []
+
+    def on_change(live):
+        if "edge" in live:
+            seg = ctl.replan(edge=ORIN, cloud_budget_bytes=12.1e9)
+        else:
+            # cloud-only fallback must host the whole model: lift the budget
+            seg = ctl.replan(edge=dead_edge)
+        replans.append(seg.split)
+
+    pool = ElasticPool(on_change=on_change, timeout_s=1.0)
+    pool.heartbeat("edge", 0.0)
+    pool.heartbeat("cloud", 0.0)
+    assert pool.live(0.5) == ["cloud", "edge"]
+
+    pool.heartbeat("cloud", 2.0)          # edge silent past the timeout
+    assert pool.live(2.0) == ["cloud"]
+    assert ctl.split == 0                 # degraded to cloud-only
+    assert ctl.pool.contains(0)
+
+    pool.heartbeat("edge", 2.5)           # edge re-joins
+    assert pool.live(2.5) == ["cloud", "edge"]
+    assert ctl.split == s0                # Alg. 1 re-ran and restored plan
+    assert (ctl.pool.start, ctl.pool.end) == (pool0.start, pool0.end)
+    # on_change fired for join, loss, re-join (initial join included)
+    assert replans[-2:] == [0, s0]

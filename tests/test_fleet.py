@@ -1,0 +1,157 @@
+"""Fleet simulator + vectorized Alg. 1: equivalence, determinism, elasticity."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.core import (Workload, build_graph, evaluate_split,
+                        exhaustive_best, graph_arrays, search, search_vec,
+                        sweep_search, total_weight_bytes)
+from repro.core.hardware import A100, ORIN
+from repro.runtime.fleet import (FleetConfig, FleetSimulator, ReplicaEvent,
+                                 outage_schedule, run_fleet)
+from repro.runtime.scheduler import MicroBatcher, Request
+
+BWS = np.geomspace(0.05e6, 100e6, 17)
+W = Workload()
+
+
+# ------------------------------------------------- vectorized Alg. 1 search
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_vectorized_search_matches_scalar_every_config(arch):
+    """search_vec must return the identical split to search/exhaustive_best
+    for every registered config across a bandwidth sweep and budgets."""
+    g = build_graph(get_config(arch), W)
+    for budget in (None, 12e9, 0.4 * total_weight_bytes(g)):
+        res = search_vec(g, ORIN, A100, BWS, cloud_budget_bytes=budget,
+                         input_bytes=W.input_bytes)
+        for j, bw in enumerate(BWS):
+            seg = search(g, ORIN, A100, float(bw), cloud_budget_bytes=budget,
+                         input_bytes=W.input_bytes)
+            assert int(res.splits[j]) == seg.split, (arch, budget, bw)
+            assert res.total_s[j] == pytest.approx(seg.total_s, rel=1e-12)
+            best = exhaustive_best(g, ORIN, A100, float(bw),
+                                   cloud_budget_bytes=budget,
+                                   input_bytes=W.input_bytes)
+            e, c, t = evaluate_split(g, best, ORIN, A100, float(bw),
+                                     input_bytes=W.input_bytes)
+            assert res.total_s[j] == pytest.approx(e + c + t, rel=1e-12)
+
+
+def test_sweep_search_matches_per_model_search_vec():
+    graphs = {k: build_graph(get_config(k), W) for k in sorted(ARCHS)}
+    sw = sweep_search(graphs, ORIN, A100, BWS, input_bytes=W.input_bytes)
+    for k, g in graphs.items():
+        one = search_vec(g, ORIN, A100, BWS, input_bytes=W.input_bytes)
+        assert np.array_equal(sw[k].splits, one.splits), k
+        np.testing.assert_allclose(sw[k].total_s, one.total_s, rtol=1e-12)
+
+
+def test_sweep_search_per_model_budgets():
+    graphs = {k: build_graph(get_config(k), W)
+              for k in ("openvla-7b", "llama3.2-3b")}
+    budgets = {"openvla-7b": 12e9, "llama3.2-3b": None}
+    sw = sweep_search(graphs, ORIN, A100, BWS, budgets,
+                      input_bytes=W.input_bytes)
+    for k, g in graphs.items():
+        one = search_vec(g, ORIN, A100, BWS, cloud_budget_bytes=budgets[k],
+                         input_bytes=W.input_bytes)
+        assert np.array_equal(sw[k].splits, one.splits), k
+
+
+def test_graph_arrays_latency_matches_evaluate_split():
+    g = build_graph(get_config("cogact-7b"), W)
+    ga = graph_arrays(g, ORIN, A100, input_bytes=W.input_bytes)
+    for s in (0, 1, len(g) // 2, len(g)):
+        ref = evaluate_split(g, s, ORIN, A100, 10e6, rtt_s=0.005,
+                             input_bytes=W.input_bytes)
+        got = ga.latency(s, 10e6, 0.005)
+        assert got == pytest.approx(ref, rel=1e-12)
+
+
+# ------------------------------------------------------------- MicroBatcher
+def test_microbatcher_flush_drains_partial_batches():
+    mb = MicroBatcher(batch_size=3, max_wait_s=10.0)
+    for i in range(4):
+        mb.add(Request(i, 0.0, 1))
+    assert mb.maybe_form(0.1) is not None        # full batch forms
+    assert mb.maybe_form(0.1) is None            # remainder under deadline
+    b = mb.flush(0.1)
+    assert b is not None and len(b.requests) == 1
+    assert mb.flush(0.1) is None
+
+
+# ------------------------------------------------------------------- fleet
+def _small_cfg(**kw) -> FleetConfig:
+    cfg = FleetConfig(n_robots=16, n_ticks=60, n_replicas=2,
+                      archs=("openvla-7b", "cogact-7b", "llama3.2-3b"),
+                      seed=3, **kw)
+    return cfg
+
+
+def test_fleet_heterogeneous_run_reports_sane_stats():
+    rep = run_fleet(_small_cfg())
+    assert len(rep.robots) == 16
+    assert len({r.arch for r in rep.robots}) == 3
+    assert rep.n_requests == sum(r.n_requests for r in rep.robots) > 0
+    assert rep.throughput_rps > 0
+    assert 0 < rep.fleet_p50_s <= rep.fleet_p95_s
+    for r in rep.robots:
+        assert r.n_requests > 0 and 0 < r.p50_s <= r.p95_s
+
+
+def test_fleet_deterministic_under_fixed_seed():
+    cfg = _small_cfg()
+    a, b = run_fleet(cfg), run_fleet(cfg)
+    assert a == b
+    c = run_fleet(dataclasses.replace(cfg, seed=99))
+    assert c.fleet_p50_s != a.fleet_p50_s or c.n_hedged != a.n_hedged
+
+
+def test_fleet_outage_triggers_replans_and_recovery():
+    cfg = _small_cfg()
+    cfg.replica_events = outage_schedule(cfg)
+    sim = FleetSimulator(cfg)
+    initial = [ctl.split for ctl in sim.controllers]
+    rep = sim.run()
+    # full outage: one replan per robot down (edge-only) + one per robot up
+    assert rep.n_replans == 2 * cfg.n_robots
+    assert rep.n_outage_completions > 0
+    # after recovery, re-running Alg. 1 restored the original plans
+    for ctl, s0 in zip(sim.controllers, initial):
+        assert ctl.split == s0 and ctl.pool.contains(ctl.split)
+
+
+def test_fleet_edge_only_during_outage():
+    """While the cloud tier is down, every controller's replan degrades to
+    edge-only (split == n)."""
+    cfg = _small_cfg()
+    # outage from tick 20, never recovers
+    cfg.replica_events = [ReplicaEvent(20, f"cloud{i}", "leave")
+                          for i in range(cfg.n_replicas)]
+    sim = FleetSimulator(cfg)
+    rep = sim.run()
+    assert rep.n_replans == cfg.n_robots
+    for i, ctl in enumerate(sim.controllers):
+        assert ctl.split == len(sim.graphs[sim.arch_of[i]])
+    # edge-only requests completed during the outage window
+    assert rep.n_outage_completions > 0
+
+
+def test_fleet_partial_replica_loss_keeps_serving():
+    cfg = _small_cfg()
+    cfg.replica_events = [ReplicaEvent(10, "cloud1", "leave"),
+                          ReplicaEvent(40, "cloud1", "join")]
+    rep = run_fleet(cfg)
+    assert rep.n_replans == 0            # cloud tier never fully vanished
+    assert rep.n_requests > 0 and rep.throughput_rps > 0
+
+
+def test_fleet_planned_splits_live_inside_pools():
+    cfg = _small_cfg()
+    sim = FleetSimulator(cfg)
+    for i in range(cfg.n_robots):
+        p = sim.controllers[i].pool
+        for bw in (0.1e6, 1e6, 10e6, 40e6):
+            assert p.start <= sim._planned_split(i, bw) <= p.end

@@ -29,13 +29,14 @@ def test_ring_allreduce_int8_sums():
     print(_run("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh, shard_map
 from repro.train.compression import ring_allreduce_int8
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 x = jnp.stack([jnp.full((33,), float(i + 1)) for i in range(8)])  # (8, 33)
 def f(xs):
     return ring_allreduce_int8(xs[0], "data")
-y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P("data", None),),
-                          out_specs=P(None), check_vma=False))(x)
+y = jax.jit(shard_map(f, mesh=mesh, in_specs=(P("data", None),),
+                      out_specs=P(None)))(x)
 expect = float(sum(range(1, 9)))
 err = float(jnp.max(jnp.abs(y - expect)))
 assert err < 0.25, err   # int8 ring quantisation noise bound
@@ -52,8 +53,8 @@ from repro.models import build
 from repro.models.sharding import make_rules, sharding_tree, use_mesh
 from repro.train.optimizer import OptConfig
 from repro.train.train_loop import init_state, make_train_step
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = get_config("llama3.2-3b").reduced().replace(n_layers=2)
 model = build(cfg)
 rules = make_rules(cfg, mesh, "train")
@@ -91,8 +92,8 @@ x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
 # single-device reference
 y_ref, aux_ref = moe_ffn(cfg, params, x)
 # 1x8 mesh: experts sharded over model
-mesh = jax.make_mesh((1, 8), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh = make_mesh((1, 8), ("data", "model"))
 rules = make_rules(cfg, mesh, "train")
 with use_mesh(mesh, rules):
     shard_p = sharding_tree(specs, mesh, rules)
@@ -112,12 +113,11 @@ def test_dryrun_module_entrypoint_tiny():
     code = """
 import repro.launch.dryrun as dr
 import repro.launch.mesh as mm
-import jax
+from repro.compat import make_mesh
 def small(*, multi_pod=False):
     shape = (2, 2, 2) if multi_pod else (2, 4)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,)*len(axes))
+    return make_mesh(shape, axes)
 dr.make_production_mesh = small
 import repro.configs as C
 C.ARCHS["mamba2-1.3b"] = C.get_config("mamba2-1.3b").replace(n_layers=2)

@@ -1,5 +1,7 @@
 """Structure model (Eq.1) + hardware model (Eq.2) invariants."""
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import ASSIGNED, get_config

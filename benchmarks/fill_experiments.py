@@ -10,7 +10,7 @@ import os
 
 from .roofline import ARTIFACT_DIR, markdown, table
 
-EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+EXP = os.path.join(os.path.dirname(__file__), "..", "docs", "EXPERIMENTS.md")
 
 
 def dryrun_status() -> str:

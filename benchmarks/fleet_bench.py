@@ -1,15 +1,20 @@
 """Fleet-scale serving benchmark: vectorized planner + fleet simulator.
 
-Two measurements:
+Three measurements:
 
 1. **Planner**: a full bandwidth-sweep plan (every registered config × a
    log-spaced bandwidth grid) via the scalar Alg. 1 loop vs the vectorized
    ``sweep_search`` — reports wall time of each and the speedup, and checks
-   the two return identical splits everywhere.
+   the two return identical splits everywhere (incl. the codec axis vs the
+   scalar ``search_joint`` oracle).
 2. **Fleet**: an end-to-end ``FleetSimulator`` run (default 24 robots over
    4 heterogeneous model configs, 3 cloud replicas, with a mid-run capacity
    crunch and a full outage window) — reports per-robot p50/p95 latency and
    fleet-aggregate latency/throughput.
+3. **Codecs**: the same fleet pinned to a constrained link (default
+   2 MB/s mean) under each split-boundary codec — identity vs int8 vs int4
+   vs the joint codec axis — reporting fleet p50/p95 per codec (the
+   compression-in-the-loop win recorded in docs/EXPERIMENTS.md §Perf).
 
     PYTHONPATH=src python benchmarks/fleet_bench.py [--robots N] [--ticks T]
 
@@ -25,12 +30,14 @@ from typing import List
 import numpy as np
 
 from repro.configs import ARCHS, get_config
-from repro.core import Workload, build_graph, search, sweep_search
+from repro.core import (TraceConfig, Workload, build_graph, search,
+                        search_joint, sweep_search)
 from repro.core.hardware import A100, ORIN
 from repro.runtime.fleet import (FleetConfig, FleetReport, outage_schedule,
                                  run_fleet)
 
 DEFAULT_ARCHS = ("openvla-7b", "cogact-7b", "llama3.2-3b", "glm4-9b")
+CODEC_AXIS = ("identity", "int8", "int4")
 
 
 # ---------------------------------------------------------------- planner
@@ -61,6 +68,37 @@ def bench_planner(n_bw: int = 64, repeats: int = 3):
     return scalar_s, vec_s, len(graphs) * n_bw, mism
 
 
+def bench_planner_codecs(n_bw: int = 64, repeats: int = 3):
+    """Same comparison with the codec axis enabled: scalar ``search_joint``
+    per (config × bandwidth) vs one vectorized (M, C, S, B) pass.
+
+    Returns (scalar_s, vec_s, n_cells, mismatches) where a mismatch is a
+    differing split OR codec."""
+    w = Workload()
+    graphs = {k: build_graph(get_config(k), w) for k in sorted(ARCHS)}
+    bws = np.geomspace(0.05e6, 100e6, n_bw)
+
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        scalar = {k: [search_joint(g, ORIN, A100, float(bw), CODEC_AXIS,
+                                   input_bytes=w.input_bytes)
+                      for bw in bws]
+                  for k, g in graphs.items()}
+    scalar_s = (time.perf_counter() - t0) / repeats
+
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        vec = sweep_search(graphs, ORIN, A100, bws,
+                           input_bytes=w.input_bytes, codecs=CODEC_AXIS)
+    vec_s = (time.perf_counter() - t0) / repeats
+
+    mism = sum(int(vec[k].splits[j]) != scalar[k][j].split
+               or vec[k].codec_names[vec[k].codec_idx[j]]
+               != scalar[k][j].codec
+               for k in graphs for j in range(n_bw))
+    return scalar_s, vec_s, len(graphs) * n_bw * len(CODEC_AXIS), mism
+
+
 # ------------------------------------------------------------------ fleet
 def fleet_config(n_robots: int = 24, n_ticks: int = 400, n_replicas: int = 3,
                  seed: int = 0, archs=DEFAULT_ARCHS) -> FleetConfig:
@@ -68,6 +106,28 @@ def fleet_config(n_robots: int = 24, n_ticks: int = 400, n_replicas: int = 3,
                       n_ticks=n_ticks, n_replicas=n_replicas, seed=seed)
     cfg.replica_events = outage_schedule(cfg)
     return cfg
+
+
+# ------------------------------------------------------------------ codecs
+def bench_codecs(n_robots: int = 16, n_ticks: int = 200, n_replicas: int = 3,
+                 seed: int = 0, mean_bw_bps: float = 2e6):
+    """Fleet latency per split-boundary codec on a constrained link.
+
+    Runs the same fleet (no outage events — isolate the transport effect)
+    with the link pinned around ``mean_bw_bps`` (default 2 MB/s, the
+    paper's degraded regime) once per codec, plus once with the full joint
+    codec axis.  Returns ``[(label, FleetReport)]``.
+    """
+    trace = TraceConfig(mean_bps=mean_bw_bps, bad_bps=mean_bw_bps / 4)
+    rows = []
+    for label, axis in (
+            [(c, (c,)) for c in CODEC_AXIS] + [("joint", CODEC_AXIS)]):
+        cfg = FleetConfig(n_robots=n_robots, archs=DEFAULT_ARCHS,
+                          n_ticks=n_ticks, n_replicas=n_replicas, seed=seed,
+                          codecs=axis, trace=trace,
+                          nominal_bw_bps=mean_bw_bps)
+        rows.append((label, run_fleet(cfg)))
+    return rows
 
 
 def print_report(rep: FleetReport) -> None:
@@ -90,9 +150,13 @@ def run(quiet: bool = False, n_robots: int = 24, n_ticks: int = 400,
     """CSV lines for benchmarks/run.py: name,us_per_call,derived."""
     scalar_s, vec_s, cells, mism = bench_planner()
     assert mism == 0, f"vectorized planner diverged on {mism} cells"
+    jscalar_s, jvec_s, jcells, jmism = bench_planner_codecs()
+    assert jmism == 0, f"codec-axis planner diverged on {jmism} cells"
     lines = [
         f"fleet_plan_scalar,{scalar_s * 1e6:.0f},{cells}cells",
         f"fleet_plan_vec,{vec_s * 1e6:.0f},x{scalar_s / vec_s:.1f}",
+        f"fleet_plan_codec_scalar,{jscalar_s * 1e6:.0f},{jcells}cells",
+        f"fleet_plan_codec_vec,{jvec_s * 1e6:.0f},x{jscalar_s / jvec_s:.1f}",
     ]
     t0 = time.perf_counter()
     rep = run_fleet(fleet_config(n_robots, n_ticks, n_replicas, seed))
@@ -103,12 +167,28 @@ def run(quiet: bool = False, n_robots: int = 24, n_ticks: int = 400,
         f"fleet_throughput,{rep.throughput_rps * 1e3:.0f},req_per_ks",
         f"fleet_sim_wall,{sim_wall * 1e6:.0f},{rep.n_requests}reqs",
     ]
+    codec_rows = bench_codecs(seed=seed)
+    for label, crep in codec_rows:
+        lines.append(f"fleet_codec_{label}_p95,{crep.fleet_p95_s * 1e6:.0f},"
+                     f"p50={crep.fleet_p50_s * 1e6:.0f}us")
     if not quiet:
         print(f"planner: scalar {scalar_s * 1e3:.1f} ms vs vectorized "
               f"{vec_s * 1e3:.2f} ms over {cells} (model × bandwidth) cells "
               f"-> x{scalar_s / vec_s:.1f}, identical splits")
+        print(f"planner+codec axis: scalar {jscalar_s * 1e3:.1f} ms vs "
+              f"vectorized {jvec_s * 1e3:.2f} ms over {jcells} "
+              f"(model × bandwidth × codec) cells "
+              f"-> x{jscalar_s / jvec_s:.1f}, identical (split, codec)")
         print_report(rep)
         print(f"sim wall time {sim_wall:.2f} s")
+        print(f"\ncodec comparison at 2 MB/s mean bandwidth "
+              f"({codec_rows[0][1].n_requests} reqs identity):")
+        print(f"{'codec':9s} {'p50 ms':>8s} {'p95 ms':>8s} {'req/s':>7s} "
+              f"{'switches':>8s}")
+        for label, crep in codec_rows:
+            print(f"{label:9s} {crep.fleet_p50_s * 1e3:8.1f} "
+                  f"{crep.fleet_p95_s * 1e3:8.1f} "
+                  f"{crep.throughput_rps:7.1f} {crep.n_codec_switches:8d}")
     return lines
 
 

@@ -58,12 +58,23 @@ def run(quiet=False):
     t = _time(jax.jit(lambda *a: ssd_ref.ssd(*a, 128)), x, dt, A, Bm, Cm)
     lines.append(f"kernel_ssd_oracle_cpu,{t * 1e6:.0f},B2T512H4P32N32")
 
+    # activation codec column: wall time + wire reduction per format
     from repro.kernels.activation_codec import ops as codec
+    from repro.kernels.activation_codec import ref as codec_ref
     x = jax.random.normal(key, (1024, 4096), jnp.bfloat16)
+    raw = 1024 * 4096 * 2
     t = _time(lambda a: codec.quantize(a)[0], x)
-    ratio = (1024 * 4096 * 2) / (1024 * 4096 + 1024 * 32 * 4)
-    lines.append(f"kernel_codec_oracle_cpu,{t * 1e6:.0f},"
+    ratio = raw / codec_ref.wire_bytes((1024, 4096))
+    lines.append(f"kernel_codec_int8_oracle_cpu,{t * 1e6:.0f},"
                  f"compression={ratio:.2f}x wire reduction")
+    t = _time(lambda a: codec.quantize_int4(a)[0], x)
+    ratio4 = raw / codec_ref.wire_bytes_int4((1024, 4096))
+    lines.append(f"kernel_codec_int4_oracle_cpu,{t * 1e6:.0f},"
+                 f"compression={ratio4:.2f}x wire reduction")
+    q4, s4 = codec.quantize_int4(x)
+    t = _time(lambda p, s: codec.dequantize_int4(p, s), q4, s4)
+    lines.append(f"kernel_codec_int4_dec_oracle_cpu,{t * 1e6:.0f},"
+                 f"packed {q4.shape[0]}x{q4.shape[1]}B")
     if not quiet:
         for ln in lines:
             print("  " + ln)

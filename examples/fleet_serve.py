@@ -5,6 +5,14 @@ cloud-side work is micro-batched per replica and hedged across replicas.
 Mid-run, one replica drops (capacity crunch), then the whole cloud tier
 goes dark — every controller replans to edge-only — and later recovers.
 
+Picking a codec: ``FleetConfig.codecs`` is the split-boundary transport
+axis (``core/codec.py`` names, preferred/lossless first).  The planner
+searches (model × split × bandwidth × codec) jointly, so each robot lands
+on the codec that minimises its end-to-end latency for its current link —
+identity on fast links (no quantisation error for free), int8/int4 as the
+link degrades.  Pin a single name (``codecs=("int8",)``) to force one
+format fleet-wide, or set ``max_codec_err`` to cap the accuracy proxy.
+
     PYTHONPATH=src python examples/fleet_serve.py
 """
 import numpy as np
@@ -16,6 +24,7 @@ cfg = FleetConfig(
     archs=("openvla-7b", "cogact-7b", "llama3.2-3b", "glm4-9b"),
     n_ticks=400,
     n_replicas=3,
+    codecs=("identity", "int8", "int4"),
     seed=0,
 )
 cfg.replica_events = outage_schedule(cfg)
@@ -24,10 +33,11 @@ for ev in cfg.replica_events:
 
 rep = run_fleet(cfg)
 
-print(f"\n{'robot':9s} {'arch':22s} {'n':>4s} {'p50 ms':>8s} {'p95 ms':>8s}")
+print(f"\n{'robot':9s} {'arch':22s} {'n':>4s} {'p50 ms':>8s} {'p95 ms':>8s} "
+      f"{'codec':>8s}")
 for r in rep.robots:
     print(f"{r.name:9s} {r.arch:22s} {r.n_requests:4d} "
-          f"{r.p50_s * 1e3:8.1f} {r.p95_s * 1e3:8.1f}")
+          f"{r.p50_s * 1e3:8.1f} {r.p95_s * 1e3:8.1f} {r.codec:>8s}")
 
 print(f"\n{rep.summary()}")
 print(f"outage-window completions (edge-only): {rep.n_outage_completions}")

@@ -7,6 +7,19 @@ rise) move the split to the pool layer with the **maximum** transfer volume
 split.  Compute-load deltas inside the pool are ignored (paper: "impacts on
 both sides are negligible").
 
+Codec-aware extension (``core/codec.py``): given a ``codecs`` axis the move
+is **joint over (split × codec)**.  On "down" the pair minimising predicted
+transport seconds at ``NB_pred`` wins — compressing harder is an
+alternative (or complement) to retreating to the minimum-volume layer.  On
+"up" the split goes to the maximum-volume layer and the codec snaps to the
+lowest-error one — both are the same *greedy exploit* as the paper's up
+move, which jumps to the transfer-heaviest cut on a predicted rise without
+checking absolute transport cost.  The guard against flip-flapping under
+an oscillating link is the hold band ``[T_low, T_high]`` (sized by
+``calibrate_thresholds``), not the move itself.  Pass ``edge``/``cloud``
+DeviceSpecs to include encode/decode compute in the transport price
+(without them the move is wire-only).
+
 Threshold calibration follows the paper §V-C-2: ``T_high`` starts at the
 maximum historical ``ΔNB``; ``T_low`` is then grid-searched on a validation
 trace; ``T_high`` is re-searched afterwards (Fig. 7).
@@ -18,8 +31,10 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from .codec import resolve_codecs
+from .hardware import DeviceSpec
 from .pool import Pool
-from .segmentation import cut_bytes
+from .segmentation import codec_applies, cut_bytes, net_time
 from .structure import LayerCost
 
 
@@ -35,21 +50,55 @@ class AdjustmentDecision:
     moved: bool
     reason: str                  # "up" | "down" | "hold"
     delta_nb: float
+    codec: Optional[str] = None  # set when the move was joint (codecs given)
 
 
 def adjust(graph: Sequence[LayerCost], pool: Pool, current_split: int,
-           nb_pred_bps: float, nb_real_bps: float, thr: Thresholds
-           ) -> AdjustmentDecision:
+           nb_pred_bps: float, nb_real_bps: float, thr: Thresholds,
+           *, codecs: Optional[Sequence] = None,
+           current_codec: Optional[str] = None,
+           edge: Optional[DeviceSpec] = None,
+           cloud: Optional[DeviceSpec] = None,
+           max_err: Optional[float] = None) -> AdjustmentDecision:
     delta = nb_pred_bps - nb_real_bps
     splits = list(pool.splits())
     volumes = [cut_bytes(graph, s) for s in splits]
+    cs = resolve_codecs(codecs, max_err)
     if delta > thr.high:
         s = splits[int(np.argmax(volumes))]
-        return AdjustmentDecision(s, s != current_split, "up", delta)
+        codec = None
+        if cs is not None:
+            # greedy exploit, mirroring the paper's max-volume jump: the
+            # improving link ships the most faithful codec (anti-flap is
+            # the [T_low, T_high] hold band, see module docstring)
+            codec = min(cs, key=lambda c: c.err_bound).name
+        moved = s != current_split or (codec is not None
+                                       and codec != current_codec)
+        return AdjustmentDecision(s, moved, "up", delta, codec=codec)
     if delta < thr.low:
-        s = splits[int(np.argmin(volumes))]
-        return AdjustmentDecision(s, s != current_split, "down", delta)
-    return AdjustmentDecision(current_split, False, "hold", delta)
+        if cs is None:
+            s = splits[int(np.argmin(volumes))]
+            return AdjustmentDecision(s, s != current_split, "down", delta)
+        # joint move: minimise predicted transport seconds at NB_pred;
+        # ties break toward the earliest codec in the list, then the
+        # largest split — the planner's tie-break direction.  net_time
+        # applies the shared codec_applies gate, so the S=0 / S=n pool
+        # extremes are priced raw exactly as evaluate_split prices them
+        best = None
+        n = len(graph)
+        for ci, c in enumerate(cs):
+            for s, vol in sorted(zip(splits, volumes), reverse=True):
+                t = net_time(vol, nb_pred_bps, codec=c,
+                             applicable=codec_applies(s, n),
+                             edge=edge, cloud=cloud)
+                if best is None or t < best[0]:
+                    best = (t, ci, s)
+        _, ci, s = best
+        codec = cs[ci].name
+        moved = s != current_split or codec != current_codec
+        return AdjustmentDecision(s, moved, "down", delta, codec=codec)
+    return AdjustmentDecision(current_split, False, "hold", delta,
+                              codec=current_codec if cs is not None else None)
 
 
 def calibrate_thresholds(

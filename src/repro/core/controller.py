@@ -23,11 +23,12 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from .adjustment import AdjustmentDecision, Thresholds, adjust
+from .codec import Codec, CodecLike, get_codec, resolve_codecs
 from .hardware import DeviceSpec, layer_latency
 from .network import NetworkSim
 from .pool import Pool, build_pool
 from .predictor import Predictor, PredictorConfig, train_predictor
-from .segmentation import SegmentationResult, cut_bytes, evaluate_split, search
+from .segmentation import SegmentationResult, evaluate_split, search
 from .structure import LayerCost, Workload, build_graph
 
 
@@ -42,9 +43,18 @@ class TickResult:
     adjust_overhead_s: float
     bw_real_bps: float
     bw_pred_bps: float
+    codec: Optional[str] = None  # codec the transfer was priced with
 
 
 class RoboECC:
+    """End-to-end controller.  ``codec`` (name or ``Codec``) prices the cut
+    transfer through ``core/codec.py`` — inside Alg. 1, so compression
+    participates in the planned split, not just the transfer time.
+    ``adjust_codecs`` additionally lets the per-tick ΔNB move pick a codec
+    jointly with the split (the first list entry is the preferred /
+    lowest-error format).  ``use_codec=True`` is the backwards-compatible
+    alias for ``codec="int8"``."""
+
     def __init__(self, cfg: ModelConfig, edge: DeviceSpec, cloud: DeviceSpec,
                  *, workload: Workload = Workload(),
                  cloud_budget_bytes: Optional[float] = None,
@@ -52,11 +62,16 @@ class RoboECC:
                  nominal_bw_bps: float = 10e6,
                  thresholds: Optional[Thresholds] = None,
                  use_codec: bool = False,
+                 codec: CodecLike = None,
+                 adjust_codecs: Optional[List] = None,
                  graph: Optional[List[LayerCost]] = None):
         self.cfg = cfg
         self.edge_dev, self.cloud_dev = edge, cloud
         self.workload = workload
-        self.use_codec = use_codec
+        if codec is None and use_codec:
+            codec = "int8"
+        self.codec: Optional[Codec] = get_codec(codec)
+        self.adjust_codecs = resolve_codecs(adjust_codecs)
         # `graph` lets a fleet of same-arch robots share one prebuilt graph
         self.graph: List[LayerCost] = list(graph) if graph is not None \
             else build_graph(cfg, workload)
@@ -65,12 +80,16 @@ class RoboECC:
         self.seg: SegmentationResult = search(
             self.graph, edge, cloud, nominal_bw_bps,
             cloud_budget_bytes=cloud_budget_bytes,
-            input_bytes=workload.input_bytes)
+            input_bytes=workload.input_bytes, codec=self.codec)
         self.pool: Pool = build_pool(self.graph, self.seg.split,
                                      pool_overhead_target)
         self.split = self.seg.split
         self.thresholds = thresholds or Thresholds(high=2e6, low=-2e6)
         self.predictor: Optional[Predictor] = None
+
+    @property
+    def use_codec(self) -> bool:
+        return self.codec is not None and self.codec.name != "identity"
 
     # ------------------------------------------------------------- predictor
     def fit_predictor(self, historical_bps: np.ndarray,
@@ -82,15 +101,14 @@ class RoboECC:
     def latency_at(self, split: int, bw_bps: float, rtt_s: float = 0.0):
         """(edge_s, cloud_s, net_s) in seconds at ``split`` for a link of
         ``bw_bps`` BYTES/s — the modeled latency decomposition of one
-        inference without advancing any state."""
-        e, c, t = evaluate_split(self.graph, split, self.edge_dev,
-                                 self.cloud_dev, bw_bps, rtt_s=rtt_s,
-                                 input_bytes=self.workload.input_bytes)
-        if self.use_codec and 0 < split < len(self.graph):
-            wire = cut_bytes(self.graph, split)
-            # int8 codec: 2 bytes -> 1 byte + 1/32 scale overhead
-            t = (wire * (0.5 + 1 / 32.0)) / bw_bps + rtt_s
-        return e, c, t
+        inference without advancing any state.  Transport is priced through
+        ``self.codec`` (exact wire format bytes + encode/decode compute on
+        the two tiers), replacing the former hard-coded bf16→int8 halving
+        that ignored scale layout and codec compute entirely."""
+        return evaluate_split(self.graph, split, self.edge_dev,
+                              self.cloud_dev, bw_bps, rtt_s=rtt_s,
+                              input_bytes=self.workload.input_bytes,
+                              codec=self.codec)
 
     # ------------------------------------------------------------------ tick
     def tick(self, net: NetworkSim, adjust_enabled: bool = True) -> TickResult:
@@ -102,8 +120,20 @@ class RoboECC:
             window = net.window(self.predictor.cfg.window)
             bw_pred = self.predictor.predict(window)
             decision = adjust(self.graph, self.pool, self.split, bw_pred,
-                              bw_real, self.thresholds)
+                              bw_real, self.thresholds,
+                              codecs=self.adjust_codecs,
+                              current_codec=self.codec.name
+                              if self.codec else None,
+                              edge=self.edge_dev, cloud=self.cloud_dev)
             self.split = decision.split
+            if decision.codec is not None and (
+                    self.codec is None or decision.codec != self.codec.name):
+                # resolve within the adjuster's own axis, NOT the global
+                # registry — adjust_codecs may hold custom Codec instances
+                # (e.g. f32-raw variants) that a name lookup in CODECS
+                # would miss or silently swap for the bf16 defaults
+                self.codec = next(c for c in self.adjust_codecs
+                                  if c.name == decision.codec)
         overhead = time.perf_counter() - t0
         # the *next* tick's bandwidth is what the transfer actually sees
         net.step()
@@ -112,7 +142,8 @@ class RoboECC:
         return TickResult(split=self.split, edge_s=e, cloud_s=c, net_s=t,
                           total_s=e + c + t + (overhead if adjust_enabled else 0.0),
                           decision=decision, adjust_overhead_s=overhead,
-                          bw_real_bps=bw_real, bw_pred_bps=bw_pred)
+                          bw_real_bps=bw_real, bw_pred_bps=bw_pred,
+                          codec=self.codec.name if self.codec else None)
 
     # ------------------------------------------------------------ elasticity
     def replan(self, *, edge: Optional[DeviceSpec] = None,
@@ -135,7 +166,8 @@ class RoboECC:
             self.cloud_dev = cloud
         self.seg = search(self.graph, self.edge_dev, self.cloud_dev,
                           nominal_bw_bps, cloud_budget_bytes=cloud_budget_bytes,
-                          input_bytes=self.workload.input_bytes)
+                          input_bytes=self.workload.input_bytes,
+                          codec=self.codec)
         self.pool = build_pool(self.graph, self.seg.split,
                                self.pool_overhead_target)
         self.split = self.seg.split

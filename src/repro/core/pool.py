@@ -69,8 +69,20 @@ def build_pool(graph: Sequence[LayerCost], optimal_split: int,
                 overhead_frac=pooled / total if total else 0.0)
 
 
-def pool_transfer_profile(graph: Sequence[LayerCost], pool: Pool
-                          ) -> List[float]:
-    """Wire bytes for each candidate split inside the pool."""
-    from .segmentation import cut_bytes
-    return [cut_bytes(graph, s) for s in pool.splits()]
+def pool_transfer_profile(graph: Sequence[LayerCost], pool: Pool,
+                          codec=None) -> List[float]:
+    """Wire bytes for each candidate split inside the pool.  ``codec``
+    (name or ``core.codec.Codec``) reports the *compressed* on-wire bytes
+    a robot pinned to that codec would ship — a reporting/benchmark view;
+    the ΔNB adjuster prices its joint split×codec move itself in
+    ``core/adjustment.py`` (per-codec, with encode/decode compute)."""
+    from .codec import get_codec
+    from .segmentation import codec_applies, cut_bytes
+    c = get_codec(codec)
+    out = []
+    for s in pool.splits():
+        raw = cut_bytes(graph, s)
+        if c is not None and codec_applies(s, len(graph)):
+            raw = c.wire_bytes(raw)
+        out.append(raw)
+    return out

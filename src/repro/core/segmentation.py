@@ -12,14 +12,24 @@ cloud load budget ``B_cloud`` is exhausted, tracking the latency-optimal
 feasible split.  All inputs come from the analytic structure+hardware
 models, so the search itself costs microseconds (paper §IV-A-3: "extremely
 low computational load ... negligible overhead").
+
+Codec-aware transport (``core/codec.py``): a ``codec`` prices the cut
+activation as encode(edge) + compressed-wire + rtt + decode(cloud) for any
+**mid-graph** split (``0 < S < n``); the ``S = 0`` raw-observation upload
+and the ``S = n`` no-transfer extremes are codec-free by construction.
+``search_joint`` / the ``codecs=`` axis of ``search_vec``/``sweep_search``
+search (split × codec) jointly — latency ties break toward the earliest
+codec in the list, then the largest split within that codec (so put the
+preferred / lossless codec first).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional, Sequence, Union
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .codec import Codec, get_codec, resolve_codecs, transport_s
 from .hardware import DeviceSpec, layer_latency
 from .structure import LayerCost
 
@@ -35,6 +45,7 @@ class SegmentationResult:
     edge_load_bytes: float
     feasible: List[int]          # splits satisfying the budget
     latencies: List[float]       # total latency per candidate split index
+    codec: Optional[str] = None  # codec the transport was priced with
 
 
 def cut_bytes(graph: Sequence[LayerCost], split: int,
@@ -47,24 +58,51 @@ def cut_bytes(graph: Sequence[LayerCost], split: int,
     return graph[split - 1].out_transfer_bytes
 
 
+def codec_applies(split: int, n: int) -> bool:
+    """Codecs compress mid-graph activations only: the split-0 raw
+    observation ships as-is and the split-n extreme ships nothing."""
+    return 0 < split < n
+
+
+def net_time(wire_raw: float, bandwidth_bps: float, *, rtt_s: float = 0.0,
+             codec: Optional[Codec] = None, applicable: bool = True,
+             edge: Optional[DeviceSpec] = None,
+             cloud: Optional[DeviceSpec] = None) -> float:
+    """Transport seconds for one cut activation of ``wire_raw`` raw bytes.
+    With a codec (and ``applicable``): encode on ``edge`` + compressed wire
+    + rtt + decode on ``cloud``; otherwise raw wire + rtt.  Zero raw bytes
+    cost zero (bandwidth in BYTES/s throughout the repo)."""
+    if not wire_raw:
+        return 0.0
+    if codec is None or not applicable:
+        return wire_raw / bandwidth_bps + rtt_s
+    return transport_s(wire_raw, bandwidth_bps, codec, edge, cloud,
+                       rtt_s=rtt_s)
+
+
 def evaluate_split(graph: Sequence[LayerCost], split: int,
                    edge: DeviceSpec, cloud: DeviceSpec,
                    bandwidth_bps: float, *, rtt_s: float = 0.0,
-                   input_bytes: float = 0.0):
+                   input_bytes: float = 0.0,
+                   codec: Optional[Codec] = None):
     edge_s = sum(layer_latency(c, edge) for c in graph[:split])
     cloud_s = sum(layer_latency(c, cloud) for c in graph[split:])
     wire = cut_bytes(graph, split, input_bytes)
-    # bandwidth in BYTES/s throughout the repo
-    net_s = (wire / bandwidth_bps + rtt_s) if wire else 0.0
+    net_s = net_time(wire, bandwidth_bps, rtt_s=rtt_s, codec=codec,
+                     applicable=codec_applies(split, len(graph)),
+                     edge=edge, cloud=cloud)
     return edge_s, cloud_s, net_s
 
 
 def search(graph: Sequence[LayerCost], edge: DeviceSpec, cloud: DeviceSpec,
            bandwidth_bps: float, cloud_budget_bytes: Optional[float] = None,
-           *, rtt_s: float = 0.0, input_bytes: float = 0.0
-           ) -> SegmentationResult:
+           *, rtt_s: float = 0.0, input_bytes: float = 0.0,
+           codec: Optional[Codec] = None) -> SegmentationResult:
     """Alg. 1: scan S from n (edge-only) towards 0 while the cloud-side load
-    fits the budget; keep the latency-optimal feasible split."""
+    fits the budget; keep the latency-optimal feasible split.  ``codec``
+    prices mid-graph transport through ``core/codec.py`` (encode + wire +
+    decode), so compression participates in WHERE the cut lands."""
+    codec = get_codec(codec)
     n = len(graph)
     budget = cloud_budget_bytes if cloud_budget_bytes is not None else float("inf")
     feasible: List[int] = []
@@ -77,7 +115,8 @@ def search(graph: Sequence[LayerCost], edge: DeviceSpec, cloud: DeviceSpec,
         if cloud_load > budget:
             break                        # paper line 4: budget exhausted
         e, c, t = evaluate_split(graph, s, edge, cloud, bandwidth_bps,
-                                 rtt_s=rtt_s, input_bytes=input_bytes)
+                                 rtt_s=rtt_s, input_bytes=input_bytes,
+                                 codec=codec)
         total = e + c + t
         feasible.append(s)
         latencies.append(total)
@@ -89,7 +128,28 @@ def search(graph: Sequence[LayerCost], edge: DeviceSpec, cloud: DeviceSpec,
     return SegmentationResult(split=s, total_s=total, edge_s=e, cloud_s=c,
                               net_s=t, cloud_load_bytes=load,
                               edge_load_bytes=edge_load,
-                              feasible=feasible, latencies=latencies)
+                              feasible=feasible, latencies=latencies,
+                              codec=codec.name if codec else None)
+
+
+def search_joint(graph: Sequence[LayerCost], edge: DeviceSpec,
+                 cloud: DeviceSpec, bandwidth_bps: float,
+                 codecs: Sequence, cloud_budget_bytes: Optional[float] = None,
+                 *, rtt_s: float = 0.0, input_bytes: float = 0.0,
+                 max_err: Optional[float] = None) -> SegmentationResult:
+    """Scalar joint (split × codec) oracle: run Alg. 1 once per codec (in
+    list order) and keep the first strict latency winner — the tie-break
+    the vectorized codec axis reproduces (earliest codec in the list,
+    then the largest split within that codec).  The property-test oracle
+    for ``search_vec(codecs=...)``."""
+    cs = resolve_codecs(codecs, max_err)
+    best: Optional[SegmentationResult] = None
+    for c in cs:
+        seg = search(graph, edge, cloud, bandwidth_bps, cloud_budget_bytes,
+                     rtt_s=rtt_s, input_bytes=input_bytes, codec=c)
+        if best is None or seg.total_s < best.total_s:
+            best = seg
+    return best
 
 
 def exhaustive_best(graph: Sequence[LayerCost], edge: DeviceSpec,
@@ -123,15 +183,24 @@ class GraphArrays:
     """
     edge_s: np.ndarray          # prefix edge latency of layers [0, S)
     cloud_s: np.ndarray         # suffix cloud latency of layers [S, n)
-    wire_bytes: np.ndarray      # cut activation bytes at split S
+    wire_bytes: np.ndarray      # RAW cut activation bytes at split S
     cloud_load_bytes: np.ndarray  # weight bytes the cloud must host at S
     n: int
+    # devices the arrays were priced on — lets ``latency`` price codec
+    # encode/decode without re-threading DeviceSpecs through every caller
+    edge_dev: Optional[DeviceSpec] = None
+    cloud_dev: Optional[DeviceSpec] = None
 
-    def latency(self, split: int, bandwidth_bps: float, rtt_s: float = 0.0):
+    def latency(self, split: int, bandwidth_bps: float, rtt_s: float = 0.0,
+                codec: Optional[Codec] = None):
         """(edge_s, cloud_s, net_s) at one split — O(1) equivalent of
-        ``evaluate_split`` (bandwidth in bytes/s, result in seconds)."""
+        ``evaluate_split`` (bandwidth in bytes/s, result in seconds).
+        ``codec`` prices mid-graph transport through the codec (encode on
+        ``edge_dev``, decode on ``cloud_dev``)."""
         wire = self.wire_bytes[split]
-        net = wire / bandwidth_bps + rtt_s if wire else 0.0
+        net = net_time(wire, bandwidth_bps, rtt_s=rtt_s, codec=codec,
+                       applicable=codec_applies(split, self.n),
+                       edge=self.edge_dev, cloud=self.cloud_dev)
         return float(self.edge_s[split]), float(self.cloud_s[split]), net
 
 
@@ -155,26 +224,54 @@ def graph_arrays(graph: Sequence[LayerCost], edge: DeviceSpec,
     wire = np.array([cut_bytes(graph, s, input_bytes) for s in range(n + 1)],
                     dtype=np.float64)
     return GraphArrays(edge_s=edge_s, cloud_s=cloud_s, wire_bytes=wire,
-                       cloud_load_bytes=load, n=n)
+                       cloud_load_bytes=load, n=n,
+                       edge_dev=edge, cloud_dev=cloud)
 
 
 @dataclasses.dataclass(frozen=True)
 class VecSearchResult:
     """Alg. 1 results for a whole bandwidth sweep (arrays of shape ``(B,)``;
-    bandwidths in bytes/s, latencies in seconds)."""
+    bandwidths in bytes/s, latencies in seconds).  When the search ran with
+    a codec axis, ``codec_idx[b]`` indexes ``codec_names`` — the codec the
+    joint (split × codec) optimum chose at bandwidth ``b``."""
     bandwidths_bps: np.ndarray
     splits: np.ndarray           # optimal split per bandwidth (int)
     total_s: np.ndarray
     edge_s: np.ndarray
     cloud_s: np.ndarray
     net_s: np.ndarray
+    codec_idx: Optional[np.ndarray] = None
+    codec_names: Optional[Tuple[str, ...]] = None
+
+
+def _codec_wire_overhead(wire: np.ndarray, n: int, cs: Sequence[Codec],
+                         edge: DeviceSpec, cloud: DeviceSpec
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-(codec, split) compressed wire bytes and codec-compute seconds.
+
+    ``wire``: (n+1,) raw cut bytes.  Mid-graph splits (0 < S < n) with
+    traffic get the codec's wire factor and encode+decode overhead (both
+    linear in raw bytes); the extremes pass through raw.  Shapes (C, n+1).
+    """
+    app = np.zeros(n + 1, dtype=bool)
+    app[1:n] = True
+    app &= wire > 0
+    factors = np.array([c.wire_factor for c in cs], dtype=np.float64)
+    rates = np.array([c.encode_s_per_byte(edge) + c.decode_s_per_byte(cloud)
+                      for c in cs], dtype=np.float64)
+    wire_c = np.where(app[None, :], wire[None, :] * factors[:, None],
+                      wire[None, :])
+    ovh = np.where(app[None, :], wire[None, :] * rates[:, None], 0.0)
+    return wire_c, ovh
 
 
 def search_vec(graph: Sequence[LayerCost], edge: DeviceSpec,
                cloud: DeviceSpec, bandwidths_bps,
                cloud_budget_bytes: Optional[float] = None, *,
                rtt_s: float = 0.0, input_bytes: float = 0.0,
-               arrays: Optional[GraphArrays] = None) -> VecSearchResult:
+               arrays: Optional[GraphArrays] = None,
+               codecs: Optional[Sequence] = None,
+               max_err: Optional[float] = None) -> VecSearchResult:
     """Vectorized Alg. 1: optimal split for every bandwidth in one pass.
 
     Equivalent to calling ``search`` once per bandwidth (the scalar path is
@@ -185,23 +282,55 @@ def search_vec(graph: Sequence[LayerCost], edge: DeviceSpec,
     admit exactly the same splits.  Ties break towards the largest split,
     matching the scalar scan (it walks from S=n down and keeps strict
     improvements only).  Bandwidths in BYTES/s, latencies in seconds.
+
+    ``codecs`` adds a codec axis: the (codec × split × bandwidth) tensor is
+    evaluated in the same pass and the joint optimum per bandwidth is
+    returned (``codec_idx``/``codec_names``).  Equivalent to
+    ``search_joint`` per bandwidth: latency ties break toward the earliest
+    codec in the list, then the largest split within that codec.
+    ``max_err`` drops codecs whose ``err_bound`` exceeds it before the
+    search.
     """
     ga = arrays if arrays is not None else graph_arrays(
         graph, edge, cloud, input_bytes=input_bytes)
     bw = np.atleast_1d(np.asarray(bandwidths_bps, dtype=np.float64))
     budget = cloud_budget_bytes if cloud_budget_bytes is not None \
         else float("inf")
-    net = np.where(ga.wire_bytes[:, None] > 0,
-                   ga.wire_bytes[:, None] / bw[None, :] + rtt_s, 0.0)
-    totals = ga.edge_s[:, None] + ga.cloud_s[:, None] + net    # (n+1, B)
-    totals = np.where((ga.cloud_load_bytes > budget)[:, None], np.inf, totals)
-    # argmin over flipped split axis -> largest split wins ties (Alg. 1 order)
-    splits = ga.n - np.argmin(totals[::-1], axis=0)
+    cs = resolve_codecs(codecs, max_err)
     cols = np.arange(len(bw))
+    if cs is None:
+        net = np.where(ga.wire_bytes[:, None] > 0,
+                       ga.wire_bytes[:, None] / bw[None, :] + rtt_s, 0.0)
+        totals = ga.edge_s[:, None] + ga.cloud_s[:, None] + net   # (n+1, B)
+        totals = np.where((ga.cloud_load_bytes > budget)[:, None],
+                          np.inf, totals)
+        # argmin over flipped split axis -> largest split wins ties
+        splits = ga.n - np.argmin(totals[::-1], axis=0)
+        return VecSearchResult(
+            bandwidths_bps=bw, splits=splits, total_s=totals[splits, cols],
+            edge_s=ga.edge_s[splits], cloud_s=ga.cloud_s[splits],
+            net_s=net[splits, cols])
+
+    wire_c, ovh = _codec_wire_overhead(ga.wire_bytes, ga.n, cs, edge, cloud)
+    net = np.where(wire_c[:, :, None] > 0,
+                   wire_c[:, :, None] / bw[None, None, :] + rtt_s, 0.0) \
+        + ovh[:, :, None]                                      # (C, n+1, B)
+    totals = ga.edge_s[None, :, None] + ga.cloud_s[None, :, None] + net
+    totals = np.where((ga.cloud_load_bytes > budget)[None, :, None],
+                      np.inf, totals)
+    # flatten (codec, flipped-split): first occurrence of the min is the
+    # earliest codec at the largest split — the search_joint tie-break
+    S = ga.n + 1
+    flat = totals[:, ::-1, :].reshape(len(cs) * S, len(bw))
+    idx = np.argmin(flat, axis=0)
+    codec_idx = idx // S
+    splits = ga.n - idx % S
     return VecSearchResult(
-        bandwidths_bps=bw, splits=splits, total_s=totals[splits, cols],
+        bandwidths_bps=bw, splits=splits,
+        total_s=totals[codec_idx, splits, cols],
         edge_s=ga.edge_s[splits], cloud_s=ga.cloud_s[splits],
-        net_s=net[splits, cols])
+        net_s=net[codec_idx, splits, cols],
+        codec_idx=codec_idx, codec_names=tuple(c.name for c in cs))
 
 
 def sweep_search(graphs: Mapping[str, Sequence[LayerCost]], edge: DeviceSpec,
@@ -209,22 +338,29 @@ def sweep_search(graphs: Mapping[str, Sequence[LayerCost]], edge: DeviceSpec,
                  cloud_budget_bytes: Union[None, float,
                                            Mapping[str, Optional[float]]] = None,
                  *, rtt_s: float = 0.0,
-                 input_bytes: Union[float, Mapping[str, float]] = 0.0
+                 input_bytes: Union[float, Mapping[str, float]] = 0.0,
+                 codecs: Optional[Sequence] = None,
+                 max_err: Optional[float] = None
                  ) -> Dict[str, VecSearchResult]:
-    """Fleet-scale plan: Alg. 1 over (model × split × bandwidth) in ONE
-    padded numpy pass.
+    """Fleet-scale plan: Alg. 1 over (model × split × bandwidth × codec) in
+    ONE padded numpy pass.
 
     Graphs of different depths are padded to the deepest model with +inf
     edge latency (those split indices can never win), so a full
     bandwidth-sweep plan for every registered config costs a single
-    ``(M, S_max+1, B)`` array evaluation instead of ``M × B`` Python scans.
+    ``(M, C, S_max+1, B)`` array evaluation instead of ``M × C × B`` Python
+    scans (``C = 1`` codec-free when ``codecs`` is None).
     ``cloud_budget_bytes`` and ``input_bytes`` may be scalars or per-model
-    mappings.  Bandwidths in BYTES/s, latencies in seconds.
+    mappings.  Bandwidths in BYTES/s, latencies in seconds.  With
+    ``codecs``, each model's result carries the joint-optimal
+    ``codec_idx``/``codec_names`` per bandwidth (ties: earliest codec,
+    then largest split — identical to ``search_joint``).
     """
     names = list(graphs)
     if not names:
         raise ValueError("sweep_search needs at least one graph")
     bw = np.atleast_1d(np.asarray(bandwidths_bps, dtype=np.float64))
+    cs = resolve_codecs(codecs, max_err)
 
     def per_model(val, name, default):
         if isinstance(val, Mapping):
@@ -251,20 +387,47 @@ def sweep_search(graphs: Mapping[str, Sequence[LayerCost]], edge: DeviceSpec,
     L = pad([ga.cloud_load_bytes for ga in gas], 0.0)
     budgets = np.array([per_model(cloud_budget_bytes, k, float("inf"))
                         for k in names], dtype=np.float64)
-
-    net = np.where(W[:, :, None] > 0, W[:, :, None] / bw[None, None, :]
-                   + rtt_s, 0.0)
-    totals = E[:, :, None] + C[:, :, None] + net               # (M, S, B)
-    totals = np.where((L > budgets[:, None])[:, :, None], np.inf, totals)
-    splits = (S - 1) - np.argmin(totals[:, ::-1, :], axis=1)   # (M, B)
-
-    out: Dict[str, VecSearchResult] = {}
+    infeasible = (L > budgets[:, None])                        # (M, S)
     cols = np.arange(len(bw))
+
+    if cs is None:
+        net = np.where(W[:, :, None] > 0, W[:, :, None] / bw[None, None, :]
+                       + rtt_s, 0.0)
+        totals = E[:, :, None] + C[:, :, None] + net           # (M, S, B)
+        totals = np.where(infeasible[:, :, None], np.inf, totals)
+        splits = (S - 1) - np.argmin(totals[:, ::-1, :], axis=1)  # (M, B)
+        out: Dict[str, VecSearchResult] = {}
+        for i, k in enumerate(names):
+            s = splits[i]
+            out[k] = VecSearchResult(
+                bandwidths_bps=bw, splits=s, total_s=totals[i][s, cols],
+                edge_s=E[i][s], cloud_s=C[i][s], net_s=net[i][s, cols])
+        return out
+
+    # codec axis: (M, C, S) wire/overhead via the shared per-model helper
+    wire_c = np.empty((M, len(cs), S), dtype=np.float64)
+    ovh = np.empty((M, len(cs), S), dtype=np.float64)
+    for i, ga in enumerate(gas):
+        wc, ov = _codec_wire_overhead(W[i, :ga.n + 1], ga.n, cs, edge, cloud)
+        wire_c[i, :, :ga.n + 1], ovh[i, :, :ga.n + 1] = wc, ov
+        wire_c[i, :, ga.n + 1:], ovh[i, :, ga.n + 1:] = 0.0, 0.0
+    net = np.where(wire_c[..., None] > 0,
+                   wire_c[..., None] / bw[None, None, None, :] + rtt_s, 0.0) \
+        + ovh[..., None]                                    # (M, C, S, B)
+    totals = E[:, None, :, None] + C[:, None, :, None] + net
+    totals = np.where(infeasible[:, None, :, None], np.inf, totals)
+    flat = totals[:, :, ::-1, :].reshape(M, len(cs) * S, len(bw))
+    idx = np.argmin(flat, axis=1)                           # (M, B)
+    codec_idx = idx // S
+    splits = (S - 1) - idx % S
+    codec_names = tuple(c.name for c in cs)
+    out = {}
     for i, k in enumerate(names):
-        s = splits[i]
+        s, ci = splits[i], codec_idx[i]
         out[k] = VecSearchResult(
-            bandwidths_bps=bw, splits=s, total_s=totals[i][s, cols],
-            edge_s=E[i][s], cloud_s=C[i][s], net_s=net[i][s, cols])
+            bandwidths_bps=bw, splits=s, total_s=totals[i][ci, s, cols],
+            edge_s=E[i][s], cloud_s=C[i][s], net_s=net[i][ci, s, cols],
+            codec_idx=ci, codec_names=codec_names)
     return out
 
 

@@ -1,12 +1,23 @@
-"""Pallas TPU kernel: fused int8 activation quantise / dequantise.
+"""Pallas TPU kernels: fused int8 / packed-int4 activation codecs.
 
-The quantise kernel fuses abs-max reduction, scale computation and rounding
-in one VMEM pass over (ROWS, 128)-tiles, so the HBM traffic is exactly
-read-bf16 + write-int8 + write-scales (vs 3 passes for the naive lowering).
-Grid: (rows / ROW_TILE, D / LANE_TILE); LANE_TILE = 128 matches both the
-codec block size and the TPU lane width; ROW_TILE = 256 keeps the working
-set (256*128*2B in + 256*128B out) well under VMEM while amortising control
-overhead.
+The quantise kernels fuse abs-max reduction, scale computation, rounding
+(and, for int4, nibble packing) in one VMEM pass, so the HBM traffic is
+exactly read-bf16 + write-quantised + write-scales (vs 3+ passes for the
+naive lowering).
+
+int8 grid: (rows / ROW_TILE, D / LANE_TILE); LANE_TILE = 128 matches both
+the codec block size and the TPU lane width; ROW_TILE = 256 keeps the
+working set (256*128*2B in + 256*128B out) well under VMEM while amortising
+control overhead.
+
+int4 grid: (rows / ROW_TILE, D / (2*LANE_TILE)) — each cell reads a
+(ROW_TILE, 256) tile and writes a (ROW_TILE, 128) packed byte tile plus a
+(ROW_TILE, 2) scale tile.  Packing pairs element ``j`` with element
+``j + 128`` of the tile (the ref.py layout), so both nibble sources are
+themselves 128-lane aligned slices: the pack is a mul-add on the VPU, never
+a strided lane shuffle.  All nibble math is arithmetic in int32 (biased by
++7, byte offset −128) — no bitwise ops, which keeps the same code exact in
+interpret mode on CPU.
 """
 from __future__ import annotations
 
@@ -74,3 +85,70 @@ def dequantize_int8_pallas(q: jax.Array, s: jax.Array, dtype=jnp.bfloat16,
         out_shape=jax.ShapeDtypeStruct((R, D), dtype),
         interpret=interpret,
     )(q, s)
+
+
+# ------------------------------------------------------------------- int4
+def _quant4_kernel(x_ref, p_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                    # (rt, 2*LANE)
+    lo, hi = x[:, :LANE_TILE], x[:, LANE_TILE:]
+    amax_lo = jnp.max(jnp.abs(lo), axis=1, keepdims=True)
+    amax_hi = jnp.max(jnp.abs(hi), axis=1, keepdims=True)
+    # constant multiply to stay bit-identical with ref.py under jit
+    s_lo = jnp.where(amax_lo > 0, amax_lo * (1.0 / 7.0), 1.0)
+    s_hi = jnp.where(amax_hi > 0, amax_hi * (1.0 / 7.0), 1.0)
+    q_lo = jnp.clip(jnp.round(lo / s_lo), -7, 7).astype(jnp.int32) + 7
+    q_hi = jnp.clip(jnp.round(hi / s_hi), -7, 7).astype(jnp.int32) + 7
+    p_ref[...] = (q_lo + 16 * q_hi - 128).astype(jnp.int8)
+    s_ref[...] = jnp.concatenate([s_lo, s_hi], axis=1)    # (rt, 2)
+
+
+def _dequant4_kernel(p_ref, s_ref, o_ref, *, dtype):
+    p = p_ref[...].astype(jnp.int32) + 128                # (rt, LANE)
+    s = s_ref[...].astype(jnp.float32)                    # (rt, 2)
+    lo = (p % 16 - 7).astype(jnp.float32) * s[:, 0:1]
+    hi = (p // 16 - 7).astype(jnp.float32) * s[:, 1:2]
+    o_ref[...] = jnp.concatenate([lo, hi], axis=1).astype(dtype)
+
+
+def quantize_int4_pallas(x: jax.Array, *, interpret: bool = False):
+    """x: (R, D) bf16/f32, D % 256 == 0 ->
+    (int8 packed (R, D/2), f32 scales (R, D/128))."""
+    R, D = x.shape
+    rt = min(ROW_TILE, R)
+    assert R % rt == 0 and D % (2 * LANE_TILE) == 0, (R, D)
+    grid = (R // rt, D // (2 * LANE_TILE))
+    p, s = pl.pallas_call(
+        _quant4_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rt, 2 * LANE_TILE), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((rt, LANE_TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((rt, 2), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, D // 2), jnp.int8),
+            jax.ShapeDtypeStruct((R, D // LANE_TILE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return p, s
+
+
+def dequantize_int4_pallas(p: jax.Array, s: jax.Array, dtype=jnp.bfloat16,
+                           *, interpret: bool = False):
+    R, Dh = p.shape
+    D = 2 * Dh
+    rt = min(ROW_TILE, R)
+    assert R % rt == 0 and D % (2 * LANE_TILE) == 0, (R, D)
+    grid = (R // rt, D // (2 * LANE_TILE))
+    return pl.pallas_call(
+        functools.partial(_dequant4_kernel, dtype=dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rt, LANE_TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((rt, 2), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((rt, 2 * LANE_TILE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, D), dtype),
+        interpret=interpret,
+    )(p, s)

@@ -1,4 +1,4 @@
-"""jit'd public wrappers for the activation codec.
+"""jit'd public wrappers for the activation codecs (int8 + packed int4).
 
 ``impl``: "jnp" (XLA everywhere), "pallas" (TPU target), "interpret"
 (Pallas body executed in Python — CPU validation).  Arbitrary-rank inputs
@@ -40,3 +40,33 @@ def dequantize(q: jax.Array, s: jax.Array, dtype=jnp.bfloat16,
         q.reshape(rows, D), s.reshape(rows, D // block), dtype,
         interpret=(impl == "interpret"))
     return out.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block"))
+def quantize_int4(x: jax.Array, impl: str = "jnp", block: int = ref.BLOCK
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """(..., D) with D % (2*block) == 0 -> (packed int8 (..., D/2),
+    f32 scales (..., D/block))."""
+    shape = x.shape
+    D = shape[-1]
+    if impl == "jnp" or block != ref.BLOCK:
+        return ref.quantize_int4(x, block)
+    rows = x.size // D
+    p, s = kernel.quantize_int4_pallas(x.reshape(rows, D),
+                                       interpret=(impl == "interpret"))
+    return (p.reshape(*shape[:-1], D // 2),
+            s.reshape(*shape[:-1], D // block))
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block", "dtype"))
+def dequantize_int4(p: jax.Array, s: jax.Array, dtype=jnp.bfloat16,
+                    impl: str = "jnp", block: int = ref.BLOCK) -> jax.Array:
+    shape = p.shape
+    Dh = shape[-1]
+    if impl == "jnp" or block != ref.BLOCK:
+        return ref.dequantize_int4(p, s, dtype, block)
+    rows = p.size // Dh
+    out = kernel.dequantize_int4_pallas(
+        p.reshape(rows, Dh), s.reshape(rows, 2 * Dh // block), dtype,
+        interpret=(impl == "interpret"))
+    return out.reshape(*shape[:-1], 2 * Dh)

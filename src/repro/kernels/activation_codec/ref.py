@@ -1,8 +1,16 @@
-"""Pure-jnp oracle for the activation codec (int8 per-row-block quantisation).
+"""Pure-jnp oracles for the activation codecs (int8 and packed int4).
 
-RoboECC ships the cut-layer activation over the edge-cloud network; this
-codec shrinks it 2x (bf16->int8) with per-(row, 128-col-block) scales.  The
-oracle defines the exact semantics the Pallas kernel must match.
+RoboECC ships the cut-layer activation over the edge-cloud network; these
+codecs shrink it 2x (bf16->int8) / ~3.8x (bf16->packed int4) with
+per-(row, 128-col-block) scales.  The oracles define the exact semantics
+the Pallas kernels must match.
+
+int4 packing layout: elements are quantised to [-7, 7], biased to [0, 14],
+and two elements pack into one byte **lane-aligned**: within each 256-lane
+tile, byte ``j`` holds element ``j`` (low nibble) and element ``j + 128``
+(high nibble).  This keeps the pack/unpack a pure (128-lane) vector op on
+TPU — no strided lane shuffles.  The packed byte is stored as int8 with a
+-128 offset so all arithmetic stays in signed types.
 """
 from __future__ import annotations
 
@@ -34,8 +42,57 @@ def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.bfloat16,
 
 
 def wire_bytes(shape, block: int = BLOCK) -> int:
-    """Bytes on the network for a quantised activation of `shape`."""
+    """Bytes on the network for an int8-quantised activation of `shape`."""
     n = 1
     for d in shape:
         n *= d
     return n + (n // block) * 4
+
+
+# ------------------------------------------------------------------- int4
+PAIR = 2 * BLOCK                     # lanes consumed per packed 128-lane tile
+
+
+def quantize_int4(x: jnp.ndarray, block: int = BLOCK
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (..., D) with D % (2*block) == 0 -> (int8 packed (..., D/2),
+    f32 scales (..., D/block)).
+
+    Per-(row, block) abs-max scales map values into [-7, 7]; the biased
+    nibbles of elements ``j`` and ``j + block`` of each 2*block-lane pair
+    pack into byte ``j`` (see module docstring for the layout).
+    """
+    *lead, D = x.shape
+    assert D % (2 * block) == 0, (D, block)
+    xb = x.astype(jnp.float32).reshape(*lead, D // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    # constant multiply, NOT amax / 7.0: XLA rewrites division by a
+    # constant into a reciprocal multiply under jit, which would make the
+    # jitted ops.py path diverge from this eager oracle in the last ulp
+    scale = jnp.where(amax > 0, amax * (1.0 / 7.0), 1.0)
+    q = jnp.clip(jnp.round(xb / scale), -7, 7).astype(jnp.int32) + 7
+    q = q.reshape(*lead, D // (2 * block), 2, block)   # pair of blocks
+    packed = q[..., 0, :] + 16 * q[..., 1, :] - 128    # in [-128, 110]
+    return (packed.astype(jnp.int8).reshape(*lead, D // 2),
+            scale[..., 0])
+
+
+def dequantize_int4(packed: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.bfloat16, block: int = BLOCK) -> jnp.ndarray:
+    *lead, Dh = packed.shape
+    D = 2 * Dh
+    p = packed.reshape(*lead, D // (2 * block), block).astype(jnp.int32) + 128
+    lo = p % 16 - 7
+    hi = p // 16 - 7
+    q = jnp.stack([lo, hi], axis=-2)                   # (..., pairs, 2, block)
+    sb = scale.reshape(*lead, D // (2 * block), 2, 1).astype(jnp.float32)
+    out = q.astype(jnp.float32) * sb
+    return out.reshape(*lead, D).astype(dtype)
+
+
+def wire_bytes_int4(shape, block: int = BLOCK) -> int:
+    """Bytes on the network for a packed-int4 activation of `shape`."""
+    n = 1
+    for d in shape:
+        n *= d
+    return n // 2 + (n // block) * 4

@@ -4,7 +4,13 @@ Composes the pieces that exist elsewhere in the repo but never meet:
 
 * per-robot ``RoboECC`` controllers (``core/controller.py``) planned by the
   **vectorized** Alg. 1 sweep (``core/segmentation.search_vec`` /
-  ``sweep_search``) — one array pass plans every (model × bandwidth) cell;
+  ``sweep_search``) — one array pass plans every
+  (model × bandwidth × codec) cell;
+* per-robot **codec state** (``core/codec.py``): the plan table carries the
+  jointly-optimal split-boundary codec per bandwidth bin, robots switch
+  codecs as their link moves between bins (counted in
+  ``n_codec_switches``), and wire-byte pricing, hedged cloud work and
+  post-outage ``replan()`` all see the compressed traffic;
 * per-robot ``NetworkSim`` bandwidth traces (``core/network.py``), each
   robot on its own seeded link;
 * ``MicroBatcher`` / ``StragglerMitigator`` / ``ElasticPool`` primitives
@@ -46,6 +52,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from ..configs import get_config
+from ..core.codec import Codec, resolve_codecs
 from ..core.controller import RoboECC
 from ..core.hardware import A100, ORIN, DeviceSpec
 from ..core.network import NetworkSim, TraceConfig, generate_trace
@@ -84,6 +91,12 @@ class FleetConfig:
     # shared cloud serving many robots cannot host every full model, which
     # is what makes the splits collaborative (paper Tab. II uses 12.1 GB)
     cloud_budget_bytes: Optional[float] = 12.1e9
+    # split-boundary transport codec axis (core/codec.py names).  The plan
+    # table searches (model × split × bandwidth × codec) jointly and each
+    # robot carries its planned codec as per-request state; the default
+    # single-identity axis reproduces codec-free behaviour exactly.
+    codecs: Sequence[str] = ("identity",)
+    max_codec_err: Optional[float] = None   # drop codecs above this bound
     pool_overhead_target: float = 0.026
     batch_overlap: float = 0.8        # fraction of non-max work overlapped
     straggler_sigma: float = 0.2      # lognormal sigma on replica exec time
@@ -122,6 +135,7 @@ class RobotStats:
     mean_s: float
     p50_s: float
     p95_s: float
+    codec: str = "identity"      # codec the robot ended the run on
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,13 +148,15 @@ class FleetReport:
     n_hedged: int
     n_replans: int
     n_outage_completions: int    # requests served edge-only during outages
+    n_codec_switches: int = 0    # per-robot codec changes across requests
 
     def summary(self) -> str:
         return (f"{len(self.robots)} robots, {self.n_requests} requests: "
                 f"fleet p50 {self.fleet_p50_s * 1e3:.1f} ms, "
                 f"p95 {self.fleet_p95_s * 1e3:.1f} ms, "
                 f"{self.throughput_rps:.1f} req/s, "
-                f"{self.n_hedged} hedges, {self.n_replans} replans")
+                f"{self.n_hedged} hedges, {self.n_replans} replans, "
+                f"{self.n_codec_switches} codec switches")
 
 
 @dataclasses.dataclass
@@ -175,7 +191,10 @@ class FleetSimulator:
                             input_bytes=cfg.workload.input_bytes)
             for a, g in self.graphs.items()}
 
-        # vectorized Alg. 1 plan table: (model × bandwidth-bin) -> split
+        # vectorized Alg. 1 plan table: (model × bandwidth-bin) ->
+        # (split, codec) — one (M, C, S, B) pass covers the whole fleet
+        self.codecs: List[Codec] = list(
+            resolve_codecs(cfg.codecs, cfg.max_codec_err))
         self.bw_grid = np.geomspace(cfg.bw_grid_lo_bps, cfg.bw_grid_hi_bps,
                                     cfg.bw_grid_points)
         # geometric midpoints: searchsorted on these snaps a bandwidth to
@@ -184,17 +203,27 @@ class FleetSimulator:
         self._bw_mid = np.sqrt(self.bw_grid[:-1] * self.bw_grid[1:])
         plans = sweep_search(self.graphs, cfg.edge, cfg.cloud, self.bw_grid,
                              cfg.cloud_budget_bytes, rtt_s=cfg.rtt_s,
-                             input_bytes=cfg.workload.input_bytes)
+                             input_bytes=cfg.workload.input_bytes,
+                             codecs=self.codecs)
         self.plan: Dict[str, np.ndarray] = {a: plans[a].splits for a in archs}
+        self.plan_codec: Dict[str, np.ndarray] = {
+            a: plans[a].codec_idx for a in archs}
 
+        # robots start on the codec planned at the nominal bandwidth; the
+        # same codec prices the controller's Alg. 1 (so replan() after an
+        # outage restores a codec-consistent split)
+        k0 = int(np.searchsorted(self._bw_mid, cfg.nominal_bw_bps))
+        self.codec_of: List[int] = [
+            int(self.plan_codec[a][k0]) for a in self.arch_of]
         self.controllers: List[RoboECC] = [
             RoboECC(get_config(a), cfg.edge, cfg.cloud,
                     workload=cfg.workload,
                     cloud_budget_bytes=cfg.cloud_budget_bytes,
                     pool_overhead_target=cfg.pool_overhead_target,
                     nominal_bw_bps=cfg.nominal_bw_bps,
+                    codec=self.codecs[self.codec_of[i]],
                     graph=self.graphs[a])
-            for a in self.arch_of]
+            for i, a in enumerate(self.arch_of)]
         self.nets: List[NetworkSim] = [
             NetworkSim(generate_trace(cfg.n_ticks + 1, cfg.trace,
                                       seed=cfg.seed * 100_003 + i),
@@ -220,6 +249,7 @@ class FleetSimulator:
         self.n_hedged = 0
         self.n_replans = 0
         self.n_outage_completions = 0
+        self.n_codec_switches = 0
 
     # ----------------------------------------------------------- elasticity
     def _on_replicas(self, live: List[str]) -> None:
@@ -244,9 +274,15 @@ class FleetSimulator:
     def _planned_split(self, robot: int, bw_bps: float) -> int:
         """Plan-table lookup (vectorized Alg. 1 result), clamped into the
         robot's parameter-sharing pool — the split may only move where
-        weights are already resident on both tiers."""
+        weights are already resident on both tiers.  Also advances the
+        robot's codec state to the jointly-planned codec for this
+        bandwidth bin (a pure software switch — no weights move)."""
         arch = self.arch_of[robot]
         k = int(np.searchsorted(self._bw_mid, bw_bps))
+        ci = int(self.plan_codec[arch][k])
+        if ci != self.codec_of[robot]:
+            self.codec_of[robot] = ci
+            self.n_codec_switches += 1
         split = int(self.plan[arch][k])
         p = self.controllers[robot].pool
         return int(np.clip(split, p.start, p.end))
@@ -330,7 +366,9 @@ class FleetSimulator:
                 arrays = self.arrays[self.arch_of[i]]
                 if self._cloud_up:
                     split = self._planned_split(i, bw)
-                    e, c, t = arrays.latency(split, bw, cfg.rtt_s)
+                    e, c, t = arrays.latency(split, bw, cfg.rtt_s,
+                                             codec=self.codecs[
+                                                 self.codec_of[i]])
                 else:
                     e, c, t = float(arrays.edge_s[arrays.n]), 0.0, 0.0
                 if c > 0.0 and routable:
@@ -396,7 +434,8 @@ class FleetSimulator:
                 name=f"robot{i:03d}", arch=self.arch_of[i],
                 n_requests=len(lats), mean_s=float(xs.mean()),
                 p50_s=float(np.percentile(xs, 50)),
-                p95_s=float(np.percentile(xs, 95))))
+                p95_s=float(np.percentile(xs, 95)),
+                codec=self.codecs[self.codec_of[i]].name))
         allx = np.asarray([x for lats in self.latencies for x in lats]
                           or [0.0])
         sim_s = cfg.n_ticks * cfg.tick_s
@@ -406,7 +445,8 @@ class FleetSimulator:
             fleet_p95_s=float(np.percentile(allx, 95)),
             throughput_rps=float(len(allx) / sim_s) if sim_s else 0.0,
             n_hedged=self.n_hedged, n_replans=self.n_replans,
-            n_outage_completions=self.n_outage_completions)
+            n_outage_completions=self.n_outage_completions,
+            n_codec_switches=self.n_codec_switches)
 
 
 def run_fleet(cfg: FleetConfig) -> FleetReport:

@@ -12,9 +12,10 @@ inference).  VLA workloads re-prefill every action step (the camera image
 changes), so caches never need to migrate across the cut — this matches the
 paper's setting, where adjustment happens between inferences.
 
-The cut activation is optionally shipped through the int8 activation codec
-(kernels/activation_codec), halving wire bytes — a beyond-paper optimisation
-accounted separately in the benchmarks.
+The cut activation is optionally shipped through the int8 or packed-int4
+activation codec (kernels/activation_codec) — 2x / ~3.8x fewer wire bytes.
+The planner-side price of each format (wire factor + encode/decode compute)
+lives in ``core/codec.py``; this module is the matching data plane.
 """
 from __future__ import annotations
 
@@ -36,10 +37,21 @@ Tree = Any
 
 @dataclasses.dataclass(frozen=True)
 class SplitPlan:
-    """Static pool placement + codec choice; `split` itself is dynamic."""
+    """Static pool placement + codec choice; `split` itself is dynamic.
+
+    ``codec``: "" (raw), "int8" or "int4" — the wire format for the cut
+    activation.  ``use_codec=True`` is the backwards-compatible alias for
+    ``codec="int8"``."""
     pool_start: int
     pool_end: int
     use_codec: bool = False
+    codec: str = ""
+
+    @property
+    def wire_codec(self) -> str:
+        if self.codec:
+            return self.codec
+        return "int8" if self.use_codec else ""
 
     def clamp(self, split: int) -> int:
         return max(self.pool_start, min(int(split), self.pool_end))
@@ -71,9 +83,27 @@ def _codec_block(D: int) -> int:
     return 128 if D % 128 == 0 else D
 
 
-def encode_activation(x: jax.Array, use_codec: bool):
-    if not use_codec:
+def encode_activation(x: jax.Array, wire_codec):
+    """``wire_codec``: "" / False (raw), "int8" / True, or "int4".
+
+    int4 requires ``x.shape[-1] % 256 == 0`` (two 128-blocks pack per
+    byte lane-aligned) and raises otherwise — a silent int8 fallback
+    would ship ~2x the wire bytes the planner priced."""
+    if not wire_codec:
         return {"x": x}
+    if wire_codec == "int4":
+        if x.shape[-1] % 256 != 0:
+            raise ValueError(
+                f"int4 codec needs last dim % 256 == 0, got {x.shape}; "
+                "use int8 (and plan with the int8 codec) instead")
+        p, s = codec.quantize_int4(x)
+        return {"q4": p, "s": s}
+    if wire_codec not in ("int8", True):
+        # refuse rather than silently ship a different format than the
+        # planner priced (planner codecs like fp16/topk have no data
+        # plane here yet)
+        raise ValueError(f"no data-plane codec {wire_codec!r}; "
+                         "have '', 'int8', 'int4'")
     q, s = codec.quantize(x, block=_codec_block(x.shape[-1]))
     return {"q": q, "s": s}
 
@@ -81,6 +111,9 @@ def encode_activation(x: jax.Array, use_codec: bool):
 def decode_activation(payload: Dict, dtype=jnp.bfloat16) -> jax.Array:
     if "x" in payload:
         return payload["x"]
+    if "q4" in payload:
+        return codec.dequantize_int4(payload["q4"], payload["s"],
+                                     jnp.dtype(dtype))
     q, s = payload["q"], payload["s"]
     return codec.dequantize(q, s, jnp.dtype(dtype),
                             block=q.shape[-1] // s.shape[-1])
@@ -149,7 +182,7 @@ class LMSplitExecutor:
         if plan.pool_end > plan.pool_start:
             x = _masked_stack(cfg, pool, x, positions, split,
                               plan.pool_start, "edge", is_moe=is_moe)
-        return encode_activation(x, plan.use_codec)
+        return encode_activation(x, plan.wire_codec)
 
     # -- cloud side: masked pool + [pool_end, L) + head
     def _cloud_fwd(self, params, payload, split):
@@ -211,7 +244,7 @@ class VLASplitExecutor:
         if plan.pool_end > plan.pool_start:
             x = _masked_stack(cfg, pool, x, positions, split,
                               plan.pool_start, "edge", is_moe=False)
-        return encode_activation(x, plan.use_codec)
+        return encode_activation(x, plan.wire_codec)
 
     def _cloud_fwd(self, params, payload, split, key):
         cfg, plan = self.cfg, self.plan

@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Docs-link checker: fail on references to nonexistent repo files.
+
+Scans
+
+* every docstring in ``src/**/*.py`` (module / class / function, via
+  ``ast``), and
+* ``docs/*.md`` + ``README.md`` (both markdown link targets and inline
+  path-like tokens),
+
+extracts references that look like repo files (``*.py`` / ``*.md``) and
+resolves each against (a) the repo root, (b) the referencing file's own
+directory and its ancestors up to the repo root (so ``core/codec.py``
+resolves from ``src/repro/runtime/fleet.py``), (c) ``docs/``, and — for
+bare names like ``ops.py`` — (d) any file in the repo with that basename.
+Unresolvable references are reported with file:line and exit status 1.
+
+This is the guard that keeps docstrings honest: ``EXPERIMENTS.md`` and
+``DESIGN.md`` were cited across ``src/`` for several PRs before either
+file existed.
+
+    python tools/check_doc_links.py [--root PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import re
+import sys
+from typing import Iterator, List, Set, Tuple
+
+REF_RE = re.compile(r"[A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:py|md)\b")
+MD_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)")
+SCAN_DIRS = ("src",)
+DOC_DIRS = ("docs",)                 # every *.md here
+DOC_FILES = ("README.md",)           # plus these root files
+SRC_ROOT = os.path.join("src", "repro")   # shorthand base: core/pool.py
+
+
+def _docstrings(path: str) -> Iterator[Tuple[int, str]]:
+    """(lineno, docstring) for every documented node in a Python file."""
+    with open(path, encoding="utf-8") as f:
+        try:
+            tree = ast.parse(f.read(), filename=path)
+        except SyntaxError as e:                     # pragma: no cover
+            print(f"{path}: syntax error while parsing: {e}",
+                  file=sys.stderr)
+            return
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Module, ast.ClassDef, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+            doc = ast.get_docstring(node, clean=False)
+            if doc:
+                yield getattr(node, "lineno", 1), doc
+
+
+def _basenames(root: str) -> Set[str]:
+    names: Set[str] = set()
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames
+                       if d not in (".git", "__pycache__", ".github")]
+        names.update(filenames)
+    return names
+
+
+def _resolves(ref: str, src_dir: str, root: str, basenames: Set[str]) -> bool:
+    if "://" in ref:
+        return True                                  # URL, out of scope
+    ref = ref.lstrip("./")
+    candidates = [os.path.join(root, ref), os.path.join(src_dir, ref),
+                  os.path.join(root, SRC_ROOT, ref)]
+    # ancestors of the referencing file (src/repro/runtime -> src/repro ...)
+    d = src_dir
+    while os.path.realpath(d) != os.path.realpath(root):
+        parent = os.path.dirname(d)
+        if parent == d:
+            break
+        d = parent
+        candidates.append(os.path.join(d, ref))
+    candidates.append(os.path.join(root, "docs", ref))
+    if any(os.path.isfile(c) for c in candidates):
+        return True
+    # bare name (no directory part): accept any repo file with that basename
+    return "/" not in ref and os.path.basename(ref) in basenames
+
+
+def check(root: str) -> List[str]:
+    basenames = _basenames(root)
+    errors: List[str] = []
+
+    def scan_text(path: str, lineno: int, text: str) -> None:
+        refs = set(m.group(0) for m in REF_RE.finditer(text))
+        refs |= set(m.group(1) for m in MD_LINK_RE.finditer(text)
+                    if m.group(1).endswith((".py", ".md")))
+        for ref in sorted(refs):
+            if not _resolves(ref, os.path.dirname(path), root, basenames):
+                rel = os.path.relpath(path, root)
+                errors.append(f"{rel}:{lineno}: unresolved reference "
+                              f"{ref!r}")
+
+    for scan in SCAN_DIRS:
+        base = os.path.join(root, scan)
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    p = os.path.join(dirpath, fn)
+                    for lineno, doc in _docstrings(p):
+                        scan_text(p, lineno, doc)
+    md_files = [os.path.join(root, f) for f in DOC_FILES]
+    for d in DOC_DIRS:
+        base = os.path.join(root, d)
+        if os.path.isdir(base):
+            md_files += [os.path.join(base, fn)
+                         for fn in sorted(os.listdir(base))
+                         if fn.endswith(".md")]
+    for p in md_files:
+        if not os.path.isfile(p):
+            continue
+        with open(p, encoding="utf-8") as f:
+            for i, line in enumerate(f, 1):
+                scan_text(p, i, line)
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), ".."))
+    args = ap.parse_args()
+    errors = check(os.path.abspath(args.root))
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"\n{len(errors)} unresolved repo-file reference(s)",
+              file=sys.stderr)
+        return 1
+    print("doc links OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,12 +1,13 @@
 """Fleet-scale serving benchmark: vectorized planner + fleet simulator.
 
-Three measurements:
+Four measurements:
 
 1. **Planner**: a full bandwidth-sweep plan (every registered config × a
    log-spaced bandwidth grid) via the scalar Alg. 1 loop vs the vectorized
    ``sweep_search`` — reports wall time of each and the speedup, and checks
    the two return identical splits everywhere (incl. the codec axis vs the
-   scalar ``search_joint`` oracle).
+   scalar ``search_joint`` oracle, and the multi-cut (S1, S2) pass vs the
+   scalar ``search_multicut_scalar`` oracle).
 2. **Fleet**: an end-to-end ``FleetSimulator`` run (default 24 robots over
    4 heterogeneous model configs, 3 cloud replicas, with a mid-run capacity
    crunch and a full outage window) — reports per-robot p50/p95 latency and
@@ -15,29 +16,43 @@ Three measurements:
    2 MB/s mean) under each split-boundary codec — identity vs int8 vs int4
    vs the joint codec axis — reporting fleet p50/p95 per codec (the
    compression-in-the-loop win recorded in docs/EXPERIMENTS.md §Perf).
+4. **Multi-cut**: single-cut vs multi-cut plan tables on the same OpenVLA
+   fleet at the paper's 10 / 1 / 0.2 MB/s operating points, under a tight
+   per-robot cloud quota and an asymmetric (8x) downlink — the
+   edge→cloud→edge placement keeps the byte-heavy action head on the edge,
+   freeing quota for one more trunk layer on the cloud
+   (docs/EXPERIMENTS.md §Multi-cut).
 
     PYTHONPATH=src python benchmarks/fleet_bench.py [--robots N] [--ticks T]
 
 ``run(quiet=True)`` yields the repo-standard ``name,us_per_call,derived``
-CSV lines for ``benchmarks/run.py``.
+CSV lines for ``benchmarks/run.py``; ``run_with_json`` additionally
+returns the machine-readable payload ``benchmarks/run.py`` writes to
+``BENCH_fleet.json`` so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import List
+from typing import Dict, List, Tuple
 
 import numpy as np
 
 from repro.configs import ARCHS, get_config
-from repro.core import (TraceConfig, Workload, build_graph, search,
-                        search_joint, sweep_search)
+from repro.core import (TraceConfig, Workload, build_graph, graph_arrays,
+                        search, search_joint, search_multicut,
+                        search_multicut_scalar, sweep_multicut, sweep_search)
 from repro.core.hardware import A100, ORIN
 from repro.runtime.fleet import (FleetConfig, FleetReport, outage_schedule,
                                  run_fleet)
 
 DEFAULT_ARCHS = ("openvla-7b", "cogact-7b", "llama3.2-3b", "glm4-9b")
 CODEC_AXIS = ("identity", "int8", "int4")
+# multi-cut scenario: per-robot cloud quota (a shared cloud cannot host
+# every robot's full tail) + asymmetric WAN (downlink 8x the uplink)
+MULTICUT_QUOTA_BYTES = 5.8e9
+MULTICUT_DOWN_FACTOR = 8.0
+MULTICUT_POINTS_BPS = (10e6, 1e6, 0.2e6)
 
 
 # ---------------------------------------------------------------- planner
@@ -99,6 +114,54 @@ def bench_planner_codecs(n_bw: int = 64, repeats: int = 3):
     return scalar_s, vec_s, len(graphs) * n_bw * len(CODEC_AXIS), mism
 
 
+def bench_planner_multicut(n_bw: int = 8, repeats: int = 1,
+                           archs=None):
+    """Multi-cut planner: the scalar (S1, S2, codec) oracle loop per
+    (config × bandwidth) vs the vectorized (C, S1, S2, B)
+    ``search_multicut`` pass per config — both sides run on the same
+    precomputed ``GraphArrays`` so the ratio is pure search, not array
+    construction.  Also checks the padded all-model ``sweep_multicut``
+    pass returns identical plans.  Returns (scalar_s, vec_s, n_cells,
+    mismatches) where a mismatch is a differing cut pair OR codec — the
+    ≥50x acceptance gate for the multi-cut refactor."""
+    w = Workload()
+    names = sorted(ARCHS) if archs is None else list(archs)
+    graphs = {k: build_graph(get_config(k), w) for k in names}
+    gas = {k: graph_arrays(g, ORIN, A100, input_bytes=w.input_bytes)
+           for k, g in graphs.items()}
+    bws = np.geomspace(0.05e6, 100e6, n_bw)
+
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        scalar = {k: [search_multicut_scalar(
+            g, ORIN, A100, float(bw), MULTICUT_QUOTA_BYTES,
+            codecs=CODEC_AXIS, input_bytes=w.input_bytes,
+            down_bw_factor=MULTICUT_DOWN_FACTOR, arrays=gas[k])
+            for bw in bws]
+            for k, g in graphs.items()}
+    scalar_s = (time.perf_counter() - t0) / repeats
+
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        vec = {k: search_multicut(
+            g, ORIN, A100, bws, MULTICUT_QUOTA_BYTES, codecs=CODEC_AXIS,
+            input_bytes=w.input_bytes,
+            down_bw_factor=MULTICUT_DOWN_FACTOR, arrays=gas[k])
+            for k, g in graphs.items()}
+    vec_s = (time.perf_counter() - t0) / repeats
+
+    sw = sweep_multicut(graphs, ORIN, A100, bws, MULTICUT_QUOTA_BYTES,
+                        codecs=CODEC_AXIS, input_bytes=w.input_bytes,
+                        down_bw_factor=MULTICUT_DOWN_FACTOR)
+    mism = sum(vec[k].plan_at(j) != scalar[k][j].plan
+               or sw[k].plan_at(j) != scalar[k][j].plan
+               for k in graphs for j in range(n_bw))
+    # triangular S1 <= S2 region — the space the oracle actually scans
+    cells = sum((len(g) + 1) * (len(g) + 2) // 2 for g in graphs.values()) \
+        * n_bw * len(CODEC_AXIS)
+    return scalar_s, vec_s, cells, mism
+
+
 # ------------------------------------------------------------------ fleet
 def fleet_config(n_robots: int = 24, n_ticks: int = 400, n_replicas: int = 3,
                  seed: int = 0, archs=DEFAULT_ARCHS) -> FleetConfig:
@@ -130,6 +193,29 @@ def bench_codecs(n_robots: int = 16, n_ticks: int = 200, n_replicas: int = 3,
     return rows
 
 
+def bench_multicut(n_robots: int = 16, n_ticks: int = 200,
+                   n_replicas: int = 3, seed: int = 0,
+                   points=MULTICUT_POINTS_BPS, arch: str = "openvla-7b"):
+    """Single-cut vs multi-cut plan tables, same fleet, same quota, same
+    codec axis, at each bandwidth operating point.  The trace is pinned
+    near the operating point (``bad_bps`` floored at 0.2 MB/s so the p95
+    tail stays in the collaborative regime rather than collapsing both
+    plans to edge-only).  Returns ``[(bw, mode, FleetReport)]``."""
+    rows = []
+    for bw in points:
+        trace = TraceConfig(mean_bps=bw, bad_bps=max(bw / 4, 0.2e6))
+        for mode in ("single", "multi"):
+            cfg = FleetConfig(
+                n_robots=n_robots, archs=(arch,), n_ticks=n_ticks,
+                n_replicas=n_replicas, seed=seed, codecs=CODEC_AXIS,
+                trace=trace, nominal_bw_bps=bw,
+                cloud_budget_bytes=MULTICUT_QUOTA_BYTES,
+                multicut=(mode == "multi"),
+                down_bw_factor=MULTICUT_DOWN_FACTOR)
+            rows.append((bw, mode, run_fleet(cfg)))
+    return rows
+
+
 def print_report(rep: FleetReport) -> None:
     print(f"\n{'robot':9s} {'arch':22s} {'n':>4s} {'p50 ms':>8s} "
           f"{'p95 ms':>8s} {'mean ms':>8s}")
@@ -145,32 +231,79 @@ def print_report(rep: FleetReport) -> None:
           f"{rep.n_outage_completions} outage completions)")
 
 
-def run(quiet: bool = False, n_robots: int = 24, n_ticks: int = 400,
-        n_replicas: int = 3, seed: int = 0) -> List[str]:
-    """CSV lines for benchmarks/run.py: name,us_per_call,derived."""
-    scalar_s, vec_s, cells, mism = bench_planner()
+def run_with_json(quiet: bool = False, n_robots: int = 24,
+                  n_ticks: int = 400, n_replicas: int = 3, seed: int = 0,
+                  smoke: bool = False) -> Tuple[List[str], Dict]:
+    """CSV lines for benchmarks/run.py plus the machine-readable payload
+    written to ``BENCH_fleet.json`` (p95s per scenario, planner wall
+    times) so the perf trajectory is tracked across PRs.  ``smoke=True``
+    shrinks every axis to a seconds-scale CI invocation."""
+    if smoke:
+        n_robots, n_ticks, n_replicas = 6, 40, 2
+    payload: Dict = {"planner": {}, "fleet": {}, "codecs": {},
+                     "multicut": {}, "config": {
+                         "n_robots": n_robots, "n_ticks": n_ticks,
+                         "n_replicas": n_replicas, "seed": seed,
+                         "smoke": smoke}}
+    pk = (2, 1) if smoke else (64, 3)
+    scalar_s, vec_s, cells, mism = bench_planner(*pk)
     assert mism == 0, f"vectorized planner diverged on {mism} cells"
-    jscalar_s, jvec_s, jcells, jmism = bench_planner_codecs()
+    jscalar_s, jvec_s, jcells, jmism = bench_planner_codecs(*pk)
     assert jmism == 0, f"codec-axis planner diverged on {jmism} cells"
+    mscalar_s, mvec_s, mcells, mmism = bench_planner_multicut(
+        2 if smoke else 8, 1)
+    assert mmism == 0, f"multi-cut planner diverged on {mmism} cells"
+    payload["planner"] = {
+        "scalar_s": scalar_s, "vec_s": vec_s, "cells": cells,
+        "codec_scalar_s": jscalar_s, "codec_vec_s": jvec_s,
+        "codec_cells": jcells,
+        "multicut_scalar_s": mscalar_s, "multicut_vec_s": mvec_s,
+        "multicut_cells": mcells,
+        "multicut_speedup": mscalar_s / mvec_s}
     lines = [
         f"fleet_plan_scalar,{scalar_s * 1e6:.0f},{cells}cells",
         f"fleet_plan_vec,{vec_s * 1e6:.0f},x{scalar_s / vec_s:.1f}",
         f"fleet_plan_codec_scalar,{jscalar_s * 1e6:.0f},{jcells}cells",
         f"fleet_plan_codec_vec,{jvec_s * 1e6:.0f},x{jscalar_s / jvec_s:.1f}",
+        f"fleet_plan_multicut_scalar,{mscalar_s * 1e6:.0f},{mcells}cells",
+        f"fleet_plan_multicut_vec,{mvec_s * 1e6:.0f},"
+        f"x{mscalar_s / mvec_s:.1f}",
     ]
     t0 = time.perf_counter()
     rep = run_fleet(fleet_config(n_robots, n_ticks, n_replicas, seed))
     sim_wall = time.perf_counter() - t0
+    payload["fleet"] = {
+        "p50_s": rep.fleet_p50_s, "p95_s": rep.fleet_p95_s,
+        "throughput_rps": rep.throughput_rps,
+        "n_requests": rep.n_requests, "sim_wall_s": sim_wall}
     lines += [
         f"fleet_p50,{rep.fleet_p50_s * 1e6:.0f},{n_robots}robots",
         f"fleet_p95,{rep.fleet_p95_s * 1e6:.0f},{rep.n_hedged}hedges",
         f"fleet_throughput,{rep.throughput_rps * 1e3:.0f},req_per_ks",
         f"fleet_sim_wall,{sim_wall * 1e6:.0f},{rep.n_requests}reqs",
     ]
-    codec_rows = bench_codecs(seed=seed)
+    codec_rows = bench_codecs(n_robots=8 if smoke else 16,
+                              n_ticks=60 if smoke else 200,
+                              n_replicas=n_replicas, seed=seed)
     for label, crep in codec_rows:
         lines.append(f"fleet_codec_{label}_p95,{crep.fleet_p95_s * 1e6:.0f},"
                      f"p50={crep.fleet_p50_s * 1e6:.0f}us")
+        payload["codecs"][label] = {"p50_s": crep.fleet_p50_s,
+                                    "p95_s": crep.fleet_p95_s,
+                                    "throughput_rps": crep.throughput_rps}
+    mc_rows = bench_multicut(n_robots=8 if smoke else 16,
+                             n_ticks=60 if smoke else 200,
+                             n_replicas=n_replicas, seed=seed)
+    by_bw: Dict[float, Dict[str, FleetReport]] = {}
+    for bw, mode, mrep in mc_rows:
+        by_bw.setdefault(bw, {})[mode] = mrep
+        tag = f"{bw / 1e6:g}MBs_{mode}"
+        lines.append(f"fleet_multicut_{tag}_p95,"
+                     f"{mrep.fleet_p95_s * 1e6:.0f},"
+                     f"{mrep.n_multicut_requests}mc_reqs")
+        payload["multicut"][tag] = {
+            "p50_s": mrep.fleet_p50_s, "p95_s": mrep.fleet_p95_s,
+            "n_multicut_requests": mrep.n_multicut_requests}
     if not quiet:
         print(f"planner: scalar {scalar_s * 1e3:.1f} ms vs vectorized "
               f"{vec_s * 1e3:.2f} ms over {cells} (model × bandwidth) cells "
@@ -179,6 +312,10 @@ def run(quiet: bool = False, n_robots: int = 24, n_ticks: int = 400,
               f"vectorized {jvec_s * 1e3:.2f} ms over {jcells} "
               f"(model × bandwidth × codec) cells "
               f"-> x{jscalar_s / jvec_s:.1f}, identical (split, codec)")
+        print(f"planner multi-cut: scalar {mscalar_s * 1e3:.1f} ms vs "
+              f"vectorized {mvec_s * 1e3:.2f} ms over {mcells} "
+              f"(model × S1 × S2 × bandwidth × codec) cells "
+              f"-> x{mscalar_s / mvec_s:.1f}, identical (cuts, codec)")
         print_report(rep)
         print(f"sim wall time {sim_wall:.2f} s")
         print(f"\ncodec comparison at 2 MB/s mean bandwidth "
@@ -189,7 +326,26 @@ def run(quiet: bool = False, n_robots: int = 24, n_ticks: int = 400,
             print(f"{label:9s} {crep.fleet_p50_s * 1e3:8.1f} "
                   f"{crep.fleet_p95_s * 1e3:8.1f} "
                   f"{crep.throughput_rps:7.1f} {crep.n_codec_switches:8d}")
-    return lines
+        print(f"\nsingle-cut vs multi-cut (openvla-7b, "
+              f"{MULTICUT_QUOTA_BYTES / 1e9:.1f} GB/robot cloud quota, "
+              f"{MULTICUT_DOWN_FACTOR:.0f}x downlink):")
+        print(f"{'bw MB/s':>8s} {'single p95':>11s} {'multi p95':>10s} "
+              f"{'delta':>8s} {'mc reqs':>8s}")
+        for bw, modes in by_bw.items():
+            s, m = modes["single"], modes["multi"]
+            print(f"{bw / 1e6:8.1f} {s.fleet_p95_s * 1e3:9.1f}ms "
+                  f"{m.fleet_p95_s * 1e3:8.1f}ms "
+                  f"{(s.fleet_p95_s - m.fleet_p95_s) * 1e3:6.1f}ms "
+                  f"{m.n_multicut_requests:8d}")
+    return lines, payload
+
+
+def run(quiet: bool = False, n_robots: int = 24, n_ticks: int = 400,
+        n_replicas: int = 3, seed: int = 0, smoke: bool = False
+        ) -> List[str]:
+    """CSV lines for benchmarks/run.py: name,us_per_call,derived."""
+    return run_with_json(quiet=quiet, n_robots=n_robots, n_ticks=n_ticks,
+                         n_replicas=n_replicas, seed=seed, smoke=smoke)[0]
 
 
 def main() -> None:
@@ -198,11 +354,13 @@ def main() -> None:
     ap.add_argument("--ticks", type=int, default=400)
     ap.add_argument("--replicas", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI sizes")
     ap.add_argument("--csv", action="store_true",
                     help="emit only the CSV lines")
     args = ap.parse_args()
     lines = run(quiet=args.csv, n_robots=args.robots, n_ticks=args.ticks,
-                n_replicas=args.replicas, seed=args.seed)
+                n_replicas=args.replicas, seed=args.seed, smoke=args.smoke)
     if args.csv:
         for ln in lines:
             print(ln)

@@ -45,7 +45,7 @@ small = get_config("llama3.2-3b").reduced().replace(n_layers=8)
 model = build(small)
 params = model.init(jax.random.PRNGKey(0))
 executor = LMSplitExecutor(small, SplitPlan(pool_start=3, pool_end=6,
-                                            use_codec=True))
+                                            codec="int8"))
 tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 17), 0,
                             small.vocab_size)
 for split in (3, 4, 5):

@@ -45,7 +45,7 @@ cfg = get_config("cogact-7b").reduced().replace(n_layers=6)
 model = build(cfg)
 params = model.init(jax.random.PRNGKey(0))
 Lv = cfg.vit_layers
-executor = VLASplitExecutor(cfg, SplitPlan(Lv + 1, Lv + 5, use_codec=True))
+executor = VLASplitExecutor(cfg, SplitPlan(Lv + 1, Lv + 5, codec="int8"))
 
 def map_split(s):
     return executor.plan.clamp(Lv + round((s / len(ctl.graph)) * cfg.n_layers))

@@ -3,18 +3,23 @@
 * structure.py    — Eq. 1 structure model (flattened layer graphs)
 * hardware.py     — Eq. 2 hardware roofline model (Table I + TPU v5e)
 * segmentation.py — Alg. 1 optimal split search (scalar + vectorized,
-                    with an optional codec axis)
+                    with an optional codec axis) + the multi-cut
+                    (S1, S2) placement search
+* placement.py    — K-segment ``PlacementPlan`` (ordered cuts, per-segment
+                    tier, per-cut codec); single-split is the K=1 case
 * codec.py        — split-boundary transport codecs (wire bytes, priced
                     encode/decode compute, accuracy-proxy error bounds)
 * predictor.py    — LSTM bandwidth predictor (Eq. 3 granularity check)
 * pool.py         — parameter-sharing pool
 * adjustment.py   — ΔNB / T_high / T_low fine-grained adjustment
-                    (joint split × codec when given a codec axis)
+                    (joint split × codec when given a codec axis;
+                    ``adjust_placement`` moves either cut of a multi-cut
+                    placement)
 * network.py      — bandwidth trace simulator
 * controller.py   — end-to-end RoboECC controller
 """
-from .adjustment import AdjustmentDecision, Thresholds, adjust, \
-    calibrate_thresholds
+from .adjustment import (AdjustmentDecision, PlacementDecision, Thresholds,
+                         adjust, adjust_placement, calibrate_thresholds)
 from .codec import (CODECS, Codec, get_codec, make_codecs, resolve_codecs,
                     transport_s)
 from .controller import RoboECC, TickResult
@@ -22,32 +27,39 @@ from .hardware import (A100, DEVICES, ORIN, THOR, TPU_V5E, DeviceSpec,
                        RooflineTerms, fit_eta, layer_latency, roofline,
                        stack_latency)
 from .network import NetworkSim, TraceConfig, generate_trace
+from .placement import PlacementPlan
 from .pool import Pool, build_pool, pool_transfer_profile
 from .predictor import (Predictor, PredictorConfig, check_granularity,
                         lstm_forward, train_predictor)
-from .segmentation import (GraphArrays, SegmentationResult, VecSearchResult,
-                           codec_applies, cut_bytes, evaluate_split,
+from .segmentation import (GraphArrays, MulticutResult, PlacementEval,
+                           SegmentationResult, VecSearchResult,
+                           codec_applies, cut_bytes, downlink_bytes,
+                           evaluate_placement, evaluate_split,
                            exhaustive_best, fixed_split, graph_arrays,
-                           net_time, search, search_joint, search_vec,
-                           sweep_search)
+                           net_time, search, search_joint, search_multicut,
+                           search_multicut_scalar, search_vec,
+                           sweep_multicut, sweep_search)
 from .structure import LayerCost, Workload, build_graph, total_flops, \
     total_weight_bytes
 
 __all__ = [
-    "AdjustmentDecision", "Thresholds", "adjust", "calibrate_thresholds",
+    "AdjustmentDecision", "PlacementDecision", "Thresholds", "adjust",
+    "adjust_placement", "calibrate_thresholds",
     "CODECS", "Codec", "get_codec", "make_codecs", "resolve_codecs",
     "transport_s",
     "RoboECC", "TickResult",
     "A100", "DEVICES", "ORIN", "THOR", "TPU_V5E", "DeviceSpec",
     "RooflineTerms", "fit_eta", "layer_latency", "roofline", "stack_latency",
     "NetworkSim", "TraceConfig", "generate_trace",
+    "PlacementPlan",
     "Pool", "build_pool", "pool_transfer_profile",
     "Predictor", "PredictorConfig", "check_granularity", "lstm_forward",
     "train_predictor",
-    "GraphArrays", "SegmentationResult", "VecSearchResult", "codec_applies",
-    "cut_bytes", "evaluate_split", "exhaustive_best", "fixed_split",
-    "graph_arrays", "net_time", "search", "search_joint", "search_vec",
-    "sweep_search",
+    "GraphArrays", "MulticutResult", "PlacementEval", "SegmentationResult",
+    "VecSearchResult", "codec_applies", "cut_bytes", "downlink_bytes",
+    "evaluate_placement", "evaluate_split", "exhaustive_best", "fixed_split",
+    "graph_arrays", "net_time", "search", "search_joint", "search_multicut",
+    "search_multicut_scalar", "search_vec", "sweep_multicut", "sweep_search",
     "LayerCost", "Workload", "build_graph", "total_flops",
     "total_weight_bytes",
 ]

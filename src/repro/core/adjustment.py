@@ -33,8 +33,9 @@ import numpy as np
 
 from .codec import resolve_codecs
 from .hardware import DeviceSpec
+from .placement import PlacementPlan
 from .pool import Pool
-from .segmentation import codec_applies, cut_bytes, net_time
+from .segmentation import codec_applies, cut_bytes, downlink_bytes, net_time
 from .structure import LayerCost
 
 
@@ -99,6 +100,110 @@ def adjust(graph: Sequence[LayerCost], pool: Pool, current_split: int,
         return AdjustmentDecision(s, moved, "down", delta, codec=codec)
     return AdjustmentDecision(current_split, False, "hold", delta,
                               codec=current_codec if cs is not None else None)
+
+
+@dataclasses.dataclass
+class PlacementDecision:
+    """``adjust_placement`` outcome: the (possibly multi-cut) placement to
+    run the next inference with."""
+    placement: PlacementPlan
+    moved: bool
+    reason: str                  # "up" | "down" | "hold"
+    delta_nb: float
+    codec: Optional[str] = None
+
+
+def adjust_placement(graph: Sequence[LayerCost], pool: Pool,
+                     current: PlacementPlan, nb_pred_bps: float,
+                     nb_real_bps: float, thr: Thresholds, *,
+                     pool2: Optional[Pool] = None,
+                     codecs: Optional[Sequence] = None,
+                     edge: Optional[DeviceSpec] = None,
+                     cloud: Optional[DeviceSpec] = None,
+                     down_bw_factor: float = 1.0,
+                     max_err: Optional[float] = None) -> PlacementDecision:
+    """Multi-cut ΔNB adjustment: the same up/down/hold policy as
+    ``adjust``, generalized to move **either cut** of an edge→cloud→edge
+    placement (uplink cut inside ``pool``, downlink cut inside ``pool2``).
+
+    * ``up`` (link will rise): greedy exploit — both cuts jump to their
+      maximum-transfer pool layer and the codec snaps to the lowest-error
+      one, mirroring the paper's max-volume move.
+    * ``down`` (link will drop): joint argmin of predicted transport
+      seconds (uplink at ``NB_pred`` + downlink at
+      ``down_bw_factor × NB_pred``) over (S1 × S2 × codec).  Ties break
+      toward the earliest codec, then the largest S1, then the largest S2
+      — so when ``pool2`` reaches the graph end, choosing ``S2 = n`` (no
+      downlink leg at all) **collapses the plan back to K=1** for free.
+    * otherwise hold.
+
+    With ``pool2=None`` and a single-cut ``current`` this reduces exactly
+    to ``adjust`` (the K=1 special case); the ``AdjustmentDecision`` split
+    is ``placement.primary_cut(n)``."""
+    n = len(graph)
+    cur = current.normalize(n)
+    cur_s1 = cur.primary_cut(n)
+    cur_s2 = cur.tail_cut(n)
+    cs = resolve_codecs(codecs, max_err)
+    cur_codec = next((c for c in cur.cut_codecs if c is not None), None)
+    delta = nb_pred_bps - nb_real_bps
+    s2_opts = list(pool2.splits()) if pool2 is not None else [cur_s2]
+
+    def mk(s1: int, s2: int, codec: Optional[str]) -> PlacementPlan:
+        return PlacementPlan.from_window(s1, s2, n, codec)
+
+    def window_ok(s1: int, s2: int) -> bool:
+        # an adjuster move must keep a REAL cloud window (or be the
+        # explicit edge-only retreat s1 == s2 == n, reachable only when
+        # both pools extend to the graph end — mirroring single-cut
+        # ``adjust``, whose edge-only retreat needs n inside the pool).
+        # Without this, overlapping pools would let the zero-transport
+        # empty mid-graph window (s1 == s2 < n) win every "down" move and
+        # silently collapse the whole model onto the edge.
+        return s1 < s2 or s1 == s2 == n
+
+    if delta > thr.high:
+        s1 = max(pool.splits(), key=lambda s: cut_bytes(graph, s))
+        wide = [s for s in s2_opts if s > s1] or [n]
+        s2 = max(wide, key=lambda s: downlink_bytes(graph, s))
+        codec = min(cs, key=lambda c: c.err_bound).name \
+            if cs is not None else cur_codec
+        plan = mk(s1, s2, codec)
+        moved = plan != cur
+        return PlacementDecision(plan, moved, "up", delta, codec=codec)
+    if delta < thr.low:
+        axis = cs if cs is not None else (None,)
+        best = None
+        # tie-break order mirrors ``adjust`` exactly: its codec-free down
+        # move is argmin over volumes (FIRST minimum -> smallest split),
+        # its joint move scans splits descending (largest tied split) —
+        # uniform trunks tie constantly, so the order is observable
+        for ci, c in enumerate(axis):
+            for s1 in sorted(pool.splits(), reverse=cs is not None):
+                for s2 in sorted(s2_opts, reverse=True):
+                    if not window_ok(s1, s2):
+                        continue
+                    up = net_time(cut_bytes(graph, s1), nb_pred_bps,
+                                  codec=c, applicable=codec_applies(s1, n),
+                                  edge=edge, cloud=cloud) if s1 < s2 else 0.0
+                    dn = net_time(downlink_bytes(graph, s2),
+                                  nb_pred_bps * down_bw_factor, codec=c,
+                                  applicable=codec_applies(s2, n),
+                                  edge=cloud, cloud=edge) \
+                        if s1 < s2 < n else 0.0
+                    t = up + dn
+                    if best is None or t < best[0]:
+                        best = (t, ci, s1, s2)
+        if best is None:
+            return PlacementDecision(cur, False, "down", delta,
+                                     codec=cur_codec)
+        _, ci, s1, s2 = best
+        codec = axis[ci].name if axis[ci] is not None else cur_codec
+        plan = mk(s1, s2, codec)
+        moved = plan != cur
+        return PlacementDecision(plan, moved, "down", delta, codec=codec)
+    return PlacementDecision(cur, False, "hold", delta,
+                             codec=cur_codec if cs is not None else None)
 
 
 def calibrate_thresholds(

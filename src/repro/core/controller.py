@@ -17,18 +17,21 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import List, Optional, Union
 
 import numpy as np
 
 from ..configs.base import ModelConfig
-from .adjustment import AdjustmentDecision, Thresholds, adjust
+from .adjustment import (AdjustmentDecision, PlacementDecision, Thresholds,
+                         adjust, adjust_placement)
 from .codec import Codec, CodecLike, get_codec, resolve_codecs
 from .hardware import DeviceSpec, layer_latency
 from .network import NetworkSim
+from .placement import PlacementPlan
 from .pool import Pool, build_pool
 from .predictor import Predictor, PredictorConfig, train_predictor
-from .segmentation import SegmentationResult, evaluate_split, search
+from .segmentation import (SegmentationResult, evaluate_placement,
+                           evaluate_split, search, search_multicut)
 from .structure import LayerCost, Workload, build_graph
 
 
@@ -39,11 +42,14 @@ class TickResult:
     cloud_s: float
     net_s: float
     total_s: float
-    decision: Optional[AdjustmentDecision]
+    decision: Optional[Union[AdjustmentDecision, PlacementDecision]]
     adjust_overhead_s: float
     bw_real_bps: float
     bw_pred_bps: float
     codec: Optional[str] = None  # codec the transfer was priced with
+    # the full multi-cut placement this tick ran with (multicut mode);
+    # ``split`` stays the primary edge→cloud cut for legacy consumers
+    placement: Optional[PlacementPlan] = None
 
 
 class RoboECC:
@@ -53,7 +59,18 @@ class RoboECC:
     ``adjust_codecs`` additionally lets the per-tick ΔNB move pick a codec
     jointly with the split (the first list entry is the preferred /
     lowest-error format).  ``use_codec=True`` is the backwards-compatible
-    alias for ``codec="int8"``."""
+    alias for ``codec="int8"``.
+
+    ``multicut=True`` plans over K-segment placements
+    (``core/placement.py``): Alg. 1 becomes the (S1, S2, codec) multi-cut
+    scan, the per-tick ΔNB move may shift **either** cut (a second
+    parameter-sharing pool ``pool2`` wraps the downlink cut), and every
+    latency is priced through ``evaluate_placement`` — the downlink leg
+    rides ``down_bw_factor × bandwidth``.  ``split`` remains the primary
+    edge→cloud cut for legacy consumers; single-cut behaviour is the exact
+    K=1 special case (a multicut controller whose planner collapses the
+    tail keeps ``placement.is_single``).  Multicut codec state must come
+    from the ``core/codec.py`` registry (plans carry codec *names*)."""
 
     def __init__(self, cfg: ModelConfig, edge: DeviceSpec, cloud: DeviceSpec,
                  *, workload: Workload = Workload(),
@@ -64,7 +81,9 @@ class RoboECC:
                  use_codec: bool = False,
                  codec: CodecLike = None,
                  adjust_codecs: Optional[List] = None,
-                 graph: Optional[List[LayerCost]] = None):
+                 graph: Optional[List[LayerCost]] = None,
+                 multicut: bool = False,
+                 down_bw_factor: float = 1.0):
         self.cfg = cfg
         self.edge_dev, self.cloud_dev = edge, cloud
         self.workload = workload
@@ -77,15 +96,47 @@ class RoboECC:
             else build_graph(cfg, workload)
         self.cloud_budget_bytes = cloud_budget_bytes
         self.pool_overhead_target = pool_overhead_target
+        self.multicut = multicut
+        self.down_bw_factor = down_bw_factor
         self.seg: SegmentationResult = search(
             self.graph, edge, cloud, nominal_bw_bps,
             cloud_budget_bytes=cloud_budget_bytes,
             input_bytes=workload.input_bytes, codec=self.codec)
-        self.pool: Pool = build_pool(self.graph, self.seg.split,
-                                     pool_overhead_target)
-        self.split = self.seg.split
+        self.placement: PlacementPlan = self._plan_placement(nominal_bw_bps,
+                                                             cloud_budget_bytes)
+        self._rebuild_pools()
         self.thresholds = thresholds or Thresholds(high=2e6, low=-2e6)
         self.predictor: Optional[Predictor] = None
+
+    # ------------------------------------------------------------- planning
+    def _plan_placement(self, nominal_bw_bps: float,
+                        cloud_budget_bytes: Optional[float]
+                        ) -> PlacementPlan:
+        """Alg. 1 (single-cut) or the multi-cut (S1, S2) scan, as a
+        ``PlacementPlan``.  Both paths share the codec the controller was
+        built with."""
+        if not self.multicut:
+            return PlacementPlan.single(
+                self.seg.split, self.codec.name if self.codec else None)
+        mc = search_multicut(
+            self.graph, self.edge_dev, self.cloud_dev, [nominal_bw_bps],
+            cloud_budget_bytes,
+            codecs=[self.codec] if self.codec is not None else None,
+            rtt_s=0.0, input_bytes=self.workload.input_bytes,
+            down_bw_factor=self.down_bw_factor)
+        return mc.plan_at(0)
+
+    def _rebuild_pools(self) -> None:
+        """One parameter-sharing pool per real cut: ``pool`` wraps the
+        primary edge→cloud cut, ``pool2`` the cloud→edge tail cut (absent
+        for single-cut placements)."""
+        n = len(self.graph)
+        self.split = self.placement.primary_cut(n)
+        self.pool: Pool = build_pool(self.graph, self.split,
+                                     self.pool_overhead_target)
+        s2 = self.placement.tail_cut(n)
+        self.pool2: Optional[Pool] = build_pool(
+            self.graph, s2, self.pool_overhead_target) if s2 < n else None
 
     @property
     def use_codec(self) -> bool:
@@ -110,6 +161,16 @@ class RoboECC:
                               input_bytes=self.workload.input_bytes,
                               codec=self.codec)
 
+    def placement_latency_at(self, bw_bps: float, rtt_s: float = 0.0):
+        """(edge_s, cloud_s, net_s) of the current (possibly multi-cut)
+        placement — the generalization of ``latency_at``.  ``net_s`` is
+        uplink + downlink; each leg carries its own rtt."""
+        ev = evaluate_placement(self.graph, self.placement, self.edge_dev,
+                                self.cloud_dev, bw_bps, rtt_s=rtt_s,
+                                input_bytes=self.workload.input_bytes,
+                                down_bw_factor=self.down_bw_factor)
+        return ev.edge_s, ev.cloud_s, ev.net_s
+
     # ------------------------------------------------------------------ tick
     def tick(self, net: NetworkSim, adjust_enabled: bool = True) -> TickResult:
         bw_real = net.now_bps
@@ -119,13 +180,23 @@ class RoboECC:
         if adjust_enabled and self.predictor is not None:
             window = net.window(self.predictor.cfg.window)
             bw_pred = self.predictor.predict(window)
-            decision = adjust(self.graph, self.pool, self.split, bw_pred,
-                              bw_real, self.thresholds,
-                              codecs=self.adjust_codecs,
-                              current_codec=self.codec.name
-                              if self.codec else None,
-                              edge=self.edge_dev, cloud=self.cloud_dev)
-            self.split = decision.split
+            if self.multicut:
+                decision = adjust_placement(
+                    self.graph, self.pool, self.placement, bw_pred, bw_real,
+                    self.thresholds, pool2=self.pool2,
+                    codecs=self.adjust_codecs,
+                    edge=self.edge_dev, cloud=self.cloud_dev,
+                    down_bw_factor=self.down_bw_factor)
+                self.placement = decision.placement
+                self.split = self.placement.primary_cut(len(self.graph))
+            else:
+                decision = adjust(self.graph, self.pool, self.split, bw_pred,
+                                  bw_real, self.thresholds,
+                                  codecs=self.adjust_codecs,
+                                  current_codec=self.codec.name
+                                  if self.codec else None,
+                                  edge=self.edge_dev, cloud=self.cloud_dev)
+                self.split = decision.split
             if decision.codec is not None and (
                     self.codec is None or decision.codec != self.codec.name):
                 # resolve within the adjuster's own axis, NOT the global
@@ -134,16 +205,23 @@ class RoboECC:
                 # would miss or silently swap for the bf16 defaults
                 self.codec = next(c for c in self.adjust_codecs
                                   if c.name == decision.codec)
+            if not self.multicut:
+                self.placement = PlacementPlan.single(
+                    self.split, self.codec.name if self.codec else None)
         overhead = time.perf_counter() - t0
         # the *next* tick's bandwidth is what the transfer actually sees
         net.step()
         bw_serve = net.now_bps
-        e, c, t = self.latency_at(self.split, bw_serve, net.rtt_s)
+        if self.multicut:
+            e, c, t = self.placement_latency_at(bw_serve, net.rtt_s)
+        else:
+            e, c, t = self.latency_at(self.split, bw_serve, net.rtt_s)
         return TickResult(split=self.split, edge_s=e, cloud_s=c, net_s=t,
                           total_s=e + c + t + (overhead if adjust_enabled else 0.0),
                           decision=decision, adjust_overhead_s=overhead,
                           bw_real_bps=bw_real, bw_pred_bps=bw_pred,
-                          codec=self.codec.name if self.codec else None)
+                          codec=self.codec.name if self.codec else None,
+                          placement=self.placement)
 
     # ------------------------------------------------------------ elasticity
     def replan(self, *, edge: Optional[DeviceSpec] = None,
@@ -168,7 +246,7 @@ class RoboECC:
                           nominal_bw_bps, cloud_budget_bytes=cloud_budget_bytes,
                           input_bytes=self.workload.input_bytes,
                           codec=self.codec)
-        self.pool = build_pool(self.graph, self.seg.split,
-                               self.pool_overhead_target)
-        self.split = self.seg.split
+        self.placement = self._plan_placement(nominal_bw_bps,
+                                              cloud_budget_bytes)
+        self._rebuild_pools()
         return self.seg

@@ -12,7 +12,7 @@ from typing import Optional
 import numpy as np
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class TraceConfig:
     mean_bps: float = 10e6          # 10 MB/s (paper Fig. 3 "good" regime)
     bad_bps: float = 1e6            # 1 MB/s (paper Fig. 3 degraded regime)
@@ -27,9 +27,13 @@ class TraceConfig:
     floor_bps: float = 0.05e6
 
 
-def generate_trace(n_steps: int, cfg: TraceConfig = TraceConfig(),
+def generate_trace(n_steps: int, cfg: Optional[TraceConfig] = None,
                    seed: int = 0) -> np.ndarray:
-    """Bandwidth (bytes/s) at each control-loop tick."""
+    """Bandwidth (bytes/s) at each control-loop tick.  ``cfg`` defaults to
+    a fresh ``TraceConfig()`` per call — a shared default instance would be
+    one mutable object across every call site (``TraceConfig`` is frozen
+    now, but the default still shouldn't alias)."""
+    cfg = cfg if cfg is not None else TraceConfig()
     rng = np.random.default_rng(seed)
     bw = np.empty(n_steps)
     regime_bad = False
@@ -65,6 +69,11 @@ class NetworkSim:
         return float(self.trace[min(self.t, len(self.trace) - 1)])
 
     def transfer_s(self, n_bytes: float) -> float:
+        """Seconds to ship ``n_bytes`` at the current tick.  Zero bytes
+        cost zero — no rtt is paid when nothing crosses the link, matching
+        ``segmentation.net_time`` (edge-only splits are transfer-free)."""
+        if n_bytes <= 0:
+            return 0.0
         return n_bytes / self.now_bps + self.rtt_s
 
     def step(self, n: int = 1) -> None:

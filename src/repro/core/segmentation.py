@@ -21,6 +21,24 @@ and the ``S = n`` no-transfer extremes are codec-free by construction.
 search (split × codec) jointly — latency ties break toward the earliest
 codec in the list, then the largest split within that codec (so put the
 preferred / lossless codec first).
+
+Multi-cut placements (``core/placement.py``): ``evaluate_placement``
+prices an arbitrary K-segment ``PlacementPlan``, and ``search_multicut`` /
+``sweep_multicut`` scan every edge→cloud→edge plan ``(S1, S2)`` — edge
+``[0, S1)``, cloud ``[S1, S2)``, edge ``[S2, n)`` — in one
+(codec × S1 × S2 × bandwidth) numpy pass over the triangular ``S1 ≤ S2``
+mask.  The uplink cut at ``S1`` is priced exactly like the single-cut
+transport; the downlink cut at ``S2`` is priced separately: it carries
+only the bytes the tail segment consumes (``LayerCost.in_transfer_bytes``,
+small for action heads), rides the usually-faster downlink direction
+(``down_bw_factor`` × uplink bandwidth), pays a second rtt, and encodes on
+the cloud / decodes on the edge.  ``S2 = n`` collapses to the single-cut
+row, ``S1 = S2`` to edge-only — so the single-split world is the K=1
+special case, and latency ties prefer it (largest ``S2`` wins ties).
+Cloud budget feasibility is the **window** load ``weights[S1:S2)`` — the
+knob that makes multi-cut genuinely better: under a tight per-robot cloud
+quota the byte-heavy but compute-light action head can stay on the edge,
+freeing quota for one more expensive trunk layer on the cloud.
 """
 from __future__ import annotations
 
@@ -31,6 +49,7 @@ import numpy as np
 
 from .codec import Codec, get_codec, resolve_codecs, transport_s
 from .hardware import DeviceSpec, layer_latency
+from .placement import CLOUD, EDGE, PlacementPlan
 from .structure import LayerCost
 
 
@@ -62,6 +81,19 @@ def codec_applies(split: int, n: int) -> bool:
     """Codecs compress mid-graph activations only: the split-0 raw
     observation ships as-is and the split-n extreme ships nothing."""
     return 0 < split < n
+
+
+def downlink_bytes(graph: Sequence[LayerCost], cut: int) -> float:
+    """Wire bytes of a cloud→edge cut at ``cut``: what the tail segment
+    starting at layer ``cut`` actually consumes.  Defaults to the full
+    upstream activation (``cut_bytes``); action heads override it with
+    their small conditioning slice (``LayerCost.in_transfer_bytes``)."""
+    if cut >= len(graph):
+        return 0.0
+    need = graph[cut].in_transfer_bytes
+    if need is not None:
+        return need
+    return cut_bytes(graph, cut)
 
 
 def net_time(wire_raw: float, bandwidth_bps: float, *, rtt_s: float = 0.0,
@@ -190,6 +222,9 @@ class GraphArrays:
     # encode/decode without re-threading DeviceSpecs through every caller
     edge_dev: Optional[DeviceSpec] = None
     cloud_dev: Optional[DeviceSpec] = None
+    # RAW cloud→edge downlink bytes if the tail starts at S (semantic
+    # in_transfer of layer S; 0 at S = n) — the multi-cut second cut
+    down_wire_bytes: Optional[np.ndarray] = None
 
     def latency(self, split: int, bandwidth_bps: float, rtt_s: float = 0.0,
                 codec: Optional[Codec] = None):
@@ -202,6 +237,38 @@ class GraphArrays:
                        applicable=codec_applies(split, self.n),
                        edge=self.edge_dev, cloud=self.cloud_dev)
         return float(self.edge_s[split]), float(self.cloud_s[split]), net
+
+    def placement_latency(self, s1: int, s2: int, bandwidth_bps: float,
+                          rtt_s: float = 0.0,
+                          codec: Optional[Codec] = None,
+                          down_bw_factor: float = 1.0):
+        """(edge_s, cloud_s, up_s, down_s) of the edge→cloud→edge placement
+        edge ``[0, s1)`` / cloud ``[s1, s2)`` / edge ``[s2, n)`` — the O(1)
+        equivalent of ``evaluate_placement``.  ``s2 == n`` is the single
+        cut (down_s = 0), ``s1 == s2`` edge-only (no transfer at all).
+        The downlink leg rides ``down_bw_factor × bandwidth`` and is
+        encoded on the cloud device / decoded on the edge device."""
+        n = self.n
+        e = float(self.edge_s[s1] + self.edge_s[n] - self.edge_s[s2])
+        if s1 >= s2:
+            return e, 0.0, 0.0, 0.0
+        c = float(self.cloud_s[s1] - self.cloud_s[s2])
+        up = net_time(self.wire_bytes[s1], bandwidth_bps, rtt_s=rtt_s,
+                      codec=codec, applicable=codec_applies(s1, n),
+                      edge=self.edge_dev, cloud=self.cloud_dev)
+        down = 0.0
+        if s2 < n and self.down_wire_bytes is not None:
+            down = net_time(self.down_wire_bytes[s2],
+                            bandwidth_bps * down_bw_factor, rtt_s=rtt_s,
+                            codec=codec, applicable=codec_applies(s2, n),
+                            edge=self.cloud_dev, cloud=self.edge_dev)
+        return e, c, up, down
+
+    def window_load_bytes(self, s1: int, s2: int) -> float:
+        """Cloud-hosted weight bytes of the window ``[s1, s2)``."""
+        if s1 >= s2:
+            return 0.0
+        return float(self.cloud_load_bytes[s1] - self.cloud_load_bytes[s2])
 
 
 def graph_arrays(graph: Sequence[LayerCost], edge: DeviceSpec,
@@ -223,9 +290,12 @@ def graph_arrays(graph: Sequence[LayerCost], edge: DeviceSpec,
     load = np.concatenate([np.cumsum(w[::-1])[::-1], [0.0]])
     wire = np.array([cut_bytes(graph, s, input_bytes) for s in range(n + 1)],
                     dtype=np.float64)
+    down = np.array([downlink_bytes(graph, s) for s in range(n + 1)],
+                    dtype=np.float64)
     return GraphArrays(edge_s=edge_s, cloud_s=cloud_s, wire_bytes=wire,
                        cloud_load_bytes=load, n=n,
-                       edge_dev=edge, cloud_dev=cloud)
+                       edge_dev=edge, cloud_dev=cloud,
+                       down_wire_bytes=down)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -428,6 +498,363 @@ def sweep_search(graphs: Mapping[str, Sequence[LayerCost]], edge: DeviceSpec,
             bandwidths_bps=bw, splits=s, total_s=totals[i][ci, s, cols],
             edge_s=E[i][s], cloud_s=C[i][s], net_s=net[i][ci, s, cols],
             codec_idx=ci, codec_names=codec_names)
+    return out
+
+
+# ------------------------------------------------------------ multi-cut
+@dataclasses.dataclass(frozen=True)
+class PlacementEval:
+    """One priced ``PlacementPlan``: latency decomposition in seconds plus
+    the cloud-hosted weight load.  ``up_s``/``down_s`` are the edge→cloud /
+    cloud→edge transport legs (each includes its own rtt and codec
+    encode/decode compute); ``net_s = up_s + down_s``."""
+    plan: PlacementPlan
+    total_s: float
+    edge_s: float
+    cloud_s: float
+    up_s: float
+    down_s: float
+    cloud_load_bytes: float
+    codec: Optional[str] = None
+
+    @property
+    def net_s(self) -> float:
+        return self.up_s + self.down_s
+
+
+def evaluate_placement(graph: Sequence[LayerCost], plan: PlacementPlan,
+                       edge: DeviceSpec, cloud: DeviceSpec,
+                       bandwidth_bps: float, *, rtt_s: float = 0.0,
+                       input_bytes: float = 0.0,
+                       down_bw_factor: float = 1.0) -> PlacementEval:
+    """Price an arbitrary K-segment placement: per-segment compute on its
+    tier plus one transport leg per tier-changing cut.  Edge→cloud cuts
+    (uplinks) ship the cut activation (``cut_bytes``; the raw observation
+    at cut 0) on the uplink bandwidth with encode-on-edge /
+    decode-on-cloud; cloud→edge cuts (downlinks) ship only what the
+    receiving segment consumes (``downlink_bytes``) on
+    ``down_bw_factor × bandwidth`` with encode-on-cloud / decode-on-edge.
+    Every real cut pays ``rtt_s``.  The K=1 plan reproduces
+    ``evaluate_split`` exactly."""
+    n = len(graph)
+    norm = plan.normalize(n)
+    dev = {EDGE: edge, CLOUD: cloud}
+    edge_s = cloud_s = up_s = down_s = 0.0
+    cloud_load = 0.0
+    segs = [s for s in norm.segments(n) if s[1] > s[0]]
+    for a, b, tier in segs:
+        t = sum(layer_latency(c, dev[tier]) for c in graph[a:b])
+        if tier == EDGE:
+            edge_s += t
+        else:
+            cloud_s += t
+            cloud_load += sum(c.weight_bytes for c in graph[a:b])
+    if segs and segs[0][2] == CLOUD:
+        # cloud-first placement: the raw observation still has to reach
+        # the cloud — the same codec-free split-0 upload evaluate_split
+        # prices (the leading empty edge segment normalizes away, but the
+        # wire bytes don't)
+        up_s += net_time(cut_bytes(graph, 0, input_bytes), bandwidth_bps,
+                         rtt_s=rtt_s, applicable=False)
+    for i in range(1, len(segs)):
+        cut, _, dst_tier = segs[i]
+        codec = get_codec(norm.cut_codecs[i - 1])
+        if dst_tier == CLOUD:               # uplink
+            wire = cut_bytes(graph, cut, input_bytes)
+            up_s += net_time(wire, bandwidth_bps, rtt_s=rtt_s, codec=codec,
+                             applicable=codec_applies(cut, n),
+                             edge=edge, cloud=cloud)
+        else:                               # downlink
+            wire = downlink_bytes(graph, cut)
+            down_s += net_time(wire, bandwidth_bps * down_bw_factor,
+                               rtt_s=rtt_s, codec=codec,
+                               applicable=codec_applies(cut, n),
+                               edge=cloud, cloud=edge)
+    codec_names = [c for c in norm.cut_codecs if c is not None]
+    return PlacementEval(plan=norm, total_s=edge_s + cloud_s + up_s + down_s,
+                         edge_s=edge_s, cloud_s=cloud_s, up_s=up_s,
+                         down_s=down_s, cloud_load_bytes=cloud_load,
+                         codec=codec_names[0] if codec_names else None)
+
+
+@dataclasses.dataclass(frozen=True)
+class MulticutResult:
+    """Joint (S1 × S2 × codec) optimum for a whole bandwidth sweep (arrays
+    of shape ``(B,)``).  ``s2[b] == n`` means the optimum collapsed to the
+    single-cut plan at ``s1[b]`` (no on-edge tail); ``s1 == s2`` is
+    edge-only.  ``codec_idx`` indexes ``codec_names`` (both cuts of a plan
+    share the chosen codec)."""
+    bandwidths_bps: np.ndarray
+    s1: np.ndarray
+    s2: np.ndarray
+    total_s: np.ndarray
+    edge_s: np.ndarray
+    cloud_s: np.ndarray
+    up_s: np.ndarray
+    down_s: np.ndarray
+    n: int
+    codec_idx: Optional[np.ndarray] = None
+    codec_names: Optional[Tuple[str, ...]] = None
+
+    def codec_at(self, b: int) -> Optional[str]:
+        if self.codec_idx is None:
+            return None
+        return self.codec_names[int(self.codec_idx[b])]
+
+    def plan_at(self, b: int) -> PlacementPlan:
+        """Materialize bandwidth bin ``b`` as a ``PlacementPlan``."""
+        return PlacementPlan.from_window(int(self.s1[b]), int(self.s2[b]),
+                                         self.n, self.codec_at(b))
+
+
+def search_multicut_scalar(graph: Sequence[LayerCost], edge: DeviceSpec,
+                           cloud: DeviceSpec, bandwidth_bps: float,
+                           cloud_budget_bytes: Optional[float] = None, *,
+                           codecs: Optional[Sequence] = None,
+                           rtt_s: float = 0.0, input_bytes: float = 0.0,
+                           down_bw_factor: float = 1.0,
+                           arrays: Optional[GraphArrays] = None,
+                           max_err: Optional[float] = None) -> PlacementEval:
+    """Scalar (S1, S2, codec) oracle: exhaustive triangular scan in the
+    exact tie-break order the vectorized pass reproduces — earliest codec
+    in the list, then largest ``S1``, then largest ``S2`` (so single-cut
+    ``S2 = n`` wins ties over a pointless second cut).  The property-test
+    oracle for ``search_multicut``."""
+    ga = arrays if arrays is not None else graph_arrays(
+        graph, edge, cloud, input_bytes=input_bytes)
+    n = ga.n
+    budget = cloud_budget_bytes if cloud_budget_bytes is not None \
+        else float("inf")
+    cs = resolve_codecs(codecs, max_err)
+    axis: Sequence[Optional[Codec]] = cs if cs is not None else (None,)
+    best = None
+    for ci, c in enumerate(axis):
+        for s1 in range(n, -1, -1):
+            for s2 in range(n, s1 - 1, -1):
+                if ga.window_load_bytes(s1, s2) > budget:
+                    continue
+                e, cl, up, dn = ga.placement_latency(
+                    s1, s2, bandwidth_bps, rtt_s, codec=c,
+                    down_bw_factor=down_bw_factor)
+                total = e + cl + up + dn
+                if best is None or total < best[0]:
+                    best = (total, ci, s1, s2, e, cl, up, dn)
+    assert best is not None, "no feasible placement (budget < 0?)"
+    total, ci, s1, s2, e, cl, up, dn = best
+    name = axis[ci].name if axis[ci] is not None else None
+    plan = PlacementPlan.from_window(s1, s2, n, name)
+    return PlacementEval(plan=plan, total_s=total, edge_s=e, cloud_s=cl,
+                         up_s=up, down_s=dn,
+                         cloud_load_bytes=ga.window_load_bytes(s1, s2),
+                         codec=name)
+
+
+def search_multicut(graph: Sequence[LayerCost], edge: DeviceSpec,
+                    cloud: DeviceSpec, bandwidths_bps,
+                    cloud_budget_bytes: Optional[float] = None, *,
+                    codecs: Optional[Sequence] = None,
+                    rtt_s: float = 0.0, input_bytes: float = 0.0,
+                    down_bw_factor: float = 1.0,
+                    arrays: Optional[GraphArrays] = None,
+                    max_err: Optional[float] = None,
+                    single_cut_only: bool = False) -> MulticutResult:
+    """Vectorized multi-cut Alg. 1: the joint optimum over every
+    edge→cloud→edge plan ``(S1 ≤ S2)``, every codec and every bandwidth in
+    one (C, S1, S2, B) numpy pass.
+
+    Equivalent to ``search_multicut_scalar`` per bandwidth (ties: earliest
+    codec, largest S1, largest S2 — single-cut preferred on ties).  The
+    cloud budget gates the **window** load ``weights[S1:S2)``; restricted
+    to ``single_cut_only`` (mask ``S2 = n``) the pass reproduces
+    ``search``/``search_vec`` exactly — the K=1 property the tests pin.
+    Bandwidths in BYTES/s, latencies in seconds; the downlink leg rides
+    ``down_bw_factor × bandwidth``.
+    """
+    ga = arrays if arrays is not None else graph_arrays(
+        graph, edge, cloud, input_bytes=input_bytes)
+    n = ga.n
+    S = n + 1
+    bw = np.atleast_1d(np.asarray(bandwidths_bps, dtype=np.float64))
+    budget = cloud_budget_bytes if cloud_budget_bytes is not None \
+        else float("inf")
+    cs = resolve_codecs(codecs, max_err)
+
+    s1 = np.arange(S)[:, None]
+    s2 = np.arange(S)[None, :]
+    tri = s1 < s2                                   # real cloud window
+    E, C_, L = ga.edge_s, ga.cloud_s, ga.cloud_load_bytes
+    edge_t = E[:, None] + (E[n] - E[None, :])       # (S1, S2)
+    cloud_t = np.where(tri, C_[:, None] - C_[None, :], 0.0)
+    load = np.where(tri, L[:, None] - L[None, :], 0.0)
+    infeasible = (s1 > s2) | (load > budget)
+    if single_cut_only:
+        infeasible = infeasible | (s2 != n)
+
+    # per-(codec, cut) compressed wire + codec compute (C, S); raw when no
+    # codec axis.  Uplink encodes on the edge, downlink on the cloud.
+    if cs is None:
+        up_w, up_o = ga.wire_bytes[None, :], np.zeros((1, S))
+        dn_w, dn_o = ga.down_wire_bytes[None, :], np.zeros((1, S))
+        n_c = 1
+    else:
+        up_w, up_o = _codec_wire_overhead(ga.wire_bytes, n, cs, edge, cloud)
+        dn_w, dn_o = _codec_wire_overhead(ga.down_wire_bytes, n, cs,
+                                          cloud, edge)
+        n_c = len(cs)
+    net_up = np.where(up_w[:, :, None] > 0,
+                      up_w[:, :, None] / bw[None, None, :] + rtt_s, 0.0) \
+        + up_o[:, :, None]                          # (C, S, B)
+    net_dn = np.where(dn_w[:, :, None] > 0,
+                      dn_w[:, :, None] / (bw[None, None, :]
+                                          * down_bw_factor) + rtt_s, 0.0) \
+        + dn_o[:, :, None]
+
+    totals = edge_t[None, :, :, None] + cloud_t[None, :, :, None] \
+        + np.where(tri[None, :, :, None],
+                   net_up[:, :, None, :] + net_dn[:, None, :, :], 0.0)
+    totals = np.where(infeasible[None, :, :, None], np.inf, totals)
+
+    # flatten (codec, flipped-S1, flipped-S2): first occurrence of the min
+    # is the earliest codec at the largest (S1, S2) — the scalar tie-break
+    flat = totals[:, ::-1, ::-1, :].reshape(n_c * S * S, len(bw))
+    idx = np.argmin(flat, axis=0)
+    ci = idx // (S * S)
+    rem = idx % (S * S)
+    s1v = n - rem // S
+    s2v = n - rem % S
+    cols = np.arange(len(bw))
+    real = s1v < s2v
+    return MulticutResult(
+        bandwidths_bps=bw, s1=s1v, s2=s2v,
+        total_s=totals[ci, s1v, s2v, cols],
+        edge_s=edge_t[s1v, s2v], cloud_s=cloud_t[s1v, s2v],
+        up_s=np.where(real, net_up[ci, s1v, cols], 0.0),
+        down_s=np.where(real, net_dn[ci, s2v, cols], 0.0),
+        n=n,
+        codec_idx=ci if cs is not None else None,
+        codec_names=tuple(c.name for c in cs) if cs is not None else None)
+
+
+def sweep_multicut(graphs: Mapping[str, Sequence[LayerCost]],
+                   edge: DeviceSpec, cloud: DeviceSpec, bandwidths_bps,
+                   cloud_budget_bytes: Union[None, float,
+                                             Mapping[str,
+                                                     Optional[float]]] = None,
+                   *, codecs: Optional[Sequence] = None,
+                   rtt_s: float = 0.0,
+                   input_bytes: Union[float, Mapping[str, float]] = 0.0,
+                   down_bw_factor: float = 1.0,
+                   max_err: Optional[float] = None,
+                   single_cut_only: bool = False
+                   ) -> Dict[str, MulticutResult]:
+    """Fleet-scale multi-cut plan: one padded (M, C, S1, S2, B) pass over
+    every registered model — the multi-cut sibling of ``sweep_search``.
+    Shallower models are masked (not padded with sentinel costs) so the
+    triangular window algebra stays finite.  Per-model budgets /
+    input_bytes accept the same scalar-or-mapping forms as
+    ``sweep_search``."""
+    names = list(graphs)
+    if not names:
+        raise ValueError("sweep_multicut needs at least one graph")
+    bw = np.atleast_1d(np.asarray(bandwidths_bps, dtype=np.float64))
+    cs = resolve_codecs(codecs, max_err)
+    n_c = len(cs) if cs is not None else 1
+
+    def per_model(val, name, default):
+        if isinstance(val, Mapping):
+            v = val.get(name, default)
+        else:
+            v = val if val is not None else default
+        return default if v is None else v
+
+    gas = [graph_arrays(graphs[k], edge, cloud,
+                        input_bytes=per_model(input_bytes, k, 0.0))
+           for k in names]
+    S = max(ga.n for ga in gas) + 1
+    M = len(names)
+    ns = np.array([ga.n for ga in gas])
+
+    def pad(vals):
+        out = np.zeros((M, S), dtype=np.float64)
+        for i, v in enumerate(vals):
+            out[i, :len(v)] = v
+        return out
+
+    E = pad([ga.edge_s for ga in gas])
+    C = pad([ga.cloud_s for ga in gas])
+    L = pad([ga.cloud_load_bytes for ga in gas])
+    Wu = pad([ga.wire_bytes for ga in gas])
+    Wd = pad([ga.down_wire_bytes for ga in gas])
+    En = E[np.arange(M), ns]                        # total edge latency
+    budgets = np.array([per_model(cloud_budget_bytes, k, float("inf"))
+                        for k in names], dtype=np.float64)
+
+    s1 = np.arange(S)[:, None]
+    s2 = np.arange(S)[None, :]
+    tri = (s1 < s2)[None, :, :]
+    in_range = (s1[None, :, :] <= ns[:, None, None]) \
+        & (s2[None, :, :] <= ns[:, None, None])
+    edge_t = E[:, :, None] + (En[:, None, None] - E[:, None, :])  # (M,S1,S2)
+    cloud_t = np.where(tri, C[:, :, None] - C[:, None, :], 0.0)
+    load = np.where(tri, L[:, :, None] - L[:, None, :], 0.0)
+    infeasible = ~in_range | (s1 > s2)[None, :, :] \
+        | (load > budgets[:, None, None])
+    if single_cut_only:
+        infeasible = infeasible | (s2[None, :, :] != ns[:, None, None])
+
+    # per-model codec wire/overhead (M, C, S) — mid-graph gate uses each
+    # model's own depth, so the shared helper runs on the unpadded prefix
+    up_w = np.zeros((M, n_c, S))
+    up_o = np.zeros((M, n_c, S))
+    dn_w = np.zeros((M, n_c, S))
+    dn_o = np.zeros((M, n_c, S))
+    for i, ga in enumerate(gas):
+        k = ga.n + 1
+        if cs is None:
+            up_w[i, 0, :k] = ga.wire_bytes
+            dn_w[i, 0, :k] = ga.down_wire_bytes
+        else:
+            up_w[i, :, :k], up_o[i, :, :k] = _codec_wire_overhead(
+                ga.wire_bytes, ga.n, cs, edge, cloud)
+            dn_w[i, :, :k], dn_o[i, :, :k] = _codec_wire_overhead(
+                ga.down_wire_bytes, ga.n, cs, cloud, edge)
+    net_up = np.where(up_w[..., None] > 0,
+                      up_w[..., None] / bw[None, None, None, :] + rtt_s,
+                      0.0) + up_o[..., None]        # (M, C, S, B)
+    net_dn = np.where(dn_w[..., None] > 0,
+                      dn_w[..., None] / (bw[None, None, None, :]
+                                         * down_bw_factor) + rtt_s,
+                      0.0) + dn_o[..., None]
+
+    totals = edge_t[:, None, :, :, None] + cloud_t[:, None, :, :, None] \
+        + np.where(tri[:, None, :, :, None],
+                   net_up[:, :, :, None, :] + net_dn[:, :, None, :, :], 0.0)
+    totals = np.where(infeasible[:, None, :, :, None], np.inf, totals)
+
+    flat = totals[:, :, ::-1, ::-1, :].reshape(M, n_c * S * S, len(bw))
+    idx = np.argmin(flat, axis=1)                   # (M, B)
+    cols = np.arange(len(bw))
+    out: Dict[str, MulticutResult] = {}
+    codec_names = tuple(c.name for c in cs) if cs is not None else None
+    for i, k in enumerate(names):
+        n_i = gas[i].n
+        ci = idx[i] // (S * S)
+        rem = idx[i] % (S * S)
+        # un-flip the padded axes; out-of-range cells are inf-masked, so
+        # the first-occurrence argmin still lands on the largest VALID
+        # (S1, S2) — the scalar tie-break — for every model depth
+        s1v = (S - 1) - rem // S
+        s2v = (S - 1) - rem % S
+        real = s1v < s2v
+        out[k] = MulticutResult(
+            bandwidths_bps=bw, s1=s1v, s2=s2v,
+            total_s=totals[i, ci, s1v, s2v, cols],
+            edge_s=edge_t[i, s1v, s2v], cloud_s=cloud_t[i, s1v, s2v],
+            up_s=np.where(real, net_up[i, ci, s1v, cols], 0.0),
+            down_s=np.where(real, net_dn[i, ci, s2v, cols], 0.0),
+            n=n_i,
+            codec_idx=ci if cs is not None else None,
+            codec_names=codec_names)
     return out
 
 

@@ -34,6 +34,16 @@ class LayerCost:
     datamove_bytes: float     # HBM traffic per request (weights + activations)
     out_transfer_bytes: float # wire bytes if the model is cut AFTER this layer
     repeat: int = 1
+    # wire bytes a segment STARTING at this layer actually needs when the
+    # producing segment ships only what the consumer reads (a cloud→edge
+    # downlink cut in a multi-cut placement, core/placement.py).  ``None``
+    # means "the full upstream activation" (the previous layer's
+    # out_transfer_bytes).  Action heads consume a small conditioning
+    # slice — OpenVLA's de-tokenizer reads the final ``action_dim`` token
+    # positions, CogACT's DiT reads the single cognition token — which is
+    # what makes the edge→cloud→edge return leg cheap (ActionFlow's
+    # action-stage-on-edge pattern).
+    in_transfer_bytes: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,7 +109,8 @@ def _block_cost(cfg: ModelConfig, w: Workload, name: str, kind: str,
                 flops_one: float, weight_count: float,
                 d_out: Optional[int] = None, repeat: int = 1,
                 s_out: Optional[int] = None,
-                decode_steps: Optional[int] = None) -> LayerCost:
+                decode_steps: Optional[int] = None,
+                in_transfer_bytes: Optional[float] = None) -> LayerCost:
     """decode_steps: autoregressive invocations of this layer after prefill
     (weights re-read each step; 1-token activation crosses the cut each
     step).  Backbone layers inherit ``w.decode_steps``; ViT/enc/action-model
@@ -121,6 +132,7 @@ def _block_cost(cfg: ModelConfig, w: Workload, name: str, kind: str,
         out_transfer_bytes=w.batch * (s_out + ds) * d_out * w.act_bytes
         * repeat,
         repeat=repeat,
+        in_transfer_bytes=in_transfer_bytes,
     )
 
 
@@ -214,12 +226,18 @@ def build_graph(cfg: ModelConfig, w: Workload = Workload()) -> List[LayerCost]:
     # ---- S_dec: action model / head --------------------------------------
     if cfg.family == "vla":
         kind = cfg.vla_action_head
+        # the action stage consumes a small conditioning slice of the final
+        # backbone activation (detok: the last action_dim token positions;
+        # DiT/MLP/LSTM/diffusion: the single cognition token) — the
+        # downlink bytes of an edge→cloud→edge placement's second cut
+        detok_in = w.batch * cfg.action_dim * d * w.act_bytes
+        cog_in = w.batch * 1 * d * w.act_bytes
         if kind in ("detok", ""):
             g.append(_block_cost(cfg, w, "detok", "head",
                                  2 * cfg.action_dim * d * cfg.vocab_size,
                                  cfg.vocab_size * d,
                                  d_out=cfg.action_dim, s_out=1,
-                                 decode_steps=0))
+                                 decode_steps=0, in_transfer_bytes=detok_in))
         elif kind == "dit":
             dd, hor = cfg.dit_dim, cfg.action_horizon
             reps = cfg.diffusion_steps
@@ -231,24 +249,29 @@ def build_graph(cfg: ModelConfig, w: Workload = Workload()) -> List[LayerCost]:
                 g.append(_block_cost(cfg, w, f"dit.{i}", "dit",
                                      (attn + mlp + ada), wcount,
                                      d_out=dd, s_out=hor, repeat=reps,
-                                     decode_steps=0))
+                                     decode_steps=0,
+                                     in_transfer_bytes=cog_in
+                                     if i == 0 else None))
         elif kind == "mlp":
             g.append(_block_cost(cfg, w, "am.mlp", "am",
                                  2 * (4 * d * d + 4 * d * d), 8 * d * d,
                                  d_out=cfg.action_dim,
-                                 s_out=cfg.action_horizon, decode_steps=0))
+                                 s_out=cfg.action_horizon, decode_steps=0,
+                                 in_transfer_bytes=cog_in))
         elif kind == "lstm":
             g.append(_block_cost(cfg, w, "am.lstm", "am",
                                  cfg.action_horizon * 2 * 8 * d * d,
                                  8 * d * d, d_out=cfg.action_dim,
                                  s_out=cfg.action_horizon,
-                                 repeat=cfg.action_horizon, decode_steps=0))
+                                 repeat=cfg.action_horizon, decode_steps=0,
+                                 in_transfer_bytes=cog_in))
         elif kind == "diffusion":
             g.append(_block_cost(cfg, w, "am.diff", "am",
                                  2 * 3 * d * d, 3 * d * d,
                                  d_out=cfg.action_dim,
                                  s_out=cfg.action_horizon,
-                                 repeat=cfg.diffusion_steps, decode_steps=0))
+                                 repeat=cfg.diffusion_steps, decode_steps=0,
+                                 in_transfer_bytes=cog_in))
     else:
         g.append(_block_cost(cfg, w, "head", "head",
                              2 * S * d * cfg.vocab_size,

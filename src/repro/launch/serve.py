@@ -58,7 +58,7 @@ def main():
     n = cfg.n_layers
     pool_lo = max(n // 2 - 1, 0)
     ex = LMSplitExecutor(cfg, SplitPlan(pool_lo, min(pool_lo + 3, n),
-                                        use_codec=args.codec))
+                                        codec="int8" if args.codec else ""))
     # map the control-plane split into the reduced model's pool range
     def map_split(s):
         frac = s / max(len(ctl.graph), 1)

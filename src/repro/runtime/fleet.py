@@ -11,6 +11,13 @@ Composes the pieces that exist elsewhere in the repo but never meet:
   codecs as their link moves between bins (counted in
   ``n_codec_switches``), and wire-byte pricing, hedged cloud work and
   post-outage ``replan()`` all see the compressed traffic;
+* per-robot **placements** (``core/placement.py``, ``multicut=True``): the
+  plan table becomes the joint (S1, S2, codec) multi-cut optimum per bin
+  (``sweep_multicut``), each cut clamps into its own parameter-sharing
+  pool, placement changes across requests are counted in ``n_cut_moves``,
+  and 2-cut requests pay their downlink leg + edge-tail compute after the
+  cloud batch returns (the downlink rides ``down_bw_factor`` × the uplink
+  bandwidth);
 * per-robot ``NetworkSim`` bandwidth traces (``core/network.py``), each
   robot on its own seeded link;
 * ``MicroBatcher`` / ``StragglerMitigator`` / ``ElasticPool`` primitives
@@ -56,7 +63,8 @@ from ..core.codec import Codec, resolve_codecs
 from ..core.controller import RoboECC
 from ..core.hardware import A100, ORIN, DeviceSpec
 from ..core.network import NetworkSim, TraceConfig, generate_trace
-from ..core.segmentation import GraphArrays, graph_arrays, sweep_search
+from ..core.segmentation import (GraphArrays, graph_arrays, sweep_multicut,
+                                 sweep_search)
 from ..core.structure import LayerCost, Workload, build_graph
 from .scheduler import ElasticPool, MicroBatcher, Request, StragglerMitigator
 
@@ -97,6 +105,12 @@ class FleetConfig:
     # single-identity axis reproduces codec-free behaviour exactly.
     codecs: Sequence[str] = ("identity",)
     max_codec_err: Optional[float] = None   # drop codecs above this bound
+    # multi-cut placements (core/placement.py): plan (S1, S2) edge→cloud→
+    # edge windows instead of single splits.  The downlink leg rides
+    # ``down_bw_factor`` × the uplink bandwidth (robot WANs are asymmetric
+    # — the uplink is the constrained direction); 1.0 keeps it symmetric.
+    multicut: bool = False
+    down_bw_factor: float = 1.0
     pool_overhead_target: float = 0.026
     batch_overlap: float = 0.8        # fraction of non-max work overlapped
     straggler_sigma: float = 0.2      # lognormal sigma on replica exec time
@@ -149,6 +163,8 @@ class FleetReport:
     n_replans: int
     n_outage_completions: int    # requests served edge-only during outages
     n_codec_switches: int = 0    # per-robot codec changes across requests
+    n_cut_moves: int = 0         # per-robot (S1, S2) changes across requests
+    n_multicut_requests: int = 0  # requests served on a real 2-cut placement
 
     def summary(self) -> str:
         return (f"{len(self.robots)} robots, {self.n_requests} requests: "
@@ -156,7 +172,8 @@ class FleetReport:
                 f"p95 {self.fleet_p95_s * 1e3:.1f} ms, "
                 f"{self.throughput_rps:.1f} req/s, "
                 f"{self.n_hedged} hedges, {self.n_replans} replans, "
-                f"{self.n_codec_switches} codec switches")
+                f"{self.n_codec_switches} codec switches, "
+                f"{self.n_cut_moves} cut moves")
 
 
 @dataclasses.dataclass
@@ -165,8 +182,10 @@ class _CloudWork:
     issued_s: float              # control step that produced this request
     ready_s: float               # edge compute + uplink done at this time
     edge_s: float
-    net_s: float
+    net_s: float                 # uplink leg (edge → cloud)
     cloud_s: float
+    down_s: float = 0.0          # downlink leg + edge tail (multi-cut only)
+    two_cut: bool = False        # issued on a real (S2 < n) placement
 
 
 # --------------------------------------------------------------- simulator
@@ -201,13 +220,32 @@ class FleetSimulator:
         # the NEAREST grid bin in log space (plain searchsorted on the grid
         # would always round up to the plan of a faster link)
         self._bw_mid = np.sqrt(self.bw_grid[:-1] * self.bw_grid[1:])
-        plans = sweep_search(self.graphs, cfg.edge, cfg.cloud, self.bw_grid,
-                             cfg.cloud_budget_bytes, rtt_s=cfg.rtt_s,
-                             input_bytes=cfg.workload.input_bytes,
-                             codecs=self.codecs)
-        self.plan: Dict[str, np.ndarray] = {a: plans[a].splits for a in archs}
-        self.plan_codec: Dict[str, np.ndarray] = {
-            a: plans[a].codec_idx for a in archs}
+        if cfg.multicut:
+            # multi-cut plan table: one (M, C, S1, S2, B) pass — each bin
+            # stores the joint (S1, S2, codec) optimum; S2 == n collapses
+            # the bin to the single-cut plan
+            mc = sweep_multicut(self.graphs, cfg.edge, cfg.cloud,
+                                self.bw_grid, cfg.cloud_budget_bytes,
+                                rtt_s=cfg.rtt_s,
+                                input_bytes=cfg.workload.input_bytes,
+                                codecs=self.codecs,
+                                down_bw_factor=cfg.down_bw_factor)
+            self.plan: Dict[str, np.ndarray] = {a: mc[a].s1 for a in archs}
+            self.plan_s2: Dict[str, np.ndarray] = {
+                a: mc[a].s2 for a in archs}
+            self.plan_codec: Dict[str, np.ndarray] = {
+                a: mc[a].codec_idx for a in archs}
+        else:
+            plans = sweep_search(self.graphs, cfg.edge, cfg.cloud,
+                                 self.bw_grid, cfg.cloud_budget_bytes,
+                                 rtt_s=cfg.rtt_s,
+                                 input_bytes=cfg.workload.input_bytes,
+                                 codecs=self.codecs)
+            self.plan = {a: plans[a].splits for a in archs}
+            self.plan_s2 = {a: np.full(len(self.bw_grid),
+                                       self.arrays[a].n, dtype=int)
+                            for a in archs}
+            self.plan_codec = {a: plans[a].codec_idx for a in archs}
 
         # robots start on the codec planned at the nominal bandwidth; the
         # same codec prices the controller's Alg. 1 (so replan() after an
@@ -222,8 +260,14 @@ class FleetSimulator:
                     pool_overhead_target=cfg.pool_overhead_target,
                     nominal_bw_bps=cfg.nominal_bw_bps,
                     codec=self.codecs[self.codec_of[i]],
-                    graph=self.graphs[a])
+                    graph=self.graphs[a],
+                    multicut=cfg.multicut,
+                    down_bw_factor=cfg.down_bw_factor)
             for i, a in enumerate(self.arch_of)]
+        # per-robot effective placement state (for n_cut_moves)
+        self.place_of: List[tuple] = [
+            (int(self.plan[a][k0]), int(self.plan_s2[a][k0]))
+            for a in self.arch_of]
         self.nets: List[NetworkSim] = [
             NetworkSim(generate_trace(cfg.n_ticks + 1, cfg.trace,
                                       seed=cfg.seed * 100_003 + i),
@@ -250,6 +294,8 @@ class FleetSimulator:
         self.n_replans = 0
         self.n_outage_completions = 0
         self.n_codec_switches = 0
+        self.n_cut_moves = 0
+        self.n_multicut_requests = 0
 
     # ----------------------------------------------------------- elasticity
     def _on_replicas(self, live: List[str]) -> None:
@@ -271,21 +317,45 @@ class FleetSimulator:
                 self.n_replans += 1
 
     # ------------------------------------------------------------- planning
-    def _planned_split(self, robot: int, bw_bps: float) -> int:
-        """Plan-table lookup (vectorized Alg. 1 result), clamped into the
-        robot's parameter-sharing pool — the split may only move where
-        weights are already resident on both tiers.  Also advances the
-        robot's codec state to the jointly-planned codec for this
-        bandwidth bin (a pure software switch — no weights move)."""
+    def _planned_placement(self, robot: int, bw_bps: float) -> tuple:
+        """Plan-table lookup for this bandwidth bin: the (S1, S2) placement
+        window, each cut clamped into its parameter-sharing pool — cuts
+        may only move where weights are already resident on both tiers
+        (a robot whose controller planned single-cut has no tail pool, so
+        its S2 pins to n).  Also advances the robot's codec state to the
+        jointly-planned codec (a pure software switch — no weights move)
+        and counts effective placement changes in ``n_cut_moves``."""
         arch = self.arch_of[robot]
         k = int(np.searchsorted(self._bw_mid, bw_bps))
-        ci = int(self.plan_codec[arch][k])
-        if ci != self.codec_of[robot]:
-            self.codec_of[robot] = ci
-            self.n_codec_switches += 1
-        split = int(self.plan[arch][k])
-        p = self.controllers[robot].pool
-        return int(np.clip(split, p.start, p.end))
+        n = self.arrays[arch].n
+        s1_plan = int(self.plan[arch][k])
+        s2_plan = int(self.plan_s2[arch][k])
+        # adopt the bin's codec only when its plan has a codec-applicable
+        # transport leg — a no-transfer (edge-only) or raw-observation-only
+        # bin breaks codec ties arbitrarily, and the pool clamp below may
+        # still force a collaborative cut, which must not ship raw just
+        # because the bin's codec was meaningless
+        if s1_plan < s2_plan and (0 < s1_plan < n or s2_plan < n):
+            ci = int(self.plan_codec[arch][k])
+            if ci != self.codec_of[robot]:
+                self.codec_of[robot] = ci
+                self.n_codec_switches += 1
+        ctl = self.controllers[robot]
+        s1 = int(np.clip(s1_plan, ctl.pool.start, ctl.pool.end))
+        pool2 = getattr(ctl, "pool2", None)
+        if pool2 is not None:
+            s2 = int(np.clip(s2_plan, pool2.start, pool2.end))
+            s2 = max(s1, s2)
+        else:
+            s2 = n
+        if (s1, s2) != self.place_of[robot]:
+            self.place_of[robot] = (s1, s2)
+            self.n_cut_moves += 1
+        return s1, s2
+
+    def _planned_split(self, robot: int, bw_bps: float) -> int:
+        """Single-cut view of ``_planned_placement`` (legacy helper)."""
+        return self._planned_placement(robot, bw_bps)[0]
 
     # ------------------------------------------------------------ execution
     def _complete(self, robot: int, issued_s: float, latency_s: float) -> None:
@@ -317,8 +387,15 @@ class FleetSimulator:
             self.n_hedged += 1
         self.busy_until[out.winner] = ready + out.latency_s
         for it in items:
+            # down_s = downlink transport + edge-tail compute of a 2-cut
+            # placement (0 for single-cut), paid after the cloud batch.
+            # Only requests that actually complete the 2-cut path count —
+            # outage fallbacks re-execute edge-only and don't.
+            if it.two_cut:
+                self.n_multicut_requests += 1
             self._complete(it.robot, it.issued_s, it.edge_s + it.net_s
-                           + (ready - it.ready_s) + out.latency_s)
+                           + (ready - it.ready_s) + out.latency_s
+                           + it.down_s)
 
     def _fallback_one(self, it: _CloudWork) -> None:
         """Cloud unavailable with work in flight: re-execute the request
@@ -364,17 +441,32 @@ class FleetSimulator:
                 if now < self.next_free[i]:
                     continue                    # previous request in flight
                 arrays = self.arrays[self.arch_of[i]]
+                down, two_cut = 0.0, False
                 if self._cloud_up:
-                    split = self._planned_split(i, bw)
-                    e, c, t = arrays.latency(split, bw, cfg.rtt_s,
-                                             codec=self.codecs[
-                                                 self.codec_of[i]])
+                    s1, s2 = self._planned_placement(i, bw)
+                    cdc = self.codecs[self.codec_of[i]]
+                    if s2 < arrays.n:
+                        # real 2-cut placement: the edge head runs before
+                        # the uplink, the edge tail after the downlink —
+                        # only the head gates when the cloud can start
+                        eh, c, t, dn = arrays.placement_latency(
+                            s1, s2, bw, cfg.rtt_s, codec=cdc,
+                            down_bw_factor=cfg.down_bw_factor)
+                        tail = float(arrays.edge_s[arrays.n]
+                                     - arrays.edge_s[s2])
+                        e = eh - tail
+                        down = dn + tail
+                        two_cut = True
+                    else:
+                        e, c, t = arrays.latency(s1, bw, cfg.rtt_s,
+                                                 codec=cdc)
                 else:
                     e, c, t = float(arrays.edge_s[arrays.n]), 0.0, 0.0
                 if c > 0.0 and routable:
                     wid = self._next_wid
                     self._next_wid += 1
-                    work = _CloudWork(i, now, now + e + t, e, t, c)
+                    work = _CloudWork(i, now, now + e + t, e, t, c, down,
+                                      two_cut)
                     self._pending[wid] = work
                     self.next_free[i] = float("inf")   # until completion
                     replica = self.mitigator.pick_primary(routable)
@@ -383,9 +475,13 @@ class FleetSimulator:
                     # planned a collaborative split but no replica accepts
                     # work (undetected outage window): edge re-execution
                     self._fallback_one(_CloudWork(i, now, now + e + t,
-                                                  e, t, c))
+                                                  e, t, c, down, two_cut))
                 else:
-                    self._complete(i, now, e + t)
+                    # no cloud work: complete locally.  ``down`` is
+                    # normally 0 here, but a clamped placement degenerating
+                    # to an empty cloud window still owes its edge-tail
+                    # compute
+                    self._complete(i, now, e + t + down)
                     if not self._cloud_up:
                         self.n_outage_completions += 1
 
@@ -446,7 +542,9 @@ class FleetSimulator:
             throughput_rps=float(len(allx) / sim_s) if sim_s else 0.0,
             n_hedged=self.n_hedged, n_replans=self.n_replans,
             n_outage_completions=self.n_outage_completions,
-            n_codec_switches=self.n_codec_switches)
+            n_codec_switches=self.n_codec_switches,
+            n_cut_moves=self.n_cut_moves,
+            n_multicut_requests=self.n_multicut_requests)
 
 
 def run_fleet(cfg: FleetConfig) -> FleetReport:

@@ -7,6 +7,15 @@ needs **no weight shipping and no recompilation** — the split index is a
 traced argument, and each pool layer runs under a ``lax.cond`` keyed on
 ``layer_idx < split``.
 
+Multi-cut placements (``core/placement.py``) add a **second pool**
+``[pool2_start, pool2_end)`` around the cloud→edge tail cut of an
+edge→cloud→edge plan: the cloud runs pool-2 layers with ``layer_idx <
+split2`` and the edge tail (including the final norm / LM head / action
+decode) runs the rest — both cuts are traced arguments, so moving either
+one inside its pool recompiles nothing.  A two-pool run ships two
+payloads: the uplink cut activation (``codec``) and the downlink tail
+activation (``codec2``).
+
 Semantics: the split is fixed for the duration of one request (one VLA action
 inference).  VLA workloads re-prefill every action step (the camera image
 changes), so caches never need to migrate across the cut — this matches the
@@ -21,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -37,15 +47,43 @@ Tree = Any
 
 @dataclasses.dataclass(frozen=True)
 class SplitPlan:
-    """Static pool placement + codec choice; `split` itself is dynamic.
+    """Static pool placement(s) + codec choice; the cut indices themselves
+    are dynamic.
 
-    ``codec``: "" (raw), "int8" or "int4" — the wire format for the cut
-    activation.  ``use_codec=True`` is the backwards-compatible alias for
-    ``codec="int8"``."""
+    ``codec``: "" (raw), "int8" or "int4" — the wire format for the uplink
+    cut activation.  ``pool2_start``/``pool2_end`` (both ``-1`` =
+    disabled) place the second pool of an edge→cloud→edge plan; ``codec2``
+    is the downlink wire format.
+
+    ``use_codec`` is a DEPRECATED alias for ``codec="int8"`` kept as a
+    warning shim for one release — pass ``codec`` explicitly
+    (``core/placement.py`` plans carry codec names per cut)."""
     pool_start: int
     pool_end: int
-    use_codec: bool = False
+    use_codec: Optional[bool] = None
     codec: str = ""
+    pool2_start: int = -1
+    pool2_end: int = -1
+    codec2: str = ""
+
+    def __post_init__(self):
+        if self.use_codec is not None:
+            warnings.warn(
+                "SplitPlan(use_codec=...) is deprecated; pass "
+                "codec='int8' (or '') instead — use_codec will be removed "
+                "next release", DeprecationWarning, stacklevel=3)
+        if (self.pool2_start >= 0) != (self.pool2_end >= 0):
+            raise ValueError("pool2_start and pool2_end must be set "
+                             "together (or both left at -1)")
+        if self.two_pool and not (self.pool_end <= self.pool2_start
+                                  <= self.pool2_end):
+            raise ValueError(
+                f"second pool [{self.pool2_start}, {self.pool2_end}) must "
+                f"follow the first [{self.pool_start}, {self.pool_end})")
+
+    @property
+    def two_pool(self) -> bool:
+        return self.pool2_start >= 0
 
     @property
     def wire_codec(self) -> str:
@@ -56,11 +94,20 @@ class SplitPlan:
     def clamp(self, split: int) -> int:
         return max(self.pool_start, min(int(split), self.pool_end))
 
+    def clamp2(self, split2: int) -> int:
+        return max(self.pool2_start, min(int(split2), self.pool2_end))
+
 
 # ------------------------------------------------------------------ helpers
 def _masked_stack(cfg, pool_params: Tree, x: jax.Array, positions, split,
                   offset: int, side: str, *, is_moe: bool):
-    """Run pool layers under lax.cond(active-on-this-side)."""
+    """Run pool layers under lax.cond(active-on-this-side).
+
+    ``side`` names the *predicate*, not the physical tier: ``"edge"`` runs
+    layers with ``i < split`` (the below-the-cut half), ``"cloud"`` those
+    with ``i >= split``.  A two-pool plan reuses the same predicates around
+    its second cut with the tiers swapped — the cloud owns the below-half
+    of pool 2 and the edge tail the above-half."""
     n = jax.tree_util.tree_leaves(pool_params)[0].shape[0]
 
     def body(h, xs):
@@ -128,18 +175,27 @@ def payload_bytes(payload: Dict) -> int:
 class LMSplitExecutor:
     """Dense/MoE decoder-only LM split at a block boundary.
 
-    Layer indexing: 0..L-1 are transformer blocks; embed always on edge,
-    final-norm + unembed always on cloud (the paper segments from the last
-    layer towards the front, keeping the output head cloud-side).
+    Layer indexing: 0..L-1 are transformer blocks; embed always on edge.
+    Single-pool plans keep final-norm + unembed cloud-side (the paper
+    segments from the last layer towards the front, keeping the output
+    head cloud-side); a two-pool plan returns the tail — pool-2 layers
+    with ``i >= split2``, the blocks after ``pool2_end`` and the LM head —
+    to the edge, shipping a second (downlink) payload.
     """
 
     def __init__(self, cfg, plan: SplitPlan):
         assert cfg.family in ("dense", "moe")
         assert 0 <= plan.pool_start <= plan.pool_end <= cfg.n_layers
+        if plan.two_pool:
+            assert plan.pool_end <= plan.pool2_start \
+                <= plan.pool2_end <= cfg.n_layers
         self.cfg = cfg
         self.plan = plan
         self._edge = jax.jit(self._edge_fwd)
         self._cloud = jax.jit(self._cloud_fwd)
+        if plan.two_pool:
+            self._cloud_mid = jax.jit(self._cloud_mid_fwd)
+            self._tail = jax.jit(self._tail_fwd)
 
     # -- groups bookkeeping (dense vs moe layer groups)
     def _block_at(self, params, i: int) -> Tuple[Tree, bool]:
@@ -150,24 +206,28 @@ class LMSplitExecutor:
         name = "dense_blocks" if cfg.family == "moe" else "blocks"
         return _layer_slice(params[name], i), False
 
-    def _pool_params(self, params) -> Tuple[Tree, bool]:
-        cfg, plan = self.cfg, self.plan
+    def _group_params(self, params, start: int, end: int
+                      ) -> Tuple[Tree, bool]:
+        """Stacked params of blocks [start, end) (one pool's weights)."""
+        cfg = self.cfg
         if cfg.family == "moe":
             nd = cfg.first_dense_layers
-            assert plan.pool_start >= nd or plan.pool_end <= nd, \
+            assert start >= nd or end <= nd, \
                 "pool must not straddle the dense/moe group boundary"
-            if plan.pool_start >= nd:
+            if start >= nd:
                 grp = jax.tree_util.tree_map(
-                    lambda w: w[plan.pool_start - nd:plan.pool_end - nd],
-                    params["moe_blocks"])
+                    lambda w: w[start - nd:end - nd], params["moe_blocks"])
                 return grp, True
             grp = jax.tree_util.tree_map(
-                lambda w: w[plan.pool_start:plan.pool_end],
-                params["dense_blocks"])
+                lambda w: w[start:end], params["dense_blocks"])
             return grp, False
         grp = jax.tree_util.tree_map(
-            lambda w: w[plan.pool_start:plan.pool_end], params["blocks"])
+            lambda w: w[start:end], params["blocks"])
         return grp, False
+
+    def _pool_params(self, params) -> Tuple[Tree, bool]:
+        return self._group_params(params, self.plan.pool_start,
+                                  self.plan.pool_end)
 
     # -- edge side: embed + [0, pool_start) + masked pool
     def _edge_fwd(self, params, tokens, split):
@@ -184,7 +244,7 @@ class LMSplitExecutor:
                               plan.pool_start, "edge", is_moe=is_moe)
         return encode_activation(x, plan.wire_codec)
 
-    # -- cloud side: masked pool + [pool_end, L) + head
+    # -- cloud side (single-pool): masked pool + [pool_end, L) + head
     def _cloud_fwd(self, params, payload, split):
         cfg, plan = self.cfg, self.plan
         x = decode_activation(payload, cfg.dtype)
@@ -198,24 +258,74 @@ class LMSplitExecutor:
             x, _, _ = block_forward(cfg, pl, x, positions, is_moe=is_moe)
         return T.lm_logits(cfg, params, x)
 
+    # -- cloud side (two-pool): masked pool + mid blocks + masked pool 2
+    def _cloud_mid_fwd(self, params, payload, split, split2):
+        cfg, plan = self.cfg, self.plan
+        x = decode_activation(payload, cfg.dtype)
+        positions = jnp.arange(x.shape[1])
+        pool, is_moe = self._pool_params(params)
+        if plan.pool_end > plan.pool_start:
+            x = _masked_stack(cfg, pool, x, positions, split,
+                              plan.pool_start, "cloud", is_moe=is_moe)
+        for i in range(plan.pool_end, plan.pool2_start):
+            pl, is_moe = self._block_at(params, i)
+            x, _, _ = block_forward(cfg, pl, x, positions, is_moe=is_moe)
+        pool2, is_moe2 = self._group_params(params, plan.pool2_start,
+                                            plan.pool2_end)
+        if plan.pool2_end > plan.pool2_start:
+            # cloud owns the BELOW-split2 half of pool 2 ("edge" predicate)
+            x = _masked_stack(cfg, pool2, x, positions, split2,
+                              plan.pool2_start, "edge", is_moe=is_moe2)
+        return encode_activation(x, plan.codec2)
+
+    # -- edge tail (two-pool): masked pool 2 + [pool2_end, L) + head
+    def _tail_fwd(self, params, payload, split2):
+        cfg, plan = self.cfg, self.plan
+        x = decode_activation(payload, cfg.dtype)
+        positions = jnp.arange(x.shape[1])
+        pool2, is_moe2 = self._group_params(params, plan.pool2_start,
+                                            plan.pool2_end)
+        if plan.pool2_end > plan.pool2_start:
+            x = _masked_stack(cfg, pool2, x, positions, split2,
+                              plan.pool2_start, "cloud", is_moe=is_moe2)
+        for i in range(plan.pool2_end, cfg.n_layers):
+            pl, is_moe = self._block_at(params, i)
+            x, _, _ = block_forward(cfg, pl, x, positions, is_moe=is_moe)
+        return T.lm_logits(cfg, params, x)
+
     # -- public API
-    def run(self, params, tokens, split: int):
-        """One co-inference: returns (logits, transfer_payload)."""
+    def run(self, params, tokens, split: int,
+            split2: Optional[int] = None):
+        """One co-inference.  Single-pool plans return
+        ``(logits, uplink_payload)``; two-pool plans take the second cut
+        ``split2`` and return ``(logits, {"up": ..., "down": ...})`` — the
+        logits computed on the edge tail."""
         split = jnp.int32(self.plan.clamp(split))
         payload = self._edge(params, tokens, split)
-        logits = self._cloud(params, payload, split)
-        return logits, payload
+        if not self.plan.two_pool:
+            logits = self._cloud(params, payload, split)
+            return logits, payload
+        split2 = jnp.int32(self.plan.clamp2(
+            split2 if split2 is not None else self.plan.pool2_end))
+        down = self._cloud_mid(params, payload, split, split2)
+        logits = self._tail(params, down, split2)
+        return logits, {"up": payload, "down": down}
 
 
 # ================================================================ VLA executor
 class VLASplitExecutor:
-    """ViT + LLM (+ action head) split; pool inside the LLM block range.
+    """ViT + LLM (+ action head) split; pool(s) inside the LLM block range.
 
     Layer indexing (matches core/structure.py): ViT blocks [0, Lv) —
     always edge-side candidates; LLM blocks [Lv, Lv+L); action head after.
-    The dynamic pool must lie inside the LLM range; the ViT boundary and the
-    action-head side are static placement choices evaluated by the cost
-    model (DESIGN.md §7).
+    The dynamic pools must lie inside the LLM range; the ViT boundary is a
+    static placement choice evaluated by the cost model (DESIGN.md §7).
+
+    A two-pool plan realizes the edge→cloud→edge placement: the cloud runs
+    the trunk up to the (dynamic) second cut and ships the tail activation
+    back; the final norm + action decode run on the **edge** — ActionFlow's
+    action-stage-on-edge pattern, priced by
+    ``core/segmentation.search_multicut``.
     """
 
     def __init__(self, cfg, plan: SplitPlan, action_on_cloud: bool = True):
@@ -224,9 +334,52 @@ class VLASplitExecutor:
         self.plan = plan
         Lv = cfg.vit_layers
         assert Lv <= plan.pool_start <= plan.pool_end <= Lv + cfg.n_layers
-        self.action_on_cloud = action_on_cloud
+        if plan.two_pool:
+            assert plan.pool_end <= plan.pool2_start \
+                <= plan.pool2_end <= Lv + cfg.n_layers
+        self.action_on_cloud = action_on_cloud and not plan.two_pool
         self._edge = jax.jit(self._edge_fwd)
         self._cloud = jax.jit(self._cloud_fwd)
+        if plan.two_pool:
+            self._cloud_mid = jax.jit(self._cloud_mid_fwd)
+            self._tail = jax.jit(self._tail_fwd)
+
+    def _blocks(self, params, start: int, end: int) -> Tree:
+        """Stacked LLM-block params [start, end) in graph indexing."""
+        Lv = self.cfg.vit_layers
+        return jax.tree_util.tree_map(
+            lambda w: w[start - Lv:end - Lv], params["blocks"])
+
+    def _tail_slice(self) -> int:
+        """Static downlink sequence length.  When pool 2 is degenerate at
+        the graph end the tail is exactly the action stage, which reads
+        only its semantic conditioning slice (detok: the last
+        ``action_dim`` positions; DiT/MLP/LSTM: the cognition token) — the
+        bytes the planner prices via ``LayerCost.in_transfer_bytes``.  A
+        pool 2 with movable blocks needs the full sequence (and the
+        planner prices those mid-trunk cuts at full activation too).
+        0 means "ship everything"."""
+        cfg, plan = self.cfg, self.plan
+        if plan.pool2_start == plan.pool2_end == cfg.vit_layers \
+                + cfg.n_layers:
+            return cfg.action_dim if cfg.vla_action_head in ("detok", "") \
+                else 1
+        return 0
+
+    def _action_decode(self, params, x, key):
+        """Final norm + action decode (models.vla.vla_forward tail) — runs
+        on whichever tier owns the last segment."""
+        cfg = self.cfg
+        h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.vla_action_head in ("detok", ""):
+            logits = unembed(params["head"], h[:, -cfg.action_dim:])
+            toks = jnp.argmax(logits, -1)
+            act = (toks.astype(jnp.float32) % 256) / 127.5 - 1.0
+            return act[:, None, :]
+        cog = h[:, -1]
+        if cfg.vla_action_head == "dit":
+            return V.dit_sample(cfg, params["action"], cog, key)
+        raise NotImplementedError(cfg.vla_action_head)
 
     def _edge_fwd(self, params, patches, tokens, split):
         cfg, plan = self.cfg, self.plan
@@ -238,9 +391,7 @@ class VLASplitExecutor:
         for i in range(plan.pool_start - Lv):
             pl = _layer_slice(params["blocks"], i)
             x, _, _ = block_forward(cfg, pl, x, positions, is_moe=False)
-        pool = jax.tree_util.tree_map(
-            lambda w: w[plan.pool_start - Lv:plan.pool_end - Lv],
-            params["blocks"])
+        pool = self._blocks(params, plan.pool_start, plan.pool_end)
         if plan.pool_end > plan.pool_start:
             x = _masked_stack(cfg, pool, x, positions, split,
                               plan.pool_start, "edge", is_moe=False)
@@ -251,31 +402,68 @@ class VLASplitExecutor:
         Lv = cfg.vit_layers
         x = decode_activation(payload, cfg.dtype)
         positions = jnp.arange(x.shape[1])
-        pool = jax.tree_util.tree_map(
-            lambda w: w[plan.pool_start - Lv:plan.pool_end - Lv],
-            params["blocks"])
+        pool = self._blocks(params, plan.pool_start, plan.pool_end)
         if plan.pool_end > plan.pool_start:
             x = _masked_stack(cfg, pool, x, positions, split,
                               plan.pool_start, "cloud", is_moe=False)
         for i in range(plan.pool_end - Lv, cfg.n_layers):
             pl = _layer_slice(params["blocks"], i)
             x, _, _ = block_forward(cfg, pl, x, positions, is_moe=False)
-        h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-        # action decode (same logic as models.vla.vla_forward tail)
-        if cfg.vla_action_head in ("detok", ""):
-            logits = unembed(params["head"], h[:, -cfg.action_dim:])
-            toks = jnp.argmax(logits, -1)
-            act = (toks.astype(jnp.float32) % 256) / 127.5 - 1.0
-            return act[:, None, :]
-        cog = h[:, -1]
-        if cfg.vla_action_head == "dit":
-            return V.dit_sample(cfg, params["action"], cog, key)
-        raise NotImplementedError(cfg.vla_action_head)
+        return self._action_decode(params, x, key)
+
+    # -- two-pool cloud trunk: masked pool + mid blocks + masked pool 2
+    def _cloud_mid_fwd(self, params, payload, split, split2):
+        cfg, plan = self.cfg, self.plan
+        Lv = cfg.vit_layers
+        x = decode_activation(payload, cfg.dtype)
+        positions = jnp.arange(x.shape[1])
+        pool = self._blocks(params, plan.pool_start, plan.pool_end)
+        if plan.pool_end > plan.pool_start:
+            x = _masked_stack(cfg, pool, x, positions, split,
+                              plan.pool_start, "cloud", is_moe=False)
+        for i in range(plan.pool_end - Lv, plan.pool2_start - Lv):
+            pl = _layer_slice(params["blocks"], i)
+            x, _, _ = block_forward(cfg, pl, x, positions, is_moe=False)
+        pool2 = self._blocks(params, plan.pool2_start, plan.pool2_end)
+        if plan.pool2_end > plan.pool2_start:
+            # cloud owns the BELOW-split2 half of pool 2 ("edge" predicate)
+            x = _masked_stack(cfg, pool2, x, positions, split2,
+                              plan.pool2_start, "edge", is_moe=False)
+        k = self._tail_slice()
+        if k:
+            x = x[:, -k:]       # semantic downlink: only what the tail reads
+        return encode_activation(x, plan.codec2)
+
+    # -- two-pool edge tail: masked pool 2 + remaining blocks + action
+    def _tail_fwd(self, params, payload, split2, key):
+        cfg, plan = self.cfg, self.plan
+        Lv = cfg.vit_layers
+        x = decode_activation(payload, cfg.dtype)
+        positions = jnp.arange(x.shape[1])
+        pool2 = self._blocks(params, plan.pool2_start, plan.pool2_end)
+        if plan.pool2_end > plan.pool2_start:
+            x = _masked_stack(cfg, pool2, x, positions, split2,
+                              plan.pool2_start, "cloud", is_moe=False)
+        for i in range(plan.pool2_end - Lv, cfg.n_layers):
+            pl = _layer_slice(params["blocks"], i)
+            x, _, _ = block_forward(cfg, pl, x, positions, is_moe=False)
+        return self._action_decode(params, x, key)
 
     def run(self, params, patches, tokens, split: int,
-            key: Optional[jax.Array] = None):
+            key: Optional[jax.Array] = None,
+            split2: Optional[int] = None):
+        """One co-inference.  Single-pool plans return
+        ``(action, uplink_payload)``; two-pool plans take the second cut
+        ``split2`` and return ``(action, {"up": ..., "down": ...})`` with
+        the action decoded on the edge tail."""
         split = jnp.int32(self.plan.clamp(split))
         payload = self._edge(params, patches, tokens, split)
         key = key if key is not None else jax.random.PRNGKey(0)
-        action = self._cloud(params, payload, split, key)
-        return action, payload
+        if not self.plan.two_pool:
+            action = self._cloud(params, payload, split, key)
+            return action, payload
+        split2 = jnp.int32(self.plan.clamp2(
+            split2 if split2 is not None else self.plan.pool2_end))
+        down = self._cloud_mid(params, payload, split, split2)
+        action = self._tail(params, down, split2, key)
+        return action, {"up": payload, "down": down}

@@ -155,3 +155,64 @@ def test_fleet_planned_splits_live_inside_pools():
         p = sim.controllers[i].pool
         for bw in (0.1e6, 1e6, 10e6, 40e6):
             assert p.start <= sim._planned_split(i, bw) <= p.end
+
+
+# --------------------------------------------------------------- multi-cut
+def _multicut_cfg(multicut: bool, bw: float = 1e6, **kw) -> FleetConfig:
+    from repro.core import TraceConfig
+    return FleetConfig(n_robots=8, n_ticks=60, n_replicas=2,
+                       archs=("openvla-7b",), seed=3, multicut=multicut,
+                       codecs=("identity", "int8", "int4"),
+                       cloud_budget_bytes=5.8e9, down_bw_factor=8.0,
+                       trace=TraceConfig(mean_bps=bw, bad_bps=bw / 4),
+                       nominal_bw_bps=bw, **kw)
+
+
+def test_fleet_multicut_serves_two_cut_requests():
+    sim = FleetSimulator(_multicut_cfg(True))
+    ctl = sim.controllers[0]
+    assert not ctl.placement.is_single and ctl.pool2 is not None
+    rep = sim.run()
+    assert rep.n_multicut_requests > 0
+    assert rep.n_requests > 0 and rep.fleet_p95_s > 0
+    # placements stay inside both pools
+    for i in range(sim.cfg.n_robots):
+        s1, s2 = sim.place_of[i]
+        ctl = sim.controllers[i]
+        assert ctl.pool.contains(s1)
+        assert ctl.pool2.contains(s2)
+
+
+def test_fleet_multicut_beats_single_cut_p95_at_low_bandwidth():
+    """Acceptance: on OpenVLA-7B at 1 MB/s under the per-robot cloud
+    quota, the multi-cut plan table strictly beats the single-cut one in
+    fleet p95 (same fleet, same seed, same codec axis)."""
+    multi = run_fleet(_multicut_cfg(True))
+    single = run_fleet(_multicut_cfg(False))
+    assert multi.n_multicut_requests > 0
+    assert single.n_multicut_requests == 0
+    assert multi.fleet_p95_s < single.fleet_p95_s - 1e-9
+
+
+def test_fleet_multicut_deterministic():
+    cfg = _multicut_cfg(True)
+    a, b = run_fleet(cfg), run_fleet(cfg)
+    assert a == b
+
+
+def test_fleet_multicut_outage_replans_to_edge_only():
+    cfg = _multicut_cfg(True)
+    cfg.replica_events = [ReplicaEvent(20, f"cloud{i}", "leave")
+                          for i in range(cfg.n_replicas)]
+    sim = FleetSimulator(cfg)
+    rep = sim.run()
+    assert rep.n_replans == cfg.n_robots
+    for i, ctl in enumerate(sim.controllers):
+        assert ctl.placement.is_single
+        assert ctl.split == len(sim.graphs[sim.arch_of[i]])
+    assert rep.n_outage_completions > 0
+
+
+def test_fleet_single_mode_has_no_multicut_requests():
+    rep = run_fleet(_small_cfg())
+    assert rep.n_multicut_requests == 0

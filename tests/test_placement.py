@@ -1,0 +1,371 @@
+"""Multi-cut placements: plan algebra, oracle parity, K=1 equivalence,
+multi-cut adjustment, controller integration, and the satellite
+regressions (zero-byte transfers, frozen TraceConfig)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.core import (CODECS, NetworkSim, PlacementPlan, RoboECC,
+                        Thresholds, TraceConfig, Workload, adjust,
+                        adjust_placement, build_graph, build_pool,
+                        downlink_bytes, evaluate_placement, evaluate_split,
+                        generate_trace, graph_arrays, search,
+                        search_multicut, search_multicut_scalar, search_vec,
+                        sweep_multicut)
+from repro.core.hardware import A100, ORIN
+
+W = Workload()
+BWS = np.geomspace(0.1e6, 40e6, 5)
+AXIS = ("identity", "int8", "int4")
+QUOTA = 5.8e9
+DOWN = 8.0
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return {k: build_graph(get_config(k), W) for k in sorted(ARCHS)}
+
+
+# ------------------------------------------------------------- plan algebra
+def test_plan_normalize_collapses_to_single():
+    n = 10
+    assert PlacementPlan.edge_cloud_edge(3, n).normalize(n) == \
+        PlacementPlan.single(3)
+    assert PlacementPlan.edge_cloud_edge(4, 4).normalize(n) == \
+        PlacementPlan.single(n)
+    assert PlacementPlan.single(n).normalize(n) == PlacementPlan.single(n)
+    assert PlacementPlan.single(0).normalize(n) == PlacementPlan.single(0)
+    ece = PlacementPlan.edge_cloud_edge(2, 7, "int8", "int4")
+    assert ece.normalize(n) == ece
+    # codec of the surviving cut is kept when a segment vanishes
+    assert PlacementPlan.edge_cloud_edge(3, n, "int8", "int4") \
+        .normalize(n).cut_codecs == ("int8",)
+
+
+def test_plan_cut_accessors():
+    n = 10
+    p = PlacementPlan.edge_cloud_edge(2, 7)
+    assert p.primary_cut(n) == 2 and p.tail_cut(n) == 7
+    s = PlacementPlan.single(4)
+    assert s.primary_cut(n) == 4 and s.tail_cut(n) == n
+    assert PlacementPlan.single(n).primary_cut(n) == n
+    assert PlacementPlan.single(0).primary_cut(n) == 0
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        PlacementPlan(cuts=(5, 3), tiers=("edge", "cloud", "edge"))
+    with pytest.raises(ValueError):
+        PlacementPlan(cuts=(3,), tiers=("edge",))
+    with pytest.raises(ValueError):
+        PlacementPlan(cuts=(3,), tiers=("edge", "mars"))
+
+
+# -------------------------------------------------------- pricing equivalence
+def test_evaluate_placement_k1_matches_evaluate_split(graphs):
+    g = graphs["openvla-7b"]
+    for s in (0, 1, 28, len(g) // 2, len(g)):
+        for codec in (None, "int8"):
+            ev = evaluate_placement(g, PlacementPlan.single(s, codec),
+                                    ORIN, A100, 1e6, rtt_s=0.005,
+                                    input_bytes=W.input_bytes)
+            e, c, t = evaluate_split(g, s, ORIN, A100, 1e6, rtt_s=0.005,
+                                     input_bytes=W.input_bytes,
+                                     codec=CODECS[codec] if codec else None)
+            assert ev.total_s == pytest.approx(e + c + t, rel=1e-12)
+            assert ev.edge_s == pytest.approx(e, rel=1e-12)
+
+
+def test_evaluate_placement_matches_arrays_placement_latency(graphs):
+    g = graphs["cogact-7b"]
+    n = len(g)
+    ga = graph_arrays(g, ORIN, A100, input_bytes=W.input_bytes)
+    for (s1, s2) in [(0, n), (28, 57), (40, 60), (10, 10), (n, n), (0, 30)]:
+        for codec in (None, "int4"):
+            if s2 >= n or s1 >= s2:
+                plan = PlacementPlan.single(s1 if s2 >= n else n, codec)
+            else:
+                plan = PlacementPlan.edge_cloud_edge(s1, s2, codec, codec)
+            ev = evaluate_placement(g, plan, ORIN, A100, 2e6, rtt_s=0.005,
+                                    input_bytes=W.input_bytes,
+                                    down_bw_factor=DOWN)
+            e, c, up, dn = ga.placement_latency(
+                s1, s2, 2e6, 0.005, codec=CODECS[codec] if codec else None,
+                down_bw_factor=DOWN)
+            assert ev.total_s == pytest.approx(e + c + up + dn, rel=1e-9)
+
+
+def test_downlink_bytes_semantic_head_slice(graphs):
+    """Action heads consume a small conditioning slice; mid-trunk cuts the
+    full upstream activation."""
+    g = graphs["openvla-7b"]
+    cfg = get_config("openvla-7b")
+    head_idx = len(g) - 1
+    assert g[head_idx].kind == "head"
+    assert downlink_bytes(g, head_idx) == \
+        W.batch * cfg.action_dim * cfg.d_model * W.act_bytes
+    assert downlink_bytes(g, head_idx) < g[head_idx - 1].out_transfer_bytes
+    # mid-LLM: full activation (== uplink cut bytes)
+    mid = 40
+    assert downlink_bytes(g, mid) == g[mid - 1].out_transfer_bytes
+    # CogACT DiT: single cognition token
+    g2 = graphs["cogact-7b"]
+    dit0 = next(i for i, c in enumerate(g2) if c.kind == "dit")
+    assert downlink_bytes(g2, dit0) == W.batch * 1 * 4096 * W.act_bytes
+
+
+# ----------------------------------------------------------- oracle parity
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_multicut_vectorized_matches_scalar_oracle_every_config(
+        arch, graphs):
+    """The vectorized (C, S1, S2, B) pass must return the identical
+    (cuts, codec) plan to the exhaustive scalar oracle on every registered
+    config — the multi-cut acceptance gate."""
+    g = graphs[arch]
+    for budget in (None, QUOTA):
+        res = search_multicut(g, ORIN, A100, BWS, budget, codecs=AXIS,
+                              rtt_s=0.005, input_bytes=W.input_bytes,
+                              down_bw_factor=DOWN)
+        for j, bw in enumerate(BWS):
+            sc = search_multicut_scalar(
+                g, ORIN, A100, float(bw), budget, codecs=AXIS, rtt_s=0.005,
+                input_bytes=W.input_bytes, down_bw_factor=DOWN)
+            assert res.plan_at(j) == sc.plan, (arch, budget, bw)
+            assert res.total_s[j] == pytest.approx(sc.total_s, rel=1e-12)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_multicut_k1_restriction_reproduces_search_vec(arch, graphs):
+    """Restricted to S2 = n (single_cut_only) the multi-cut pass must be
+    split-identical to search/search_vec — K=1 is the exact special case."""
+    g = graphs[arch]
+    for budget in (None, 12.1e9):
+        r1 = search_multicut(g, ORIN, A100, BWS, budget, codecs=None,
+                             rtt_s=0.005, input_bytes=W.input_bytes,
+                             single_cut_only=True)
+        rv = search_vec(g, ORIN, A100, BWS, budget, rtt_s=0.005,
+                        input_bytes=W.input_bytes)
+        assert np.array_equal(r1.s1, rv.splits), (arch, budget)
+        assert np.all(r1.s2 == len(g))
+        np.testing.assert_allclose(r1.total_s, rv.total_s, rtol=1e-12)
+        for j, bw in enumerate(BWS):
+            seg = search(g, ORIN, A100, float(bw), cloud_budget_bytes=budget,
+                         rtt_s=0.005, input_bytes=W.input_bytes)
+            assert int(r1.s1[j]) == seg.split, (arch, budget, bw)
+
+
+def test_sweep_multicut_matches_per_model(graphs):
+    sw = sweep_multicut(graphs, ORIN, A100, BWS, QUOTA, codecs=AXIS,
+                        rtt_s=0.005, input_bytes=W.input_bytes,
+                        down_bw_factor=DOWN)
+    for k, g in graphs.items():
+        one = search_multicut(g, ORIN, A100, BWS, QUOTA, codecs=AXIS,
+                              rtt_s=0.005, input_bytes=W.input_bytes,
+                              down_bw_factor=DOWN)
+        assert np.array_equal(sw[k].s1, one.s1), k
+        assert np.array_equal(sw[k].s2, one.s2), k
+        assert np.array_equal(sw[k].codec_idx, one.codec_idx), k
+        np.testing.assert_allclose(sw[k].total_s, one.total_s, rtol=1e-12)
+
+
+def test_multicut_budget_respected(graphs):
+    g = graphs["openvla-7b"]
+    ga = graph_arrays(g, ORIN, A100, input_bytes=W.input_bytes)
+    res = search_multicut(g, ORIN, A100, BWS, QUOTA, codecs=AXIS,
+                          rtt_s=0.005, input_bytes=W.input_bytes,
+                          down_bw_factor=DOWN)
+    for j in range(len(BWS)):
+        load = ga.window_load_bytes(int(res.s1[j]), int(res.s2[j]))
+        assert load <= QUOTA + 1e-6
+
+
+def test_multicut_beats_single_cut_under_quota(graphs):
+    """The tentpole win: on OpenVLA-7B under a per-robot cloud quota the
+    best edge→cloud→edge placement strictly beats the best single cut at
+    every operating point (incl. ≤ 1 MB/s) — keeping the byte-heavy
+    detok head on the edge frees quota for one more trunk layer."""
+    g = graphs["openvla-7b"]
+    n = len(g)
+    for bw in (10e6, 1e6, 0.2e6):
+        multi = search_multicut_scalar(g, ORIN, A100, bw, QUOTA,
+                                       codecs=AXIS, rtt_s=0.005,
+                                       input_bytes=W.input_bytes,
+                                       down_bw_factor=DOWN)
+        single = search_multicut(g, ORIN, A100, [bw], QUOTA, codecs=AXIS,
+                                 rtt_s=0.005, input_bytes=W.input_bytes,
+                                 down_bw_factor=DOWN, single_cut_only=True)
+        assert multi.plan.n_cuts == 2, (bw, multi.plan)
+        assert int(multi.plan.cuts[1]) < n
+        assert multi.total_s < float(single.total_s[0]) - 1e-9, bw
+
+
+def test_multicut_collapses_when_tail_is_expensive(graphs):
+    """CogACT's DiT is compute-dense per byte — putting it on the edge
+    does not pay at low bandwidth, and the planner must honestly collapse
+    to K=1 rather than force a second cut."""
+    g = graphs["cogact-7b"]
+    res = search_multicut_scalar(g, ORIN, A100, 0.2e6, QUOTA, codecs=AXIS,
+                                 rtt_s=0.005, input_bytes=W.input_bytes,
+                                 down_bw_factor=DOWN)
+    assert res.plan.is_single
+
+
+# ------------------------------------------------------- adjustment layer
+def test_adjust_placement_k1_matches_adjust(graphs):
+    """With no pool2 and a single-cut placement, adjust_placement must
+    reproduce adjust's split decisions."""
+    g = build_graph(get_config("cogact-7b"), Workload(decode_steps=0))
+    first_dit = next(i for i, c in enumerate(g) if c.kind == "dit")
+    pool = build_pool(g, first_dit)
+    thr = Thresholds(high=2e6, low=-2e6)
+    n = len(g)
+    for pred, real in ((15e6, 10e6), (1e6, 10e6), (10.5e6, 10e6)):
+        old = adjust(g, pool, first_dit, pred, real, thr)
+        new = adjust_placement(g, pool, PlacementPlan.single(first_dit),
+                               pred, real, thr)
+        assert new.reason == old.reason
+        assert new.placement.primary_cut(n) == old.split
+    # tie-break parity on a UNIFORM trunk (every pool cut the same
+    # volume): adjust's codec-free down move is argmin -> first/smallest
+    # tied split, and adjust_placement must reproduce it exactly
+    g2 = build_graph(get_config("openvla-7b"), Workload())
+    n2 = len(g2)
+    pool2 = build_pool(g2, 30)          # mid-LLM: all volumes equal
+    for pred, real in ((1e6, 10e6), (15e6, 10e6)):
+        old = adjust(g2, pool2, 30, pred, real, thr)
+        new = adjust_placement(g2, pool2, PlacementPlan.single(30),
+                               pred, real, thr)
+        assert new.placement.primary_cut(n2) == old.split, (pred, real)
+
+
+def test_adjust_placement_moves_either_cut(graphs):
+    g = graphs["openvla-7b"]
+    n = len(g)
+    pool = build_pool(g, 43)
+    pool2 = build_pool(g, 57)
+    cur = PlacementPlan.edge_cloud_edge(43, 57, "int4", "int4")
+    thr = Thresholds(high=2e6, low=-2e6)
+    # predicted drop: joint transport argmin over (S1 × S2 × codec)
+    dn = adjust_placement(g, pool, cur, 0.3e6, 10e6, thr, pool2=pool2,
+                          codecs=AXIS, edge=ORIN, cloud=A100,
+                          down_bw_factor=DOWN)
+    assert dn.reason == "down"
+    assert pool.contains(dn.placement.primary_cut(n))
+    s2 = dn.placement.tail_cut(n)
+    assert pool2.contains(s2) or s2 == n
+    # predicted rise: exploit — max-volume cuts, lowest-error codec
+    up = adjust_placement(g, pool, cur, 20e6, 10e6, thr, pool2=pool2,
+                          codecs=AXIS, edge=ORIN, cloud=A100,
+                          down_bw_factor=DOWN)
+    assert up.reason == "up" and up.codec == "identity"
+    hold = adjust_placement(g, pool, cur, 10.2e6, 10e6, thr, pool2=pool2,
+                            codecs=AXIS)
+    assert hold.reason == "hold" and hold.placement == cur.normalize(n)
+
+
+def test_adjust_placement_overlapping_pools_keep_real_window(graphs):
+    """Regression: with overlapping/touching pools, the zero-transport
+    empty mid-graph window (s1 == s2 < n) must NOT win the down move
+    (that would silently collapse the whole model onto the edge), and the
+    up move must not shrink the cloud window to empty."""
+    g = graphs["openvla-7b"]
+    n = len(g)
+    pool = build_pool(g, 20)
+    pool2 = build_pool(g, 22)
+    assert pool2.start <= pool.end              # pools genuinely overlap
+    cur = PlacementPlan.edge_cloud_edge(20, 22)
+    thr = Thresholds(high=2e6, low=-2e6)
+    dn = adjust_placement(g, pool, cur, 1e6, 10e6, thr, pool2=pool2,
+                          codecs=AXIS, edge=ORIN, cloud=A100,
+                          down_bw_factor=DOWN)
+    s1, s2 = dn.placement.primary_cut(n), dn.placement.tail_cut(n)
+    assert s1 < s2, (s1, s2)                    # a real cloud window
+    up = adjust_placement(g, pool, cur, 20e6, 10e6, thr, pool2=pool2,
+                          codecs=AXIS, edge=ORIN, cloud=A100,
+                          down_bw_factor=DOWN)
+    u1, u2 = up.placement.primary_cut(n), up.placement.tail_cut(n)
+    assert u1 < u2, (u1, u2)
+
+
+def test_adjust_placement_collapse_to_k1(graphs):
+    """When pool2 reaches the graph end, a predicted drop can pick S2 = n
+    — no downlink leg at all — collapsing the placement back to K=1."""
+    g = graphs["openvla-7b"]
+    n = len(g)
+    pool = build_pool(g, 43)
+    pool2 = build_pool(g, n)        # wraps the edge-only end
+    assert pool2.end == n
+    cur = PlacementPlan.edge_cloud_edge(43, pool2.start, "int4", "int4")
+    thr = Thresholds(high=2e6, low=-2e6)
+    dn = adjust_placement(g, pool, cur, 0.1e6, 10e6, thr, pool2=pool2,
+                          codecs=AXIS, edge=ORIN, cloud=A100,
+                          down_bw_factor=DOWN)
+    assert dn.reason == "down"
+    assert dn.placement.tail_cut(n) == n      # collapsed: no second cut
+    assert dn.placement.is_single
+
+
+# ------------------------------------------------------------- controller
+def test_controller_multicut_end_to_end():
+    cfg = get_config("openvla-7b")
+    ctl = RoboECC(cfg, ORIN, A100, cloud_budget_bytes=QUOTA,
+                  nominal_bw_bps=1e6, codec="int4",
+                  adjust_codecs=["identity", "int8", "int4"],
+                  multicut=True, down_bw_factor=DOWN)
+    n = len(ctl.graph)
+    assert not ctl.placement.is_single          # quota makes 2 cuts win
+    assert ctl.pool.contains(ctl.split)
+    assert ctl.pool2 is not None
+    assert ctl.pool2.contains(ctl.placement.tail_cut(n))
+    trace = generate_trace(1500, seed=1)
+    ctl.fit_predictor(trace[:1000])
+    net = NetworkSim(trace[1000:])
+    net.step(40)
+    res = [ctl.tick(net) for _ in range(20)]
+    assert all(r.total_s > 0 for r in res)
+    assert all(r.placement is not None for r in res)
+    assert all(ctl.pool.contains(r.split) for r in res)
+
+
+def test_controller_multicut_replan_outage_and_recovery():
+    cfg = get_config("openvla-7b")
+    ctl = RoboECC(cfg, ORIN, A100, cloud_budget_bytes=QUOTA,
+                  nominal_bw_bps=1e6, codec="int4",
+                  multicut=True, down_bw_factor=DOWN)
+    n = len(ctl.graph)
+    plan0 = ctl.placement
+    dead = A100.with_eta(1e-12, 1e-12)
+    ctl.replan(cloud=dead, nominal_bw_bps=1e6)
+    assert ctl.split == n and ctl.placement.is_single     # edge-only
+    ctl.replan(cloud=A100, cloud_budget_bytes=QUOTA, nominal_bw_bps=1e6)
+    assert ctl.placement == plan0                          # restored
+
+
+def test_controller_single_mode_placement_is_k1():
+    cfg = get_config("openvla-7b")
+    ctl = RoboECC(cfg, ORIN, A100, cloud_budget_bytes=12.1e9)
+    assert ctl.placement == PlacementPlan.single(ctl.seg.split)
+    assert ctl.pool2 is None
+
+
+# ------------------------------------------------- satellite regressions
+def test_zero_byte_transfer_is_free():
+    """NetworkSim.transfer_s(0) must cost nothing — consistent with
+    segmentation.net_time (edge-only splits ship nothing, so they pay
+    neither wire time nor rtt)."""
+    net = NetworkSim(np.full(4, 10e6), rtt_s=0.005)
+    assert net.transfer_s(0) == 0.0
+    assert net.transfer_s(0.0) == 0.0
+    assert net.transfer_s(100e3) == pytest.approx(0.01 + 0.005)
+
+
+def test_trace_config_frozen_and_no_shared_default():
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        TraceConfig().mean_bps = 1.0
+    # default argument is constructed per call, never a shared instance
+    a = generate_trace(50, seed=3)
+    b = generate_trace(50, seed=3)
+    assert np.array_equal(a, b)
+    assert np.array_equal(a, generate_trace(50, TraceConfig(), seed=3))

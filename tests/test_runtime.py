@@ -41,12 +41,125 @@ def test_lm_split_equivalence_all_pool_positions(lm_setup):
 def test_lm_split_codec_halves_payload(lm_setup):
     cfg, model, params, tokens, ref = lm_setup
     raw = LMSplitExecutor(cfg, SplitPlan(2, 5))
-    qz = LMSplitExecutor(cfg, SplitPlan(2, 5, use_codec=True))
+    qz = LMSplitExecutor(cfg, SplitPlan(2, 5, codec="int8"))
     _, p_raw = raw.run(params, tokens, 3)
     logits, p_q = qz.run(params, tokens, 3)
     assert payload_bytes(p_q) < 0.6 * payload_bytes(p_raw)
     rel = float(jnp.max(jnp.abs(logits - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
     assert rel < 0.05     # int8 cut tensor stays within a few percent
+
+
+def test_split_plan_use_codec_deprecation_shim():
+    """``use_codec`` stays a working alias for one release — but warns."""
+    with pytest.warns(DeprecationWarning, match="use_codec"):
+        plan = SplitPlan(2, 5, use_codec=True)
+    assert plan.wire_codec == "int8"
+    with pytest.warns(DeprecationWarning):
+        plan_off = SplitPlan(2, 5, use_codec=False)
+    assert plan_off.wire_codec == ""
+    # the replacement spelling warns nothing
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        assert SplitPlan(2, 5, codec="int8").wire_codec == "int8"
+
+
+def test_lm_two_pool_equivalence_all_cut_pairs(lm_setup):
+    """Two-pool (edge→cloud→edge) forward must match the monolithic
+    forward for EVERY (split, split2) inside the pools — and moving either
+    cut must not retrigger compilation (the cuts are traced arguments)."""
+    cfg, model, params, tokens, ref = lm_setup
+    traces = {"edge": 0, "mid": 0, "tail": 0}
+    ex = LMSplitExecutor(cfg, SplitPlan(1, 3, pool2_start=4, pool2_end=6))
+
+    orig_edge, orig_mid, orig_tail = (ex._edge_fwd, ex._cloud_mid_fwd,
+                                      ex._tail_fwd)
+
+    def count(name, fn):
+        def wrapped(*a):
+            traces[name] += 1
+            return fn(*a)
+        return wrapped
+
+    ex._edge = jax.jit(count("edge", orig_edge))
+    ex._cloud_mid = jax.jit(count("mid", orig_mid))
+    ex._tail = jax.jit(count("tail", orig_tail))
+    for split in range(1, 4):
+        for split2 in range(4, 7):
+            logits, payloads = ex.run(params, tokens, split, split2)
+            assert set(payloads) == {"up", "down"}
+            np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                                       rtol=2e-4, atol=2e-4)
+    # one trace per function across all 9 (split, split2) pairs
+    assert traces == {"edge": 1, "mid": 1, "tail": 1}
+
+
+def test_vla_two_pool_equivalence():
+    cfg = get_config("cogact-7b").reduced().replace(n_layers=6)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(3)
+    patches = jax.random.normal(key, (2, cfg.n_patches, cfg.vit_dim))
+    tokens = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    ref = model.forward(params, {"patches": patches, "tokens": tokens}, key)
+    Lv = cfg.vit_layers
+    ex = VLASplitExecutor(cfg, SplitPlan(Lv + 1, Lv + 2,
+                                         pool2_start=Lv + 4,
+                                         pool2_end=Lv + 6))
+    for split in (Lv + 1, Lv + 2):
+        for split2 in (Lv + 4, Lv + 5, Lv + 6):
+            act, payloads = ex.run(params, patches, tokens, split, key,
+                                   split2=split2)
+            assert set(payloads) == {"up", "down"}
+            np.testing.assert_allclose(np.asarray(act), np.asarray(ref),
+                                       atol=1e-5)
+
+
+def test_vla_two_pool_codec_payloads():
+    """Downlink codec ships a real compressed payload and the edge-tail
+    action stays close to the monolithic reference."""
+    cfg = get_config("cogact-7b").reduced().replace(n_layers=6)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(3)
+    patches = jax.random.normal(key, (2, cfg.n_patches, cfg.vit_dim))
+    tokens = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    ref = model.forward(params, {"patches": patches, "tokens": tokens}, key)
+    Lv = cfg.vit_layers
+    raw = VLASplitExecutor(cfg, SplitPlan(Lv + 1, Lv + 2,
+                                          pool2_start=Lv + 4,
+                                          pool2_end=Lv + 6))
+    qz = VLASplitExecutor(cfg, SplitPlan(Lv + 1, Lv + 2, codec="int8",
+                                         pool2_start=Lv + 4,
+                                         pool2_end=Lv + 6, codec2="int8"))
+    _, p_raw = raw.run(params, patches, tokens, Lv + 2, key, split2=Lv + 5)
+    act, p_q = qz.run(params, patches, tokens, Lv + 2, key, split2=Lv + 5)
+    assert payload_bytes(p_q["up"]) < 0.6 * payload_bytes(p_raw["up"])
+    assert payload_bytes(p_q["down"]) < 0.6 * payload_bytes(p_raw["down"])
+    np.testing.assert_allclose(np.asarray(act), np.asarray(ref), atol=0.2)
+
+
+def test_vla_two_pool_semantic_downlink_slice():
+    """A degenerate pool 2 at the graph end makes the tail exactly the
+    action stage: the downlink ships only the semantic conditioning slice
+    (the bytes the planner prices via in_transfer_bytes), not the full
+    sequence — and the action still matches the monolithic forward."""
+    cfg = get_config("cogact-7b").reduced().replace(n_layers=6)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(3)
+    patches = jax.random.normal(key, (2, cfg.n_patches, cfg.vit_dim))
+    tokens = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    ref = model.forward(params, {"patches": patches, "tokens": tokens}, key)
+    Lv, L = cfg.vit_layers, cfg.vit_layers + cfg.n_layers
+    ex = VLASplitExecutor(cfg, SplitPlan(Lv + 1, Lv + 3,
+                                         pool2_start=L, pool2_end=L))
+    act, payloads = ex.run(params, patches, tokens, Lv + 2, key)
+    np.testing.assert_allclose(np.asarray(act), np.asarray(ref), atol=1e-5)
+    # DiT head reads the single cognition token: 1 × d_model on the wire
+    seq = cfg.n_patches + tokens.shape[1]
+    assert payloads["down"]["x"].shape[1] == 1
+    assert payload_bytes(payloads["down"]) < payload_bytes(payloads["up"]) / seq * 2
 
 
 def test_moe_split_equivalence():

@@ -23,6 +23,17 @@ Four measurements:
    freeing quota for one more trunk layer on the cloud
    (docs/EXPERIMENTS.md §Multi-cut).
 
+5. **Streamed**: sequential vs streamed chunk transport
+   (``core/pipeline.py``) on the same multi-cut OpenVLA fleet at the same
+   operating points — the streamed plan table adds the chunk-count axis,
+   chunked uplinks draw the per-tick trace bandwidth and overlap the
+   cloud window's prefill, and the report carries chunk reconfigs +
+   residual bubble fraction (docs/EXPERIMENTS.md §Streaming).
+
+The machine-readable payload written to ``BENCH_fleet.json`` carries a
+``schema_version`` field validated by ``tools/check_bench_schema.py``
+(wired into CI next to the doc-link check).
+
     PYTHONPATH=src python benchmarks/fleet_bench.py [--robots N] [--ticks T]
 
 ``run(quiet=True)`` yields the repo-standard ``name,us_per_call,derived``
@@ -48,6 +59,9 @@ from repro.runtime.fleet import (FleetConfig, FleetReport, outage_schedule,
 
 DEFAULT_ARCHS = ("openvla-7b", "cogact-7b", "llama3.2-3b", "glm4-9b")
 CODEC_AXIS = ("identity", "int8", "int4")
+# BENCH_fleet.json schema version — bump when payload sections/keys
+# change; tools/check_bench_schema.py validates the emitted file
+BENCH_SCHEMA_VERSION = 2
 # multi-cut scenario: per-robot cloud quota (a shared cloud cannot host
 # every robot's full tail) + asymmetric WAN (downlink 8x the uplink)
 MULTICUT_QUOTA_BYTES = 5.8e9
@@ -216,6 +230,38 @@ def bench_multicut(n_robots: int = 16, n_ticks: int = 200,
     return rows
 
 
+def bench_streamed(n_robots: int = 16, n_ticks: int = 200,
+                   n_replicas: int = 3, seed: int = 0,
+                   points=MULTICUT_POINTS_BPS, arch: str = "openvla-7b",
+                   seq_reports=None):
+    """Sequential vs streamed chunk transport, same multi-cut fleet, same
+    quota and codec axis, at each bandwidth operating point.  The
+    ``seq`` rows are the multi-cut fleet as-is; ``stream`` rows plan the
+    chunk axis too and price chunked uplinks against the per-tick trace.
+    ``seq_reports`` (``{bw: FleetReport}``) reuses already-simulated
+    sequential rows — ``run_with_json`` passes ``bench_multicut``'s
+    ``multi`` reports, whose configs are identical, instead of paying
+    the same three fleet simulations twice.  Returns
+    ``[(bw, mode, FleetReport)]``."""
+    rows = []
+    for bw in points:
+        trace = TraceConfig(mean_bps=bw, bad_bps=max(bw / 4, 0.2e6))
+        for mode in ("seq", "stream"):
+            if mode == "seq" and seq_reports is not None \
+                    and bw in seq_reports:
+                rows.append((bw, mode, seq_reports[bw]))
+                continue
+            cfg = FleetConfig(
+                n_robots=n_robots, archs=(arch,), n_ticks=n_ticks,
+                n_replicas=n_replicas, seed=seed, codecs=CODEC_AXIS,
+                trace=trace, nominal_bw_bps=bw,
+                cloud_budget_bytes=MULTICUT_QUOTA_BYTES,
+                multicut=True, down_bw_factor=MULTICUT_DOWN_FACTOR,
+                streamed=(mode == "stream"))
+            rows.append((bw, mode, run_fleet(cfg)))
+    return rows
+
+
 def print_report(rep: FleetReport) -> None:
     print(f"\n{'robot':9s} {'arch':22s} {'n':>4s} {'p50 ms':>8s} "
           f"{'p95 ms':>8s} {'mean ms':>8s}")
@@ -240,8 +286,9 @@ def run_with_json(quiet: bool = False, n_robots: int = 24,
     shrinks every axis to a seconds-scale CI invocation."""
     if smoke:
         n_robots, n_ticks, n_replicas = 6, 40, 2
-    payload: Dict = {"planner": {}, "fleet": {}, "codecs": {},
-                     "multicut": {}, "config": {
+    payload: Dict = {"schema_version": BENCH_SCHEMA_VERSION,
+                     "planner": {}, "fleet": {}, "codecs": {},
+                     "multicut": {}, "streamed": {}, "config": {
                          "n_robots": n_robots, "n_ticks": n_ticks,
                          "n_replicas": n_replicas, "seed": seed,
                          "smoke": smoke}}
@@ -304,6 +351,23 @@ def run_with_json(quiet: bool = False, n_robots: int = 24,
         payload["multicut"][tag] = {
             "p50_s": mrep.fleet_p50_s, "p95_s": mrep.fleet_p95_s,
             "n_multicut_requests": mrep.n_multicut_requests}
+    st_rows = bench_streamed(n_robots=8 if smoke else 16,
+                             n_ticks=60 if smoke else 200,
+                             n_replicas=n_replicas, seed=seed,
+                             seq_reports={bw: modes["multi"]
+                                          for bw, modes in by_bw.items()})
+    st_by_bw: Dict[float, Dict[str, FleetReport]] = {}
+    for bw, mode, srep in st_rows:
+        st_by_bw.setdefault(bw, {})[mode] = srep
+        tag = f"{bw / 1e6:g}MBs_{mode}"
+        lines.append(f"fleet_streamed_{tag}_p95,"
+                     f"{srep.fleet_p95_s * 1e6:.0f},"
+                     f"{srep.n_streamed_requests}st_reqs")
+        payload["streamed"][tag] = {
+            "p50_s": srep.fleet_p50_s, "p95_s": srep.fleet_p95_s,
+            "n_streamed_requests": srep.n_streamed_requests,
+            "n_chunk_reconfigs": srep.n_chunk_reconfigs,
+            "mean_bubble_frac": srep.mean_bubble_frac}
     if not quiet:
         print(f"planner: scalar {scalar_s * 1e3:.1f} ms vs vectorized "
               f"{vec_s * 1e3:.2f} ms over {cells} (model × bandwidth) cells "
@@ -337,6 +401,18 @@ def run_with_json(quiet: bool = False, n_robots: int = 24,
                   f"{m.fleet_p95_s * 1e3:8.1f}ms "
                   f"{(s.fleet_p95_s - m.fleet_p95_s) * 1e3:6.1f}ms "
                   f"{m.n_multicut_requests:8d}")
+        print(f"\nsequential vs streamed chunk transport (openvla-7b "
+              f"multi-cut fleet, per-tick trace-integrated uplinks):")
+        print(f"{'bw MB/s':>8s} {'seq p95':>9s} {'stream p95':>11s} "
+              f"{'delta':>8s} {'st reqs':>8s} {'reconf':>7s} "
+              f"{'bubble':>7s}")
+        for bw, modes in st_by_bw.items():
+            q, s = modes["seq"], modes["stream"]
+            print(f"{bw / 1e6:8.1f} {q.fleet_p95_s * 1e3:7.1f}ms "
+                  f"{s.fleet_p95_s * 1e3:9.1f}ms "
+                  f"{(q.fleet_p95_s - s.fleet_p95_s) * 1e3:6.1f}ms "
+                  f"{s.n_streamed_requests:8d} {s.n_chunk_reconfigs:7d} "
+                  f"{s.mean_bubble_frac:7.3f}")
     return lines, payload
 
 

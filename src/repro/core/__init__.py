@@ -16,6 +16,9 @@
                     ``adjust_placement`` moves either cut of a multi-cut
                     placement)
 * network.py      — bandwidth trace simulator
+* pipeline.py     — streamed chunk-transport makespan model (3-stage
+                    encode → uplink → decode+prefill pipeline; the
+                    chunk-count axis of the streamed planner)
 * controller.py   — end-to-end RoboECC controller
 """
 from .adjustment import (AdjustmentDecision, PlacementDecision, Thresholds,
@@ -27,6 +30,9 @@ from .hardware import (A100, DEVICES, ORIN, THOR, TPU_V5E, DeviceSpec,
                        RooflineTerms, fit_eta, layer_latency, roofline,
                        stack_latency)
 from .network import NetworkSim, TraceConfig, generate_trace
+from .pipeline import (DEFAULT_CHUNK_GRID, chunk_sizes, stream_applies,
+                       stream_bubble_fraction, stream_makespan,
+                       stream_makespan_scalar)
 from .placement import PlacementPlan
 from .pool import Pool, build_pool, pool_transfer_profile
 from .predictor import (Predictor, PredictorConfig, check_granularity,
@@ -37,7 +43,8 @@ from .segmentation import (GraphArrays, MulticutResult, PlacementEval,
                            evaluate_placement, evaluate_split,
                            exhaustive_best, fixed_split, graph_arrays,
                            net_time, search, search_joint, search_multicut,
-                           search_multicut_scalar, search_vec,
+                           search_multicut_scalar, search_streamed,
+                           search_streamed_scalar, search_vec,
                            sweep_multicut, sweep_search)
 from .structure import LayerCost, Workload, build_graph, total_flops, \
     total_weight_bytes
@@ -51,6 +58,8 @@ __all__ = [
     "A100", "DEVICES", "ORIN", "THOR", "TPU_V5E", "DeviceSpec",
     "RooflineTerms", "fit_eta", "layer_latency", "roofline", "stack_latency",
     "NetworkSim", "TraceConfig", "generate_trace",
+    "DEFAULT_CHUNK_GRID", "chunk_sizes", "stream_applies",
+    "stream_bubble_fraction", "stream_makespan", "stream_makespan_scalar",
     "PlacementPlan",
     "Pool", "build_pool", "pool_transfer_profile",
     "Predictor", "PredictorConfig", "check_granularity", "lstm_forward",
@@ -59,7 +68,8 @@ __all__ = [
     "VecSearchResult", "codec_applies", "cut_bytes", "downlink_bytes",
     "evaluate_placement", "evaluate_split", "exhaustive_best", "fixed_split",
     "graph_arrays", "net_time", "search", "search_joint", "search_multicut",
-    "search_multicut_scalar", "search_vec", "sweep_multicut", "sweep_search",
+    "search_multicut_scalar", "search_streamed", "search_streamed_scalar",
+    "search_vec", "sweep_multicut", "sweep_search",
     "LayerCost", "Workload", "build_graph", "total_flops",
     "total_weight_bytes",
 ]

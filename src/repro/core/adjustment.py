@@ -20,6 +20,15 @@ an oscillating link is the hold band ``[T_low, T_high]`` (sized by
 DeviceSpecs to include encode/decode compute in the transport price
 (without them the move is wire-only).
 
+Streamed extension (``core/pipeline.py``): ``adjust_placement`` with a
+``chunk_grid`` adds streaming chunk-count moves to the same ΔNB policy —
+the uplink leg of every candidate is priced as the chunk-pipeline
+makespan minus the overlapped cloud-window compute, so a predicted
+bandwidth drop can answer with *more chunks* (hide the slow link behind
+prefill) as an alternative to retreating the cut or compressing harder,
+and a predicted rise can shed per-chunk rtt overhead.  Like a codec
+switch, a chunk-count change ships no weights.
+
 Threshold calibration follows the paper §V-C-2: ``T_high`` starts at the
 maximum historical ``ΔNB``; ``T_low`` is then grid-searched on a validation
 trace; ``T_high`` is re-searched afterwards (Fig. 7).
@@ -31,8 +40,9 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from .codec import resolve_codecs
-from .hardware import DeviceSpec
+from .codec import get_codec, resolve_codecs
+from .hardware import DeviceSpec, layer_latency
+from .pipeline import stream_applies, stream_makespan_scalar
 from .placement import PlacementPlan
 from .pool import Pool
 from .segmentation import codec_applies, cut_bytes, downlink_bytes, net_time
@@ -121,7 +131,9 @@ def adjust_placement(graph: Sequence[LayerCost], pool: Pool,
                      edge: Optional[DeviceSpec] = None,
                      cloud: Optional[DeviceSpec] = None,
                      down_bw_factor: float = 1.0,
-                     max_err: Optional[float] = None) -> PlacementDecision:
+                     max_err: Optional[float] = None,
+                     chunk_grid: Optional[Sequence[int]] = None,
+                     rtt_s: float = 0.0) -> PlacementDecision:
     """Multi-cut ΔNB adjustment: the same up/down/hold policy as
     ``adjust``, generalized to move **either cut** of an edge→cloud→edge
     placement (uplink cut inside ``pool``, downlink cut inside ``pool2``).
@@ -137,9 +149,22 @@ def adjust_placement(graph: Sequence[LayerCost], pool: Pool,
       downlink leg at all) **collapses the plan back to K=1** for free.
     * otherwise hold.
 
-    With ``pool2=None`` and a single-cut ``current`` this reduces exactly
-    to ``adjust`` (the K=1 special case); the ``AdjustmentDecision`` split
-    is ``placement.primary_cut(n)``."""
+    ``chunk_grid`` adds streaming chunk-count moves (``core/pipeline.py``)
+    to the move set: every candidate's uplink leg is priced as the
+    3-stage chunk-pipeline makespan at ``NB_pred`` *minus the overlapped
+    cloud-window compute* (the transport-exposed seconds — for
+    ``n_chunks = 1`` exactly the sequential transport the codec-free move
+    prices), and both the "up" and "down" moves pick the chunk count
+    jointly.  A chunk count is a pure software reconfiguration — like a
+    codec switch it ships no weights — so it rides the same hold band.
+    Chunk pricing needs ``cloud`` (the window compute that overlaps);
+    without a device the chunk axis degenerates to wire-only pipelines
+    where ``n_chunks = 1`` always wins (per-chunk rtt with nothing to
+    overlap).
+
+    With ``pool2=None``, ``chunk_grid=None`` and a single-cut ``current``
+    this reduces exactly to ``adjust`` (the K=1 special case); the
+    ``AdjustmentDecision`` split is ``placement.primary_cut(n)``."""
     n = len(graph)
     cur = current.normalize(n)
     cur_s1 = cur.primary_cut(n)
@@ -148,9 +173,43 @@ def adjust_placement(graph: Sequence[LayerCost], pool: Pool,
     cur_codec = next((c for c in cur.cut_codecs if c is not None), None)
     delta = nb_pred_bps - nb_real_bps
     s2_opts = list(pool2.splits()) if pool2 is not None else [cur_s2]
+    ks = sorted({int(k) for k in chunk_grid} | {1}) \
+        if chunk_grid is not None else [1]
+    # suffix cloud-latency cumsum: O(1) window compute for chunk pricing
+    csum = None
+    if cloud is not None and len(ks) > 1:
+        lat = np.array([layer_latency(c, cloud) for c in graph])
+        csum = np.concatenate([np.cumsum(lat[::-1])[::-1], [0.0]])
 
-    def mk(s1: int, s2: int, codec: Optional[str]) -> PlacementPlan:
-        return PlacementPlan.from_window(s1, s2, n, codec)
+    def window_cloud_s(s1: int, s2: int) -> float:
+        if csum is None or s1 >= s2:
+            return 0.0
+        return float(csum[s1] - csum[s2])
+
+    def up_leg(s1: int, s2: int, c, k: int, bw: float) -> Optional[float]:
+        """Transport-exposed uplink seconds at bandwidth ``bw`` for chunk
+        count ``k`` (None = streaming not applicable at this cut)."""
+        vol = cut_bytes(graph, s1)
+        seq = net_time(vol, bw, rtt_s=rtt_s, codec=c,
+                       applicable=codec_applies(s1, n),
+                       edge=edge, cloud=cloud) if s1 < s2 else 0.0
+        if k == 1:
+            return seq
+        if not (s1 < s2 and stream_applies(s1, n, vol)):
+            return None
+        app = codec_applies(s1, n)
+        enc = c.encode_s(vol, edge) if c is not None and app \
+            and edge is not None else 0.0
+        dec = c.decode_s(vol, cloud) if c is not None and app \
+            and cloud is not None else 0.0
+        wire_c = c.wire_bytes(vol) if c is not None and app else vol
+        g = window_cloud_s(s1, s2)
+        m = stream_makespan_scalar(enc, wire_c / bw, dec + g, k, rtt_s)
+        return m - g
+
+    def mk(s1: int, s2: int, codec: Optional[str],
+           k: int = 1) -> PlacementPlan:
+        return PlacementPlan.from_window(s1, s2, n, codec, k)
 
     def window_ok(s1: int, s2: int) -> bool:
         # an adjuster move must keep a REAL cloud window (or be the
@@ -166,9 +225,24 @@ def adjust_placement(graph: Sequence[LayerCost], pool: Pool,
         s1 = max(pool.splits(), key=lambda s: cut_bytes(graph, s))
         wide = [s for s in s2_opts if s > s1] or [n]
         s2 = max(wide, key=lambda s: downlink_bytes(graph, s))
-        codec = min(cs, key=lambda c: c.err_bound).name \
-            if cs is not None else cur_codec
-        plan = mk(s1, s2, codec)
+        cbest = min(cs, key=lambda c: c.err_bound) if cs is not None \
+            else None
+        codec = cbest.name if cbest is not None else cur_codec
+        k = 1
+        if len(ks) > 1:
+            # chunking is not part of the paper's greedy max-volume jump;
+            # re-pick it for the exploited cuts at NB_pred (smallest
+            # count on ties — less machinery when the link is good).
+            # Resolve through the adjuster's own axis first: it may hold
+            # custom Codec instances a registry lookup would miss.
+            try:
+                cobj = cbest if cbest is not None else get_codec(codec)
+            except KeyError:
+                cobj = None
+            legs = [(up_leg(s1, s2, cobj, kk, nb_pred_bps), kk)
+                    for kk in ks]
+            k = min((t, kk) for t, kk in legs if t is not None)[1]
+        plan = mk(s1, s2, codec, k)
         moved = plan != cur
         return PlacementDecision(plan, moved, "up", delta, codec=codec)
     if delta < thr.low:
@@ -177,29 +251,35 @@ def adjust_placement(graph: Sequence[LayerCost], pool: Pool,
         # tie-break order mirrors ``adjust`` exactly: its codec-free down
         # move is argmin over volumes (FIRST minimum -> smallest split),
         # its joint move scans splits descending (largest tied split) —
-        # uniform trunks tie constantly, so the order is observable
+        # uniform trunks tie constantly, so the order is observable.  The
+        # chunk loop is innermost-ascending: sequential wins ties.
         for ci, c in enumerate(axis):
             for s1 in sorted(pool.splits(), reverse=cs is not None):
                 for s2 in sorted(s2_opts, reverse=True):
                     if not window_ok(s1, s2):
                         continue
-                    up = net_time(cut_bytes(graph, s1), nb_pred_bps,
-                                  codec=c, applicable=codec_applies(s1, n),
-                                  edge=edge, cloud=cloud) if s1 < s2 else 0.0
+                    # the downlink pays the same per-message rtt the
+                    # uplink candidates price (rtt_s = 0 keeps the
+                    # historical rtt-free objective exactly)
                     dn = net_time(downlink_bytes(graph, s2),
                                   nb_pred_bps * down_bw_factor, codec=c,
+                                  rtt_s=rtt_s,
                                   applicable=codec_applies(s2, n),
                                   edge=cloud, cloud=edge) \
                         if s1 < s2 < n else 0.0
-                    t = up + dn
-                    if best is None or t < best[0]:
-                        best = (t, ci, s1, s2)
+                    for k in ks:
+                        up = up_leg(s1, s2, c, k, nb_pred_bps)
+                        if up is None:
+                            continue
+                        t = up + dn
+                        if best is None or t < best[0]:
+                            best = (t, ci, s1, s2, k)
         if best is None:
             return PlacementDecision(cur, False, "down", delta,
                                      codec=cur_codec)
-        _, ci, s1, s2 = best
+        _, ci, s1, s2, k = best
         codec = axis[ci].name if axis[ci] is not None else cur_codec
-        plan = mk(s1, s2, codec)
+        plan = mk(s1, s2, codec, k)
         moved = plan != cur
         return PlacementDecision(plan, moved, "down", delta, codec=codec)
     return PlacementDecision(cur, False, "hold", delta,

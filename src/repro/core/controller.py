@@ -30,8 +30,10 @@ from .network import NetworkSim
 from .placement import PlacementPlan
 from .pool import Pool, build_pool
 from .predictor import Predictor, PredictorConfig, train_predictor
+from .pipeline import DEFAULT_CHUNK_GRID
 from .segmentation import (SegmentationResult, evaluate_placement,
-                           evaluate_split, search, search_multicut)
+                           evaluate_split, search, search_multicut,
+                           search_streamed)
 from .structure import LayerCost, Workload, build_graph
 
 
@@ -50,6 +52,9 @@ class TickResult:
     # the full multi-cut placement this tick ran with (multicut mode);
     # ``split`` stays the primary edge→cloud cut for legacy consumers
     placement: Optional[PlacementPlan] = None
+    # streaming chunk count of the uplink cut this tick ran with
+    # (1 = sequential transfer; streamed mode only)
+    n_chunks: int = 1
 
 
 class RoboECC:
@@ -70,7 +75,19 @@ class RoboECC:
     edge→cloud cut for legacy consumers; single-cut behaviour is the exact
     K=1 special case (a multicut controller whose planner collapses the
     tail keeps ``placement.is_single``).  Multicut codec state must come
-    from the ``core/codec.py`` registry (plans carry codec *names*)."""
+    from the ``core/codec.py`` registry (plans carry codec *names*).
+
+    ``streamed=True`` plans over the streaming chunk axis too
+    (``core/pipeline.py``): Alg. 1 becomes ``search_streamed`` (restricted
+    to single cuts unless ``multicut``), every tick is priced through the
+    chunk-pipeline makespan (``evaluate_placement(streamed=True)``), and
+    the per-tick ΔNB move may change ``n_chunks`` jointly with the cuts
+    and codec — so the LSTM bandwidth forecast drives chunk replanning: a
+    chunk count picked for 10 MB/s is wrong at 0.2 MB/s, the paper's
+    performance-drift story replayed on a new axis.  ``plan_rtt_s`` is
+    the per-chunk rtt the streamed planner and adjuster price (chunking
+    is free at rtt 0, so it must be the deployment's real rtt);
+    ``chunk_grid`` the chunk counts searched."""
 
     def __init__(self, cfg: ModelConfig, edge: DeviceSpec, cloud: DeviceSpec,
                  *, workload: Workload = Workload(),
@@ -83,7 +100,10 @@ class RoboECC:
                  adjust_codecs: Optional[List] = None,
                  graph: Optional[List[LayerCost]] = None,
                  multicut: bool = False,
-                 down_bw_factor: float = 1.0):
+                 down_bw_factor: float = 1.0,
+                 streamed: bool = False,
+                 chunk_grid=DEFAULT_CHUNK_GRID,
+                 plan_rtt_s: float = 0.005):
         self.cfg = cfg
         self.edge_dev, self.cloud_dev = edge, cloud
         self.workload = workload
@@ -98,6 +118,9 @@ class RoboECC:
         self.pool_overhead_target = pool_overhead_target
         self.multicut = multicut
         self.down_bw_factor = down_bw_factor
+        self.streamed = streamed
+        self.chunk_grid = tuple(chunk_grid)
+        self.plan_rtt_s = plan_rtt_s
         self.seg: SegmentationResult = search(
             self.graph, edge, cloud, nominal_bw_bps,
             cloud_budget_bytes=cloud_budget_bytes,
@@ -112,9 +135,20 @@ class RoboECC:
     def _plan_placement(self, nominal_bw_bps: float,
                         cloud_budget_bytes: Optional[float]
                         ) -> PlacementPlan:
-        """Alg. 1 (single-cut) or the multi-cut (S1, S2) scan, as a
-        ``PlacementPlan``.  Both paths share the codec the controller was
+        """Alg. 1 (single-cut), the multi-cut (S1, S2) scan, or — with
+        ``streamed`` — the (S1, S2, n_chunks) streamed scan, as a
+        ``PlacementPlan``.  All paths share the codec the controller was
         built with."""
+        if self.streamed:
+            st = search_streamed(
+                self.graph, self.edge_dev, self.cloud_dev, [nominal_bw_bps],
+                cloud_budget_bytes,
+                codecs=[self.codec] if self.codec is not None else None,
+                chunk_grid=self.chunk_grid, rtt_s=self.plan_rtt_s,
+                input_bytes=self.workload.input_bytes,
+                down_bw_factor=self.down_bw_factor,
+                single_cut_only=not self.multicut)
+            return st.plan_at(0)
         if not self.multicut:
             return PlacementPlan.single(
                 self.seg.split, self.codec.name if self.codec else None)
@@ -162,13 +196,17 @@ class RoboECC:
                               codec=self.codec)
 
     def placement_latency_at(self, bw_bps: float, rtt_s: float = 0.0):
-        """(edge_s, cloud_s, net_s) of the current (possibly multi-cut)
-        placement — the generalization of ``latency_at``.  ``net_s`` is
-        uplink + downlink; each leg carries its own rtt."""
+        """(edge_s, cloud_s, net_s) of the current (possibly multi-cut /
+        streamed) placement — the generalization of ``latency_at``.
+        ``net_s`` is uplink + downlink; each leg carries its own rtt.  In
+        streamed mode the uplink component is the chunk-pipeline's
+        transport-exposed time (makespan − overlapped cloud compute), so
+        the three components still sum to the tick latency."""
         ev = evaluate_placement(self.graph, self.placement, self.edge_dev,
                                 self.cloud_dev, bw_bps, rtt_s=rtt_s,
                                 input_bytes=self.workload.input_bytes,
-                                down_bw_factor=self.down_bw_factor)
+                                down_bw_factor=self.down_bw_factor,
+                                streamed=self.streamed)
         return ev.edge_s, ev.cloud_s, ev.net_s
 
     # ------------------------------------------------------------------ tick
@@ -180,13 +218,18 @@ class RoboECC:
         if adjust_enabled and self.predictor is not None:
             window = net.window(self.predictor.cfg.window)
             bw_pred = self.predictor.predict(window)
-            if self.multicut:
+            if self.multicut or self.streamed:
+                # the streamed single-cut controller also routes through
+                # the placement adjuster: its move set carries the chunk
+                # axis (pool2=None pins S2 = n, so cuts stay single)
                 decision = adjust_placement(
                     self.graph, self.pool, self.placement, bw_pred, bw_real,
                     self.thresholds, pool2=self.pool2,
                     codecs=self.adjust_codecs,
                     edge=self.edge_dev, cloud=self.cloud_dev,
-                    down_bw_factor=self.down_bw_factor)
+                    down_bw_factor=self.down_bw_factor,
+                    chunk_grid=self.chunk_grid if self.streamed else None,
+                    rtt_s=self.plan_rtt_s if self.streamed else 0.0)
                 self.placement = decision.placement
                 self.split = self.placement.primary_cut(len(self.graph))
             else:
@@ -205,14 +248,14 @@ class RoboECC:
                 # would miss or silently swap for the bf16 defaults
                 self.codec = next(c for c in self.adjust_codecs
                                   if c.name == decision.codec)
-            if not self.multicut:
+            if not (self.multicut or self.streamed):
                 self.placement = PlacementPlan.single(
                     self.split, self.codec.name if self.codec else None)
         overhead = time.perf_counter() - t0
         # the *next* tick's bandwidth is what the transfer actually sees
         net.step()
         bw_serve = net.now_bps
-        if self.multicut:
+        if self.multicut or self.streamed:
             e, c, t = self.placement_latency_at(bw_serve, net.rtt_s)
         else:
             e, c, t = self.latency_at(self.split, bw_serve, net.rtt_s)
@@ -221,7 +264,9 @@ class RoboECC:
                           decision=decision, adjust_overhead_s=overhead,
                           bw_real_bps=bw_real, bw_pred_bps=bw_pred,
                           codec=self.codec.name if self.codec else None,
-                          placement=self.placement)
+                          placement=self.placement,
+                          n_chunks=self.placement.primary_chunks(
+                              len(self.graph)))
 
     # ------------------------------------------------------------ elasticity
     def replan(self, *, edge: Optional[DeviceSpec] = None,

@@ -3,6 +3,23 @@
 A Markov-modulated bandwidth process with AR(1) noise, diurnal drift and
 random congestion spikes — the "internet bandwidth fluctuations" RoboECC
 must adapt to.  Traces are seeded + reproducible; units are BYTES/s.
+
+``generate_trace`` is fully vectorized: all randomness is drawn in bulk
+up front (three streams, in a fixed documented order), the rare
+regime-flip events are walked directly instead of ticking a Python loop,
+and the AR(1) noise is a truncated-kernel convolution (``rho**k`` decays
+below double precision after a few hundred lags, so the truncation is
+invisible).  Reproducibility contract: same ``(n_steps, cfg, seed)`` →
+bit-identical trace, pinned by the seed-0 regression test in
+``tests/test_pipeline.py``.
+
+``NetworkSim`` answers two kinds of transfer query: ``transfer_s`` prices
+a whole payload at the *current tick's* bandwidth (the historical model —
+fine for sub-tick transfers, wrong for transfers spanning hundreds of
+ticks at ``tick_s=0.05``), and ``transfer_trace_s`` integrates the trace
+tick-by-tick (consume bytes at each tick's rate, clamp to the last sample
+past the trace end) — the honest price for long/streamed transfers, used
+by ``runtime/fleet.py`` for chunked uplinks.
 """
 from __future__ import annotations
 
@@ -27,31 +44,80 @@ class TraceConfig:
     floor_bps: float = 0.05e6
 
 
+def _regime_chain(u: np.ndarray, p_degrade: float, p_recover: float
+                  ) -> np.ndarray:
+    """2-state Markov regime from one bulk uniform stream, walked by
+    *transition events* instead of per-tick: from the good state the next
+    flip is the first draw ``< p_degrade``; from the bad state the first
+    draw ``< p_recover`` recovers.  Iterations = number of regime
+    switches (a few % of the ticks), each a ``searchsorted``."""
+    n = len(u)
+    bad = np.zeros(n, dtype=bool)
+    idx_deg = np.flatnonzero(u < p_degrade)
+    idx_rec = np.flatnonzero(u < p_recover)
+    t, is_bad = 0, False
+    while t < n:
+        if not is_bad:
+            j = np.searchsorted(idx_deg, t)
+            if j == len(idx_deg):
+                break                       # good to the end
+            tg = int(idx_deg[j])
+            bad[tg] = True                  # flip lands on its own tick
+            t, is_bad = tg + 1, True
+        else:
+            j = np.searchsorted(idx_rec, t)
+            if j == len(idx_rec):
+                bad[t:] = True              # bad to the end
+                break
+            tr = int(idx_rec[j])
+            bad[t:tr] = True                # recovery tick is good again
+            t, is_bad = tr + 1, False
+    return bad
+
+
 def generate_trace(n_steps: int, cfg: Optional[TraceConfig] = None,
                    seed: int = 0) -> np.ndarray:
     """Bandwidth (bytes/s) at each control-loop tick.  ``cfg`` defaults to
     a fresh ``TraceConfig()`` per call — a shared default instance would be
     one mutable object across every call site (``TraceConfig`` is frozen
-    now, but the default still shouldn't alias)."""
+    now, but the default still shouldn't alias).
+
+    Vectorized: the seeded generator draws, in this order, the regime
+    uniforms, the AR(1) normals, then the spike uniforms — three bulk
+    draws (the draw ORDER is part of the reproducibility contract; the
+    historical per-tick loop interleaved them, so traces differ from
+    pre-streaming releases at the same seed — summary stats for seed 0
+    are pinned in ``tests/test_pipeline.py``)."""
     cfg = cfg if cfg is not None else TraceConfig()
     rng = np.random.default_rng(seed)
-    bw = np.empty(n_steps)
-    regime_bad = False
-    x = 0.0                         # AR(1) log-noise
-    for t in range(n_steps):
-        if regime_bad:
-            regime_bad = rng.random() >= cfg.p_recover
-        else:
-            regime_bad = rng.random() < cfg.p_degrade
-        base = cfg.bad_bps if regime_bad else cfg.mean_bps
-        x = cfg.ar_rho * x + rng.normal(0.0, cfg.ar_sigma)
-        diurnal = 1.0 + cfg.diurnal_amp * np.sin(
-            2 * np.pi * t / cfg.diurnal_period)
-        v = base * np.exp(x) * diurnal
-        if rng.random() < cfg.spike_prob:
-            v *= cfg.spike_depth
-        bw[t] = max(v, cfg.floor_bps)
-    return bw
+    n = int(n_steps)
+    if n <= 0:
+        return np.empty(0)
+    u_reg = rng.random(n)
+    eps = rng.normal(0.0, cfg.ar_sigma, n)
+    u_spike = rng.random(n)
+
+    bad = _regime_chain(u_reg, cfg.p_degrade, cfg.p_recover)
+    # AR(1) x[t] = rho x[t-1] + eps[t] as a convolution with rho**k,
+    # truncated where |rho|**k < 1e-18 (below double noise relative to
+    # x).  Negative rho (anticorrelated noise) keeps the alternating-sign
+    # kernel; |rho| >= 1 falls back to the full-length kernel.
+    rho = cfg.ar_rho
+    if rho == 0.0:
+        x = eps
+    else:
+        a = abs(rho)
+        klen = n if a >= 1.0 else min(
+            n, int(np.ceil(np.log(1e-18) / np.log(a))) + 1)
+        kernel = rho ** np.arange(klen)
+        x = np.convolve(eps, kernel)[:n]
+
+    base = np.where(bad, cfg.bad_bps, cfg.mean_bps)
+    diurnal = 1.0 + cfg.diurnal_amp * np.sin(
+        2 * np.pi * np.arange(n) / cfg.diurnal_period)
+    v = base * np.exp(x) * diurnal
+    v = np.where(u_spike < cfg.spike_prob, v * cfg.spike_depth, v)
+    return np.maximum(v, cfg.floor_bps)
 
 
 class NetworkSim:
@@ -71,10 +137,53 @@ class NetworkSim:
     def transfer_s(self, n_bytes: float) -> float:
         """Seconds to ship ``n_bytes`` at the current tick.  Zero bytes
         cost zero — no rtt is paid when nothing crosses the link, matching
-        ``segmentation.net_time`` (edge-only splits are transfer-free)."""
+        ``segmentation.net_time`` (edge-only splits are transfer-free).
+
+        NOTE: prices the ENTIRE transfer at this tick's bandwidth even
+        when it spans many ticks — adequate for sub-tick payloads, wrong
+        for long transfers on a moving link; those should use
+        ``transfer_trace_s``."""
         if n_bytes <= 0:
             return 0.0
         return n_bytes / self.now_bps + self.rtt_s
+
+    def wire_trace_s(self, n_bytes: float, offset_s: float = 0.0) -> float:
+        """Pure wire seconds to ship ``n_bytes`` starting ``offset_s``
+        seconds after the current tick boundary, consuming the trace
+        tick-by-tick (each tick delivers ``trace[t] * tick_s`` bytes).
+        Past the trace end the bandwidth clamps to the last sample.  No
+        rtt; zero bytes are free.  The building block for chunked
+        streamed uplinks (chunks ship back-to-back, each starting at the
+        previous chunk's finish offset)."""
+        if n_bytes <= 0:
+            return 0.0
+        tick = self.tick_s
+        pos = self.t + offset_s / tick          # fractional tick index
+        i = int(np.floor(pos))
+        frac = pos - i
+        remaining = float(n_bytes)
+        elapsed = 0.0
+        last = len(self.trace) - 1
+        while True:
+            bw = float(self.trace[min(max(i, 0), last)])
+            if i >= last:                       # clamped constant tail
+                return elapsed + remaining / bw
+            avail_s = (1.0 - frac) * tick
+            cap = bw * avail_s
+            if remaining <= cap:
+                return elapsed + remaining / bw
+            remaining -= cap
+            elapsed += avail_s
+            i += 1
+            frac = 0.0
+
+    def transfer_trace_s(self, n_bytes: float, offset_s: float = 0.0
+                         ) -> float:
+        """Trace-integrating variant of ``transfer_s``: wire seconds from
+        ``wire_trace_s`` plus one rtt.  Zero bytes stay free."""
+        if n_bytes <= 0:
+            return 0.0
+        return self.wire_trace_s(n_bytes, offset_s) + self.rtt_s
 
     def step(self, n: int = 1) -> None:
         self.t += n

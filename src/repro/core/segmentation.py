@@ -39,6 +39,18 @@ Cloud budget feasibility is the **window** load ``weights[S1:S2)`` — the
 knob that makes multi-cut genuinely better: under a tight per-robot cloud
 quota the byte-heavy but compute-light action head can stay on the edge,
 freeing quota for one more expensive trunk layer on the cloud.
+
+Streamed execution (``core/pipeline.py``): ``search_streamed`` /
+``search_streamed_scalar`` add a chunk-count axis ``K`` — the uplink cut
+activation ships in token-axis chunks through a 3-stage pipeline (edge
+encode → per-chunk wire+rtt → cloud decode + chunked prefill of the
+window), so those cells price a *makespan* instead of a sum.  The
+``K = 1`` plane is the sequential (C, S1, S2, B) tensor shared with
+``search_multicut`` (``_plan_tensors``), which is what makes
+``n_chunks = 1`` reproduce the non-streamed results exactly; ties prefer
+the smallest chunk count, so chunking only appears where it strictly
+pays.  ``sweep_multicut(chunk_grid=...)`` extends the fleet plan table
+with the same axis.
 """
 from __future__ import annotations
 
@@ -49,6 +61,9 @@ import numpy as np
 
 from .codec import Codec, get_codec, resolve_codecs, transport_s
 from .hardware import DeviceSpec, layer_latency
+from .pipeline import (DEFAULT_CHUNK_GRID, stream_applies,
+                       stream_bubble_fraction, stream_makespan,
+                       stream_makespan_scalar)
 from .placement import CLOUD, EDGE, PlacementPlan
 from .structure import LayerCost
 
@@ -314,15 +329,38 @@ class VecSearchResult:
     codec_names: Optional[Tuple[str, ...]] = None
 
 
+def _codec_wire_split(wire: np.ndarray, n: int, cs: Sequence[Codec],
+                      enc_dev: DeviceSpec, dec_dev: DeviceSpec
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-(codec, split) compressed wire bytes and the two codec-compute
+    sides SEPARATELY (encode on ``enc_dev``, decode on ``dec_dev``) —
+    the streamed pipeline places them in different stages.
+
+    ``wire``: (n+1,) raw cut bytes.  Mid-graph splits (0 < S < n) with
+    traffic get the codec's wire factor and encode/decode overhead (both
+    linear in raw bytes); the extremes pass through raw.  Shapes (C, n+1).
+    """
+    app = np.zeros(n + 1, dtype=bool)
+    app[1:n] = True
+    app &= wire > 0
+    factors = np.array([c.wire_factor for c in cs], dtype=np.float64)
+    enc_r = np.array([c.encode_s_per_byte(enc_dev) for c in cs],
+                     dtype=np.float64)
+    dec_r = np.array([c.decode_s_per_byte(dec_dev) for c in cs],
+                     dtype=np.float64)
+    wire_c = np.where(app[None, :], wire[None, :] * factors[:, None],
+                      wire[None, :])
+    enc_o = np.where(app[None, :], wire[None, :] * enc_r[:, None], 0.0)
+    dec_o = np.where(app[None, :], wire[None, :] * dec_r[:, None], 0.0)
+    return wire_c, enc_o, dec_o
+
+
 def _codec_wire_overhead(wire: np.ndarray, n: int, cs: Sequence[Codec],
                          edge: DeviceSpec, cloud: DeviceSpec
                          ) -> Tuple[np.ndarray, np.ndarray]:
-    """Per-(codec, split) compressed wire bytes and codec-compute seconds.
-
-    ``wire``: (n+1,) raw cut bytes.  Mid-graph splits (0 < S < n) with
-    traffic get the codec's wire factor and encode+decode overhead (both
-    linear in raw bytes); the extremes pass through raw.  Shapes (C, n+1).
-    """
+    """Per-(codec, split) compressed wire bytes and COMBINED encode+decode
+    seconds — the sequential-transport view (``_codec_wire_split`` summed;
+    the sum order matches the historical rate-sum formula)."""
     app = np.zeros(n + 1, dtype=bool)
     app[1:n] = True
     app &= wire > 0
@@ -507,7 +545,12 @@ class PlacementEval:
     """One priced ``PlacementPlan``: latency decomposition in seconds plus
     the cloud-hosted weight load.  ``up_s``/``down_s`` are the edge→cloud /
     cloud→edge transport legs (each includes its own rtt and codec
-    encode/decode compute); ``net_s = up_s + down_s``."""
+    encode/decode compute); ``net_s = up_s + down_s``.  For a streamed
+    evaluation (``n_chunks > 1``) the uplink leg is the pipeline's
+    *transport-exposed* time ``makespan − cloud_s`` — the cloud window
+    prefills arrived chunks concurrently, so ``total_s`` still equals
+    ``edge_s + cloud_s + up_s + down_s`` — and ``bubble_frac`` reports the
+    modeled fill/drain dead time (``core/pipeline.py``)."""
     plan: PlacementPlan
     total_s: float
     edge_s: float
@@ -516,6 +559,8 @@ class PlacementEval:
     down_s: float
     cloud_load_bytes: float
     codec: Optional[str] = None
+    n_chunks: int = 1
+    bubble_frac: float = 0.0
 
     @property
     def net_s(self) -> float:
@@ -526,7 +571,8 @@ def evaluate_placement(graph: Sequence[LayerCost], plan: PlacementPlan,
                        edge: DeviceSpec, cloud: DeviceSpec,
                        bandwidth_bps: float, *, rtt_s: float = 0.0,
                        input_bytes: float = 0.0,
-                       down_bw_factor: float = 1.0) -> PlacementEval:
+                       down_bw_factor: float = 1.0,
+                       streamed: bool = False) -> PlacementEval:
     """Price an arbitrary K-segment placement: per-segment compute on its
     tier plus one transport leg per tier-changing cut.  Edge→cloud cuts
     (uplinks) ship the cut activation (``cut_bytes``; the raw observation
@@ -535,15 +581,26 @@ def evaluate_placement(graph: Sequence[LayerCost], plan: PlacementPlan,
     receiving segment consumes (``downlink_bytes``) on
     ``down_bw_factor × bandwidth`` with encode-on-cloud / decode-on-edge.
     Every real cut pays ``rtt_s``.  The K=1 plan reproduces
-    ``evaluate_split`` exactly."""
+    ``evaluate_split`` exactly.
+
+    ``streamed=True`` honours the plan's per-cut ``cut_chunks``: an
+    uplink cut with ``n_chunks > 1`` is priced as the 3-stage chunk
+    pipeline (``core/pipeline.py`` — encode → wire+rtt per chunk →
+    decode + chunked prefill of the cloud window), replacing that leg's
+    sequential ``up_s`` with the transport-exposed ``makespan − cloud_s``.
+    Streaming applies only where a codec would (mid-graph cuts with
+    traffic, ``pipeline.stream_applies``); plans whose chunks are all 1
+    — and any plan under ``streamed=False`` — price exactly as before."""
     n = len(graph)
     norm = plan.normalize(n)
     dev = {EDGE: edge, CLOUD: cloud}
     edge_s = cloud_s = up_s = down_s = 0.0
     cloud_load = 0.0
     segs = [s for s in norm.segments(n) if s[1] > s[0]]
+    seg_times = []
     for a, b, tier in segs:
         t = sum(layer_latency(c, dev[tier]) for c in graph[a:b])
+        seg_times.append(t)
         if tier == EDGE:
             edge_s += t
         else:
@@ -556,34 +613,64 @@ def evaluate_placement(graph: Sequence[LayerCost], plan: PlacementPlan,
         # wire bytes don't)
         up_s += net_time(cut_bytes(graph, 0, input_bytes), bandwidth_bps,
                          rtt_s=rtt_s, applicable=False)
+    stream_leg = None            # (wire_raw, codec, n_chunks) of 1st uplink
     for i in range(1, len(segs)):
         cut, _, dst_tier = segs[i]
         codec = get_codec(norm.cut_codecs[i - 1])
         if dst_tier == CLOUD:               # uplink
             wire = cut_bytes(graph, cut, input_bytes)
-            up_s += net_time(wire, bandwidth_bps, rtt_s=rtt_s, codec=codec,
-                             applicable=codec_applies(cut, n),
-                             edge=edge, cloud=cloud)
+            leg = net_time(wire, bandwidth_bps, rtt_s=rtt_s, codec=codec,
+                           applicable=codec_applies(cut, n),
+                           edge=edge, cloud=cloud)
+            up_s += leg
+            chunks = norm.cut_chunks[i - 1]
+            if streamed and stream_leg is None and chunks > 1 \
+                    and stream_applies(cut, n, wire):
+                # seg_times[i] is the cloud window THIS uplink feeds —
+                # only its prefill overlaps the arriving chunks (later
+                # cloud segments, if any, stay sequential)
+                stream_leg = (wire, codec, chunks, leg, seg_times[i])
         else:                               # downlink
             wire = downlink_bytes(graph, cut)
             down_s += net_time(wire, bandwidth_bps * down_bw_factor,
                                rtt_s=rtt_s, codec=codec,
                                applicable=codec_applies(cut, n),
                                edge=cloud, cloud=edge)
+    n_chunks, bubble = 1, 0.0
+    if stream_leg is not None:
+        # re-price the streamed uplink leg as the chunk pipeline: its
+        # stage-3 work is the cloud decode PLUS the fed window's prefill,
+        # so the leg's exposed cost becomes makespan − window_s
+        wire, codec, n_chunks, seq_leg, window_s = stream_leg
+        enc = codec.encode_s(wire, edge) if codec is not None else 0.0
+        dec = codec.decode_s(wire, cloud) if codec is not None else 0.0
+        wire_c = codec.wire_bytes(wire) if codec is not None else wire
+        m = stream_makespan_scalar(enc, wire_c / bandwidth_bps,
+                                   dec + window_s, n_chunks, rtt_s)
+        up_s = (up_s - seq_leg) + (m - window_s)
+        bubble = float(stream_bubble_fraction(enc, wire_c / bandwidth_bps,
+                                              dec + window_s, n_chunks,
+                                              rtt_s))
     codec_names = [c for c in norm.cut_codecs if c is not None]
     return PlacementEval(plan=norm, total_s=edge_s + cloud_s + up_s + down_s,
                          edge_s=edge_s, cloud_s=cloud_s, up_s=up_s,
                          down_s=down_s, cloud_load_bytes=cloud_load,
-                         codec=codec_names[0] if codec_names else None)
+                         codec=codec_names[0] if codec_names else None,
+                         n_chunks=n_chunks, bubble_frac=bubble)
 
 
 @dataclasses.dataclass(frozen=True)
 class MulticutResult:
-    """Joint (S1 × S2 × codec) optimum for a whole bandwidth sweep (arrays
-    of shape ``(B,)``).  ``s2[b] == n`` means the optimum collapsed to the
-    single-cut plan at ``s1[b]`` (no on-edge tail); ``s1 == s2`` is
-    edge-only.  ``codec_idx`` indexes ``codec_names`` (both cuts of a plan
-    share the chosen codec)."""
+    """Joint (S1 × S2 × codec [× chunks]) optimum for a whole bandwidth
+    sweep (arrays of shape ``(B,)``).  ``s2[b] == n`` means the optimum
+    collapsed to the single-cut plan at ``s1[b]`` (no on-edge tail);
+    ``s1 == s2`` is edge-only.  ``codec_idx`` indexes ``codec_names``
+    (both cuts of a plan share the chosen codec).  When the search ran
+    with a chunk axis (``search_streamed``), ``n_chunks[b]`` is the
+    jointly-optimal streaming chunk count for the uplink cut and
+    ``bubble_frac[b]`` the modeled fill/drain fraction of its pipeline
+    (``core/pipeline.py``); both are ``None`` for non-streamed
+    searches."""
     bandwidths_bps: np.ndarray
     s1: np.ndarray
     s2: np.ndarray
@@ -595,16 +682,103 @@ class MulticutResult:
     n: int
     codec_idx: Optional[np.ndarray] = None
     codec_names: Optional[Tuple[str, ...]] = None
+    n_chunks: Optional[np.ndarray] = None
+    bubble_frac: Optional[np.ndarray] = None
 
     def codec_at(self, b: int) -> Optional[str]:
         if self.codec_idx is None:
             return None
         return self.codec_names[int(self.codec_idx[b])]
 
+    def chunks_at(self, b: int) -> int:
+        return int(self.n_chunks[b]) if self.n_chunks is not None else 1
+
     def plan_at(self, b: int) -> PlacementPlan:
         """Materialize bandwidth bin ``b`` as a ``PlacementPlan``."""
         return PlacementPlan.from_window(int(self.s1[b]), int(self.s2[b]),
-                                         self.n, self.codec_at(b))
+                                         self.n, self.codec_at(b),
+                                         self.chunks_at(b))
+
+
+@dataclasses.dataclass(frozen=True)
+class _PlanTensors:
+    """Shared intermediates of the vectorized placement searches: the
+    sequential (non-streamed) totals plus everything the streamed chunk
+    axis needs on top (split encode/decode overheads, compressed wire).
+    Built once per (GraphArrays, bandwidth grid) by ``_plan_tensors`` and
+    consumed by both ``search_multicut`` and ``search_streamed`` — the
+    refactor that keeps the two searches priced by ONE set of
+    expressions."""
+    n_c: int                    # codec-axis length (1 when codec-free)
+    edge_t: np.ndarray          # (S1, S2) edge head+tail seconds
+    cloud_t: np.ndarray         # (S1, S2) cloud window seconds
+    tri: np.ndarray             # (S1, S2) real-window mask (s1 < s2)
+    infeasible: np.ndarray      # (S1, S2) budget / ordering mask
+    up_w: np.ndarray            # (C, S) compressed uplink wire bytes
+    up_enc: np.ndarray          # (C, S) uplink encode seconds (edge side)
+    up_dec: np.ndarray          # (C, S) uplink decode seconds (cloud side)
+    net_up: np.ndarray          # (C, S, B) sequential uplink leg seconds
+    net_dn: np.ndarray          # (C, S, B) sequential downlink leg seconds
+    totals: np.ndarray          # (C, S1, S2, B) sequential plan totals
+
+
+def _plan_tensors(ga: GraphArrays, bw: np.ndarray,
+                  cloud_budget_bytes: Optional[float],
+                  cs: Optional[Sequence[Codec]], rtt_s: float,
+                  down_bw_factor: float, single_cut_only: bool,
+                  edge: DeviceSpec, cloud: DeviceSpec) -> _PlanTensors:
+    """Build the (C, S1, S2, B) sequential-pricing tensors — the exact
+    expressions ``search_multicut`` has always evaluated, factored out so
+    ``search_streamed`` prices its K = 1 plane with bit-identical
+    arithmetic (the ``n_chunks = 1 ≡ non-streamed`` acceptance gate)."""
+    n = ga.n
+    S = n + 1
+    budget = cloud_budget_bytes if cloud_budget_bytes is not None \
+        else float("inf")
+    s1 = np.arange(S)[:, None]
+    s2 = np.arange(S)[None, :]
+    tri = s1 < s2                                   # real cloud window
+    E, C_, L = ga.edge_s, ga.cloud_s, ga.cloud_load_bytes
+    edge_t = E[:, None] + (E[n] - E[None, :])       # (S1, S2)
+    cloud_t = np.where(tri, C_[:, None] - C_[None, :], 0.0)
+    load = np.where(tri, L[:, None] - L[None, :], 0.0)
+    infeasible = (s1 > s2) | (load > budget)
+    if single_cut_only:
+        infeasible = infeasible | (s2 != n)
+
+    # per-(codec, cut) compressed wire + codec compute (C, S); raw when no
+    # codec axis.  Uplink encodes on the edge, downlink on the cloud.
+    # The sequential totals use the COMBINED overhead (rate-sum, the
+    # historical formula); the split enc/dec sides feed the streamed
+    # pipeline stages only.
+    if cs is None:
+        up_w, up_o = ga.wire_bytes[None, :], np.zeros((1, S))
+        up_enc = up_dec = np.zeros((1, S))
+        dn_w, dn_o = ga.down_wire_bytes[None, :], np.zeros((1, S))
+        n_c = 1
+    else:
+        up_w, up_o = _codec_wire_overhead(ga.wire_bytes, n, cs, edge, cloud)
+        _, up_enc, up_dec = _codec_wire_split(ga.wire_bytes, n, cs,
+                                              edge, cloud)
+        dn_w, dn_o = _codec_wire_overhead(ga.down_wire_bytes, n, cs,
+                                          cloud, edge)
+        n_c = len(cs)
+    net_up = np.where(up_w[:, :, None] > 0,
+                      up_w[:, :, None] / bw[None, None, :] + rtt_s, 0.0) \
+        + up_o[:, :, None]                          # (C, S, B)
+    net_dn = np.where(dn_w[:, :, None] > 0,
+                      dn_w[:, :, None] / (bw[None, None, :]
+                                          * down_bw_factor) + rtt_s, 0.0) \
+        + dn_o[:, :, None]
+
+    totals = edge_t[None, :, :, None] + cloud_t[None, :, :, None] \
+        + np.where(tri[None, :, :, None],
+                   net_up[:, :, None, :] + net_dn[:, None, :, :], 0.0)
+    totals = np.where(infeasible[None, :, :, None], np.inf, totals)
+    return _PlanTensors(n_c=n_c, edge_t=edge_t, cloud_t=cloud_t, tri=tri,
+                        infeasible=infeasible, up_w=up_w, up_enc=up_enc,
+                        up_dec=up_dec, net_up=net_up, net_dn=net_dn,
+                        totals=totals)
 
 
 def search_multicut_scalar(graph: Sequence[LayerCost], edge: DeviceSpec,
@@ -672,51 +846,15 @@ def search_multicut(graph: Sequence[LayerCost], edge: DeviceSpec,
     """
     ga = arrays if arrays is not None else graph_arrays(
         graph, edge, cloud, input_bytes=input_bytes)
-    n = ga.n
-    S = n + 1
     bw = np.atleast_1d(np.asarray(bandwidths_bps, dtype=np.float64))
-    budget = cloud_budget_bytes if cloud_budget_bytes is not None \
-        else float("inf")
     cs = resolve_codecs(codecs, max_err)
-
-    s1 = np.arange(S)[:, None]
-    s2 = np.arange(S)[None, :]
-    tri = s1 < s2                                   # real cloud window
-    E, C_, L = ga.edge_s, ga.cloud_s, ga.cloud_load_bytes
-    edge_t = E[:, None] + (E[n] - E[None, :])       # (S1, S2)
-    cloud_t = np.where(tri, C_[:, None] - C_[None, :], 0.0)
-    load = np.where(tri, L[:, None] - L[None, :], 0.0)
-    infeasible = (s1 > s2) | (load > budget)
-    if single_cut_only:
-        infeasible = infeasible | (s2 != n)
-
-    # per-(codec, cut) compressed wire + codec compute (C, S); raw when no
-    # codec axis.  Uplink encodes on the edge, downlink on the cloud.
-    if cs is None:
-        up_w, up_o = ga.wire_bytes[None, :], np.zeros((1, S))
-        dn_w, dn_o = ga.down_wire_bytes[None, :], np.zeros((1, S))
-        n_c = 1
-    else:
-        up_w, up_o = _codec_wire_overhead(ga.wire_bytes, n, cs, edge, cloud)
-        dn_w, dn_o = _codec_wire_overhead(ga.down_wire_bytes, n, cs,
-                                          cloud, edge)
-        n_c = len(cs)
-    net_up = np.where(up_w[:, :, None] > 0,
-                      up_w[:, :, None] / bw[None, None, :] + rtt_s, 0.0) \
-        + up_o[:, :, None]                          # (C, S, B)
-    net_dn = np.where(dn_w[:, :, None] > 0,
-                      dn_w[:, :, None] / (bw[None, None, :]
-                                          * down_bw_factor) + rtt_s, 0.0) \
-        + dn_o[:, :, None]
-
-    totals = edge_t[None, :, :, None] + cloud_t[None, :, :, None] \
-        + np.where(tri[None, :, :, None],
-                   net_up[:, :, None, :] + net_dn[:, None, :, :], 0.0)
-    totals = np.where(infeasible[None, :, :, None], np.inf, totals)
+    pt = _plan_tensors(ga, bw, cloud_budget_bytes, cs, rtt_s,
+                       down_bw_factor, single_cut_only, edge, cloud)
+    n, S = ga.n, ga.n + 1
 
     # flatten (codec, flipped-S1, flipped-S2): first occurrence of the min
     # is the earliest codec at the largest (S1, S2) — the scalar tie-break
-    flat = totals[:, ::-1, ::-1, :].reshape(n_c * S * S, len(bw))
+    flat = pt.totals[:, ::-1, ::-1, :].reshape(pt.n_c * S * S, len(bw))
     idx = np.argmin(flat, axis=0)
     ci = idx // (S * S)
     rem = idx % (S * S)
@@ -726,13 +864,192 @@ def search_multicut(graph: Sequence[LayerCost], edge: DeviceSpec,
     real = s1v < s2v
     return MulticutResult(
         bandwidths_bps=bw, s1=s1v, s2=s2v,
-        total_s=totals[ci, s1v, s2v, cols],
-        edge_s=edge_t[s1v, s2v], cloud_s=cloud_t[s1v, s2v],
-        up_s=np.where(real, net_up[ci, s1v, cols], 0.0),
-        down_s=np.where(real, net_dn[ci, s2v, cols], 0.0),
+        total_s=pt.totals[ci, s1v, s2v, cols],
+        edge_s=pt.edge_t[s1v, s2v], cloud_s=pt.cloud_t[s1v, s2v],
+        up_s=np.where(real, pt.net_up[ci, s1v, cols], 0.0),
+        down_s=np.where(real, pt.net_dn[ci, s2v, cols], 0.0),
         n=n,
         codec_idx=ci if cs is not None else None,
         codec_names=tuple(c.name for c in cs) if cs is not None else None)
+
+
+# ------------------------------------------------------------- streamed
+def _chunk_axis(chunk_grid) -> Tuple[int, ...]:
+    """Normalize a chunk grid: ints, sorted ascending, deduplicated, and
+    ALWAYS containing 1 — the sequential option must stay searchable (it
+    is the only legal choice wherever streaming does not apply)."""
+    ks = sorted({int(k) for k in chunk_grid} | {1})
+    if ks[0] < 1:
+        raise ValueError(f"chunk counts must be >= 1, got {chunk_grid}")
+    return tuple(ks)
+
+
+def search_streamed_scalar(graph: Sequence[LayerCost], edge: DeviceSpec,
+                           cloud: DeviceSpec, bandwidth_bps: float,
+                           cloud_budget_bytes: Optional[float] = None, *,
+                           codecs: Optional[Sequence] = None,
+                           chunk_grid=DEFAULT_CHUNK_GRID,
+                           rtt_s: float = 0.0, input_bytes: float = 0.0,
+                           down_bw_factor: float = 1.0,
+                           arrays: Optional[GraphArrays] = None,
+                           max_err: Optional[float] = None,
+                           single_cut_only: bool = False) -> PlacementEval:
+    """Scalar (S1, S2, codec, n_chunks) oracle: exhaustive scan in the
+    exact tie-break order the vectorized pass reproduces — earliest codec,
+    largest ``S1``, largest ``S2``, then SMALLEST chunk count (so the
+    sequential transfer wins ties over pointless chunking).  ``K = 1``
+    cells are priced by the identical sequential expressions as
+    ``search_multicut_scalar``; ``K > 1`` cells by the chunk-pipeline
+    makespan recurrence (``pipeline.stream_makespan_scalar``).  The
+    property-test oracle for ``search_streamed``."""
+    ga = arrays if arrays is not None else graph_arrays(
+        graph, edge, cloud, input_bytes=input_bytes)
+    n = ga.n
+    budget = cloud_budget_bytes if cloud_budget_bytes is not None \
+        else float("inf")
+    cs = resolve_codecs(codecs, max_err)
+    axis: Sequence[Optional[Codec]] = cs if cs is not None else (None,)
+    ks = _chunk_axis(chunk_grid)
+    best = None
+    for ci, c in enumerate(axis):
+        for s1 in range(n, -1, -1):
+            for s2 in range(n, s1 - 1, -1):
+                if single_cut_only and s2 != n:
+                    continue
+                if ga.window_load_bytes(s1, s2) > budget:
+                    continue
+                e, cl, up, dn = ga.placement_latency(
+                    s1, s2, bandwidth_bps, rtt_s, codec=c,
+                    down_bw_factor=down_bw_factor)
+                wire = float(ga.wire_bytes[s1])
+                for k in ks:
+                    if k == 1:
+                        total, up_k, bub = e + cl + up + dn, up, 0.0
+                    elif s1 < s2 and stream_applies(s1, n, wire):
+                        enc = c.encode_s(wire, edge) if c is not None else 0.0
+                        dec = c.decode_s(wire, cloud) if c is not None \
+                            else 0.0
+                        wire_c = c.wire_bytes(wire) if c is not None else wire
+                        m = stream_makespan_scalar(
+                            enc, wire_c / bandwidth_bps, dec + cl, k, rtt_s)
+                        total = (e + m) + dn
+                        up_k = m - cl
+                        bub = float(stream_bubble_fraction(
+                            enc, wire_c / bandwidth_bps, dec + cl, k, rtt_s))
+                    else:
+                        continue            # streaming not applicable
+                    if best is None or total < best[0]:
+                        best = (total, ci, s1, s2, k, e, cl, up_k, dn, bub)
+    assert best is not None, "no feasible placement (budget < 0?)"
+    total, ci, s1, s2, k, e, cl, up, dn, bub = best
+    name = axis[ci].name if axis[ci] is not None else None
+    plan = PlacementPlan.from_window(s1, s2, n, name, k)
+    return PlacementEval(plan=plan, total_s=total, edge_s=e, cloud_s=cl,
+                         up_s=up, down_s=dn,
+                         cloud_load_bytes=ga.window_load_bytes(s1, s2),
+                         codec=name, n_chunks=k, bubble_frac=bub)
+
+
+def search_streamed(graph: Sequence[LayerCost], edge: DeviceSpec,
+                    cloud: DeviceSpec, bandwidths_bps,
+                    cloud_budget_bytes: Optional[float] = None, *,
+                    codecs: Optional[Sequence] = None,
+                    chunk_grid=DEFAULT_CHUNK_GRID,
+                    rtt_s: float = 0.0, input_bytes: float = 0.0,
+                    down_bw_factor: float = 1.0,
+                    arrays: Optional[GraphArrays] = None,
+                    max_err: Optional[float] = None,
+                    single_cut_only: bool = False) -> MulticutResult:
+    """Vectorized streamed Alg. 1: the joint optimum over every placement
+    window, codec, streaming chunk count and bandwidth in one
+    (C, S1, S2, K, B) numpy pass.
+
+    The ``K = 1`` plane IS the sequential (C, S1, S2, B) tensor
+    ``search_multicut`` evaluates — built by the shared
+    ``_plan_tensors`` helper, so restricting ``chunk_grid=(1,)``
+    reproduces the non-streamed sweep bit-for-bit.  ``K > 1`` planes
+    price the uplink leg as the 3-stage chunk pipeline
+    (``pipeline.stream_makespan`` closed form): the cloud window's
+    prefill overlaps the transfer, each chunk pays its own rtt, and
+    streaming is masked off wherever a codec would not apply
+    (``pipeline.stream_applies``).  Equivalent to
+    ``search_streamed_scalar`` per bandwidth (ties: earliest codec,
+    largest S1, largest S2, smallest chunk count).  Bandwidths in
+    BYTES/s, latencies in seconds."""
+    ga = arrays if arrays is not None else graph_arrays(
+        graph, edge, cloud, input_bytes=input_bytes)
+    n = ga.n
+    S = n + 1
+    bw = np.atleast_1d(np.asarray(bandwidths_bps, dtype=np.float64))
+    cs = resolve_codecs(codecs, max_err)
+    ks = _chunk_axis(chunk_grid)
+    pt = _plan_tensors(ga, bw, cloud_budget_bytes, cs, rtt_s,
+                       down_bw_factor, single_cut_only, edge, cloud)
+
+    # streaming gate: mid-graph uplink cuts with traffic, inside a real
+    # cloud window (mirrors codec_applies + non-empty payload)
+    app = np.zeros(S, dtype=bool)
+    app[1:n] = ga.wire_bytes[1:n] > 0
+    s1i = np.arange(S)[:, None]
+    s2i = np.arange(S)[None, :]
+    stream_ok = (s1i < s2i) & app[:, None] & ~pt.infeasible
+
+    planes = []
+    bub_planes = []
+    for k in ks:
+        if k == 1:
+            planes.append(pt.totals)
+            bub_planes.append(np.zeros_like(pt.totals))
+            continue
+        # per-chunk stages (C, S1, S2, B): a = encode, b = wire + rtt,
+        # c = decode + chunked prefill of the cloud window
+        enc = pt.up_enc[:, :, None, None]
+        wire_t = pt.up_w[:, :, None, None] / bw[None, None, None, :]
+        comp = pt.up_dec[:, :, None, None] + pt.cloud_t[None, :, :, None]
+        m = stream_makespan(enc, wire_t, comp, k, rtt_s)
+        plane = (pt.edge_t[None, :, :, None] + m) + pt.net_dn[:, None, :, :]
+        planes.append(np.where(stream_ok[None, :, :, None], plane, np.inf))
+        bub_planes.append(stream_bubble_fraction(enc, wire_t, comp, k,
+                                                 rtt_s))
+    totals = np.stack(planes, axis=3)               # (C, S1, S2, K, B)
+    bubbles = np.stack(bub_planes, axis=3)
+
+    # flatten (codec, flipped-S1, flipped-S2, K): first occurrence of the
+    # min is the earliest codec at the largest (S1, S2) with the smallest
+    # chunk count — the scalar oracle's tie-break
+    nK = len(ks)
+    n_c = pt.n_c
+    flat = totals[:, ::-1, ::-1, :, :].reshape(n_c * S * S * nK, len(bw))
+    idx = np.argmin(flat, axis=0)
+    ci = idx // (S * S * nK)
+    rem = idx % (S * S * nK)
+    s1v = n - rem // (S * nK)
+    rem2 = rem % (S * nK)
+    s2v = n - rem2 // nK
+    ki = rem2 % nK
+    cols = np.arange(len(bw))
+    kv = np.asarray(ks, dtype=int)[ki]
+    real = s1v < s2v
+    cloud_chosen = pt.cloud_t[s1v, s2v]
+    total_chosen = totals[ci, s1v, s2v, ki, cols]
+    down_chosen = np.where(real, pt.net_dn[ci, s2v, cols], 0.0)
+    # uplink-exposed seconds: sequential leg for K = 1 bins, makespan −
+    # cloud window for streamed bins (back out of the chosen total so the
+    # edge/cloud/up/down decomposition stays additive)
+    up_seq = np.where(real, pt.net_up[ci, s1v, cols], 0.0)
+    up_chosen = np.where(kv == 1, up_seq,
+                         total_chosen - pt.edge_t[s1v, s2v]
+                         - cloud_chosen - down_chosen)
+    return MulticutResult(
+        bandwidths_bps=bw, s1=s1v, s2=s2v,
+        total_s=total_chosen,
+        edge_s=pt.edge_t[s1v, s2v], cloud_s=cloud_chosen,
+        up_s=up_chosen, down_s=down_chosen,
+        n=n,
+        codec_idx=ci if cs is not None else None,
+        codec_names=tuple(c.name for c in cs) if cs is not None else None,
+        n_chunks=kv,
+        bubble_frac=bubbles[ci, s1v, s2v, ki, cols])
 
 
 def sweep_multicut(graphs: Mapping[str, Sequence[LayerCost]],
@@ -745,14 +1062,23 @@ def sweep_multicut(graphs: Mapping[str, Sequence[LayerCost]],
                    input_bytes: Union[float, Mapping[str, float]] = 0.0,
                    down_bw_factor: float = 1.0,
                    max_err: Optional[float] = None,
-                   single_cut_only: bool = False
+                   single_cut_only: bool = False,
+                   chunk_grid=None
                    ) -> Dict[str, MulticutResult]:
     """Fleet-scale multi-cut plan: one padded (M, C, S1, S2, B) pass over
     every registered model — the multi-cut sibling of ``sweep_search``.
     Shallower models are masked (not padded with sentinel costs) so the
     triangular window algebra stays finite.  Per-model budgets /
     input_bytes accept the same scalar-or-mapping forms as
-    ``sweep_search``."""
+    ``sweep_search``.
+
+    ``chunk_grid`` adds the streamed chunk axis: each model runs its own
+    (C, S1, S2, K, B) ``search_streamed`` pass (per-model rather than one
+    padded all-model tensor — the extra K axis makes the padded tensor
+    memory-heavy for no planner-rate win; the per-model passes are still
+    one numpy evaluation each) and every bin carries the joint
+    (S1, S2, codec, n_chunks) optimum.  ``chunk_grid=(1,)`` reproduces
+    the non-streamed sweep bit-for-bit."""
     names = list(graphs)
     if not names:
         raise ValueError("sweep_multicut needs at least one graph")
@@ -766,6 +1092,17 @@ def sweep_multicut(graphs: Mapping[str, Sequence[LayerCost]],
         else:
             v = val if val is not None else default
         return default if v is None else v
+
+    if chunk_grid is not None:
+        return {
+            k: search_streamed(
+                g, edge, cloud, bw,
+                per_model(cloud_budget_bytes, k, None),
+                codecs=codecs, chunk_grid=chunk_grid, rtt_s=rtt_s,
+                input_bytes=per_model(input_bytes, k, 0.0),
+                down_bw_factor=down_bw_factor, max_err=max_err,
+                single_cut_only=single_cut_only)
+            for k, g in graphs.items()}
 
     gas = [graph_arrays(graphs[k], edge, cloud,
                         input_bytes=per_model(input_bytes, k, 0.0))

@@ -18,6 +18,14 @@ Composes the pieces that exist elsewhere in the repo but never meet:
   and 2-cut requests pay their downlink leg + edge-tail compute after the
   cloud batch returns (the downlink rides ``down_bw_factor`` × the uplink
   bandwidth);
+* per-robot **streamed chunk transport** (``core/pipeline.py``,
+  ``streamed=True``): the plan table gains the chunk-count axis
+  (``sweep_multicut(chunk_grid=...)``), each robot carries in-flight
+  chunk state (``n_chunk_reconfigs`` counts reconfigurations), chunked
+  uplinks draw the **per-tick** trace bandwidth chunk-by-chunk
+  (``NetworkSim.wire_trace_s``) while the cloud window's prefill runs
+  concurrently, and ``FleetReport`` reports the residual pipeline
+  ``mean_bubble_frac``;
 * per-robot ``NetworkSim`` bandwidth traces (``core/network.py``), each
   robot on its own seeded link;
 * ``MicroBatcher`` / ``StragglerMitigator`` / ``ElasticPool`` primitives
@@ -63,6 +71,8 @@ from ..core.codec import Codec, resolve_codecs
 from ..core.controller import RoboECC
 from ..core.hardware import A100, ORIN, DeviceSpec
 from ..core.network import NetworkSim, TraceConfig, generate_trace
+from ..core.pipeline import (DEFAULT_CHUNK_GRID, stream_applies,
+                             stream_makespan_scalar)
 from ..core.segmentation import (GraphArrays, graph_arrays, sweep_multicut,
                                  sweep_search)
 from ..core.structure import LayerCost, Workload, build_graph
@@ -111,6 +121,16 @@ class FleetConfig:
     # — the uplink is the constrained direction); 1.0 keeps it symmetric.
     multicut: bool = False
     down_bw_factor: float = 1.0
+    # streamed chunk transport (core/pipeline.py): the plan table gains a
+    # chunk-count axis, robots carry per-request chunk state
+    # (``n_chunk_reconfigs``), and streamed uplinks draw the PER-TICK
+    # trace bandwidth chunk-by-chunk (``NetworkSim.wire_trace_s``) while
+    # the cloud window's prefill overlaps the transfer — the fleet-level
+    # realization of the 3-stage pipeline makespan.  ``chunk_grid`` is
+    # the chunk counts the planner searches; bins where chunking does not
+    # pay plan K = 1, which prices exactly like ``streamed=False``.
+    streamed: bool = False
+    chunk_grid: Sequence[int] = DEFAULT_CHUNK_GRID
     pool_overhead_target: float = 0.026
     batch_overlap: float = 0.8        # fraction of non-max work overlapped
     straggler_sigma: float = 0.2      # lognormal sigma on replica exec time
@@ -150,6 +170,7 @@ class RobotStats:
     p50_s: float
     p95_s: float
     codec: str = "identity"      # codec the robot ended the run on
+    n_chunks: int = 1            # chunk count the robot ended the run on
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,6 +186,11 @@ class FleetReport:
     n_codec_switches: int = 0    # per-robot codec changes across requests
     n_cut_moves: int = 0         # per-robot (S1, S2) changes across requests
     n_multicut_requests: int = 0  # requests served on a real 2-cut placement
+    n_chunk_reconfigs: int = 0   # per-robot chunk-count changes
+    n_streamed_requests: int = 0  # requests served on a chunked (K>1) uplink
+    # mean fill/drain bubble fraction over streamed requests (0 when none):
+    # how much pipeline dead time the chosen chunking left unrecovered
+    mean_bubble_frac: float = 0.0
 
     def summary(self) -> str:
         return (f"{len(self.robots)} robots, {self.n_requests} requests: "
@@ -173,7 +199,8 @@ class FleetReport:
                 f"{self.throughput_rps:.1f} req/s, "
                 f"{self.n_hedged} hedges, {self.n_replans} replans, "
                 f"{self.n_codec_switches} codec switches, "
-                f"{self.n_cut_moves} cut moves")
+                f"{self.n_cut_moves} cut moves, "
+                f"{self.n_chunk_reconfigs} chunk reconfigs")
 
 
 @dataclasses.dataclass
@@ -220,7 +247,27 @@ class FleetSimulator:
         # the NEAREST grid bin in log space (plain searchsorted on the grid
         # would always round up to the plan of a faster link)
         self._bw_mid = np.sqrt(self.bw_grid[:-1] * self.bw_grid[1:])
-        if cfg.multicut:
+        if cfg.streamed:
+            # streamed plan table: per-model (C, S1, S2, K, B) passes —
+            # each bin stores the joint (S1, S2, codec, n_chunks) optimum
+            # (single-cut masked when not multicut); K = 1 bins price
+            # exactly like the non-streamed tables
+            st = sweep_multicut(self.graphs, cfg.edge, cfg.cloud,
+                                self.bw_grid, cfg.cloud_budget_bytes,
+                                rtt_s=cfg.rtt_s,
+                                input_bytes=cfg.workload.input_bytes,
+                                codecs=self.codecs,
+                                down_bw_factor=cfg.down_bw_factor,
+                                single_cut_only=not cfg.multicut,
+                                chunk_grid=cfg.chunk_grid)
+            self.plan: Dict[str, np.ndarray] = {a: st[a].s1 for a in archs}
+            self.plan_s2: Dict[str, np.ndarray] = {
+                a: st[a].s2 for a in archs}
+            self.plan_codec: Dict[str, np.ndarray] = {
+                a: st[a].codec_idx for a in archs}
+            self.plan_chunks: Dict[str, np.ndarray] = {
+                a: st[a].n_chunks for a in archs}
+        elif cfg.multicut:
             # multi-cut plan table: one (M, C, S1, S2, B) pass — each bin
             # stores the joint (S1, S2, codec) optimum; S2 == n collapses
             # the bin to the single-cut plan
@@ -235,6 +282,8 @@ class FleetSimulator:
                 a: mc[a].s2 for a in archs}
             self.plan_codec: Dict[str, np.ndarray] = {
                 a: mc[a].codec_idx for a in archs}
+            self.plan_chunks = {a: np.ones(len(self.bw_grid), dtype=int)
+                                for a in archs}
         else:
             plans = sweep_search(self.graphs, cfg.edge, cfg.cloud,
                                  self.bw_grid, cfg.cloud_budget_bytes,
@@ -246,6 +295,8 @@ class FleetSimulator:
                                        self.arrays[a].n, dtype=int)
                             for a in archs}
             self.plan_codec = {a: plans[a].codec_idx for a in archs}
+            self.plan_chunks = {a: np.ones(len(self.bw_grid), dtype=int)
+                                for a in archs}
 
         # robots start on the codec planned at the nominal bandwidth; the
         # same codec prices the controller's Alg. 1 (so replan() after an
@@ -262,12 +313,18 @@ class FleetSimulator:
                     codec=self.codecs[self.codec_of[i]],
                     graph=self.graphs[a],
                     multicut=cfg.multicut,
-                    down_bw_factor=cfg.down_bw_factor)
+                    down_bw_factor=cfg.down_bw_factor,
+                    streamed=cfg.streamed,
+                    chunk_grid=cfg.chunk_grid,
+                    plan_rtt_s=cfg.rtt_s)
             for i, a in enumerate(self.arch_of)]
         # per-robot effective placement state (for n_cut_moves)
         self.place_of: List[tuple] = [
             (int(self.plan[a][k0]), int(self.plan_s2[a][k0]))
             for a in self.arch_of]
+        # per-robot streaming chunk state (for n_chunk_reconfigs)
+        self.chunks_of: List[int] = [
+            int(self.plan_chunks[a][k0]) for a in self.arch_of]
         self.nets: List[NetworkSim] = [
             NetworkSim(generate_trace(cfg.n_ticks + 1, cfg.trace,
                                       seed=cfg.seed * 100_003 + i),
@@ -296,6 +353,9 @@ class FleetSimulator:
         self.n_codec_switches = 0
         self.n_cut_moves = 0
         self.n_multicut_requests = 0
+        self.n_chunk_reconfigs = 0
+        self.n_streamed_requests = 0
+        self._bubble_sum = 0.0
 
     # ----------------------------------------------------------- elasticity
     def _on_replicas(self, live: List[str]) -> None:
@@ -324,7 +384,11 @@ class FleetSimulator:
         (a robot whose controller planned single-cut has no tail pool, so
         its S2 pins to n).  Also advances the robot's codec state to the
         jointly-planned codec (a pure software switch — no weights move)
-        and counts effective placement changes in ``n_cut_moves``."""
+        and counts effective placement changes in ``n_cut_moves``; in
+        streamed mode likewise the robot's chunk count (another pure
+        software reconfiguration, ``n_chunk_reconfigs``) — bins or
+        clamped placements where streaming does not apply reset it to 1.
+        Returns ``(s1, s2, n_chunks)``."""
         arch = self.arch_of[robot]
         k = int(np.searchsorted(self._bw_mid, bw_bps))
         n = self.arrays[arch].n
@@ -351,11 +415,51 @@ class FleetSimulator:
         if (s1, s2) != self.place_of[robot]:
             self.place_of[robot] = (s1, s2)
             self.n_cut_moves += 1
-        return s1, s2
+        kc = int(self.plan_chunks[arch][k]) if self.cfg.streamed else 1
+        if not (s1 < s2 and stream_applies(
+                s1, n, float(self.arrays[arch].wire_bytes[s1]))):
+            kc = 1          # clamped/degenerate placement: nothing streams
+        if kc != self.chunks_of[robot]:
+            self.chunks_of[robot] = kc
+            self.n_chunk_reconfigs += 1
+        return s1, s2, kc
 
     def _planned_split(self, robot: int, bw_bps: float) -> int:
         """Single-cut view of ``_planned_placement`` (legacy helper)."""
         return self._planned_placement(robot, bw_bps)[0]
+
+    # ------------------------------------------------------------- streaming
+    def _stream_uplink(self, robot: int, arrays: GraphArrays, s1: int,
+                       cdc: Codec, edge_head_s: float, cloud_s: float
+                       ) -> tuple:
+        """Price the robot's chunked uplink against its ACTUAL trace: the
+        transfer starts once the edge head finishes and chunk 1 is
+        encoded, chunks ship back-to-back consuming each tick's bandwidth
+        (``NetworkSim.wire_trace_s`` — a transfer spanning many ticks
+        sees every tick it spans, not one frozen rate), and the cloud
+        window's prefill overlaps arrived chunks.  Returns the
+        transport-exposed uplink seconds (``makespan − cloud_s`` — the
+        replica still executes the full window inside its batch, so the
+        batched-execution machinery composes unchanged) and the pipeline's
+        fill/drain bubble fraction."""
+        net = self.nets[robot]
+        K = self.chunks_of[robot]
+        wire_raw = float(arrays.wire_bytes[s1])
+        enc = cdc.encode_s(wire_raw, self.cfg.edge)
+        dec = cdc.decode_s(wire_raw, self.cfg.cloud)
+        wire_c = cdc.wire_bytes(wire_raw)
+        per_chunk = wire_c / K
+        off = edge_head_s + enc / K
+        wire_times = []
+        for _ in range(K):
+            w = net.wire_trace_s(per_chunk, off)
+            wire_times.append(w)
+            off += w
+        m = stream_makespan_scalar(enc, np.asarray(wire_times),
+                                   dec + cloud_s, K, net.rtt_s)
+        peak = max(enc, sum(wire_times) + K * net.rtt_s, dec + cloud_s)
+        bubble = (m - peak) / m if m > 0 else 0.0
+        return m - cloud_s, bubble
 
     # ------------------------------------------------------------ execution
     def _complete(self, robot: int, issued_s: float, latency_s: float) -> None:
@@ -437,13 +541,13 @@ class FleetSimulator:
             for i in range(cfg.n_robots):
                 net = self.nets[i]
                 bw = net.now_bps
-                net.step()                      # link evolves every tick
                 if now < self.next_free[i]:
+                    net.step()                  # link evolves every tick
                     continue                    # previous request in flight
                 arrays = self.arrays[self.arch_of[i]]
                 down, two_cut = 0.0, False
                 if self._cloud_up:
-                    s1, s2 = self._planned_placement(i, bw)
+                    s1, s2, kc = self._planned_placement(i, bw)
                     cdc = self.codecs[self.codec_of[i]]
                     if s2 < arrays.n:
                         # real 2-cut placement: the edge head runs before
@@ -460,8 +564,19 @@ class FleetSimulator:
                     else:
                         e, c, t = arrays.latency(s1, bw, cfg.rtt_s,
                                                  codec=cdc)
+                    if kc > 1 and c > 0.0:
+                        # streamed uplink: chunk transfers drawn from the
+                        # PER-TICK trace (not one frozen bandwidth) while
+                        # the cloud window prefills arrived chunks; the
+                        # exposed transport time replaces the sequential
+                        # uplink leg
+                        t, bub = self._stream_uplink(i, arrays, s1, cdc,
+                                                     e, c)
+                        self.n_streamed_requests += 1
+                        self._bubble_sum += bub
                 else:
                     e, c, t = float(arrays.edge_s[arrays.n]), 0.0, 0.0
+                net.step()                      # link evolves every tick
                 if c > 0.0 and routable:
                     wid = self._next_wid
                     self._next_wid += 1
@@ -531,7 +646,8 @@ class FleetSimulator:
                 n_requests=len(lats), mean_s=float(xs.mean()),
                 p50_s=float(np.percentile(xs, 50)),
                 p95_s=float(np.percentile(xs, 95)),
-                codec=self.codecs[self.codec_of[i]].name))
+                codec=self.codecs[self.codec_of[i]].name,
+                n_chunks=self.chunks_of[i]))
         allx = np.asarray([x for lats in self.latencies for x in lats]
                           or [0.0])
         sim_s = cfg.n_ticks * cfg.tick_s
@@ -544,7 +660,11 @@ class FleetSimulator:
             n_outage_completions=self.n_outage_completions,
             n_codec_switches=self.n_codec_switches,
             n_cut_moves=self.n_cut_moves,
-            n_multicut_requests=self.n_multicut_requests)
+            n_multicut_requests=self.n_multicut_requests,
+            n_chunk_reconfigs=self.n_chunk_reconfigs,
+            n_streamed_requests=self.n_streamed_requests,
+            mean_bubble_frac=(self._bubble_sum / self.n_streamed_requests
+                              if self.n_streamed_requests else 0.0))
 
 
 def run_fleet(cfg: FleetConfig) -> FleetReport:

@@ -25,17 +25,32 @@ The cut activation is optionally shipped through the int8 or packed-int4
 activation codec (kernels/activation_codec) — 2x / ~3.8x fewer wire bytes.
 The planner-side price of each format (wire factor + encode/decode compute)
 lives in ``core/codec.py``; this module is the matching data plane.
+
+Streamed transport (``core/pipeline.py``): ``chunk_payload`` slices an
+encoded payload into ``n_chunks`` token-axis chunks and ``merge_chunks``
+reassembles them — the data plane of the 3-stage streaming pipeline the
+planner prices as a makespan.  Both codec formats quantize per
+(row, 128-block) with no cross-token state, so slicing the encoded
+payload along the token axis is bit-identical to encoding each chunk
+separately, and ``decode(merge(chunks)) == decode(payload)`` exactly —
+the streamed forward produces bit-identical outputs to the monolithic
+one (``run_streamed``).  Chunk extraction is pure shape logic outside
+every jitted function: the traced edge/cloud forwards never see the
+chunk count, so changing ``n_chunks`` between requests recompiles
+nothing (one trace per function across all chunk counts — the same
+invariant the dynamic cut indices already have).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import warnings
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ..core.pipeline import chunk_sizes
 from ..kernels.activation_codec import ops as codec
 from ..models import transformer as T
 from ..models import vla as V
@@ -169,6 +184,34 @@ def decode_activation(payload: Dict, dtype=jnp.bfloat16) -> jax.Array:
 def payload_bytes(payload: Dict) -> int:
     return sum(v.size * v.dtype.itemsize for k, v in payload.items()
                if hasattr(v, "size"))
+
+
+def chunk_payload(payload: Dict, n_chunks: int) -> List[Dict]:
+    """Slice an encoded cut-activation payload into ``n_chunks`` token-axis
+    chunks (``numpy.array_split`` sizing via ``core.pipeline.chunk_sizes``,
+    so the planner's byte accounting and the wire slices agree).  Every
+    payload array — raw ``x``, int8 ``q``, packed-int4 ``q4`` and the
+    block scales ``s`` — carries tokens on axis 1 with per-row scale
+    groups, so slicing commutes with the codec: shipping these chunks is
+    byte-identical to encoding each token slice separately.  Chunks for
+    ``n_chunks > tokens`` come out empty and merge back harmlessly."""
+    S = next(iter(payload.values())).shape[1]
+    out: List[Dict] = []
+    start = 0
+    for sz in chunk_sizes(S, n_chunks):
+        out.append({k: v[:, start:start + sz] for k, v in payload.items()})
+        start += sz
+    return out
+
+
+def merge_chunks(chunks: List[Dict]) -> Dict:
+    """Reassemble ``chunk_payload`` slices.  ``decode_activation`` of the
+    merged payload is bit-identical to decoding the original payload —
+    concatenation of token slices is exact."""
+    if not chunks:
+        raise ValueError("merge_chunks needs at least one chunk")
+    return {k: jnp.concatenate([c[k] for c in chunks], axis=1)
+            for k in chunks[0]}
 
 
 # ================================================================ LM executor
@@ -310,6 +353,26 @@ class LMSplitExecutor:
         down = self._cloud_mid(params, payload, split, split2)
         logits = self._tail(params, down, split2)
         return logits, {"up": payload, "down": down}
+
+    def run_streamed(self, params, tokens, split: int, n_chunks: int,
+                     split2: Optional[int] = None):
+        """One co-inference with the uplink payload shipped in
+        ``n_chunks`` token-axis chunk slices (``chunk_payload``).  Returns
+        ``(logits, chunks)`` (two-pool: ``(logits, {"up": chunks,
+        "down": payload})`` — the small downlink tail never streams).
+        Bit-identical to ``run``: the jitted forwards are chunk-agnostic
+        (no retrace across chunk counts) and the codec slices exactly."""
+        split_t = jnp.int32(self.plan.clamp(split))
+        payload = self._edge(params, tokens, split_t)
+        chunks = chunk_payload(payload, n_chunks)
+        merged = merge_chunks(chunks)
+        if not self.plan.two_pool:
+            return self._cloud(params, merged, split_t), chunks
+        split2_t = jnp.int32(self.plan.clamp2(
+            split2 if split2 is not None else self.plan.pool2_end))
+        down = self._cloud_mid(params, merged, split_t, split2_t)
+        logits = self._tail(params, down, split2_t)
+        return logits, {"up": chunks, "down": down}
 
 
 # ================================================================ VLA executor
@@ -467,3 +530,23 @@ class VLASplitExecutor:
         down = self._cloud_mid(params, payload, split, split2)
         action = self._tail(params, down, split2, key)
         return action, {"up": payload, "down": down}
+
+    def run_streamed(self, params, patches, tokens, split: int,
+                     n_chunks: int, key: Optional[jax.Array] = None,
+                     split2: Optional[int] = None):
+        """One co-inference with the uplink payload shipped in
+        ``n_chunks`` token-axis chunk slices — the VLA sibling of
+        ``LMSplitExecutor.run_streamed`` (actions bit-identical to
+        ``run``; one trace per function across chunk counts)."""
+        split_t = jnp.int32(self.plan.clamp(split))
+        payload = self._edge(params, patches, tokens, split_t)
+        chunks = chunk_payload(payload, n_chunks)
+        merged = merge_chunks(chunks)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        if not self.plan.two_pool:
+            return self._cloud(params, merged, split_t, key), chunks
+        split2_t = jnp.int32(self.plan.clamp2(
+            split2 if split2 is not None else self.plan.pool2_end))
+        down = self._cloud_mid(params, merged, split_t, split2_t)
+        action = self._tail(params, down, split2_t, key)
+        return action, {"up": chunks, "down": down}

@@ -81,7 +81,9 @@ def test_predictor_beats_trivial():
     trace = generate_trace(3000, TraceConfig(ar_sigma=0.05), seed=3)
     pred, losses = train_predictor(trace[:2500],
                                    PredictorConfig(epochs=150), seed=0)
-    assert losses[-1] < losses[0] * 0.8
+    # single-batch losses are noisy anchors; compare 10-epoch means so the
+    # convergence check doesn't hinge on one lucky/unlucky first batch
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) * 0.8
     # one-step predictions should be in a sane band
     w = pred.cfg.window
     errs, base = [], []

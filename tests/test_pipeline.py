@@ -1,0 +1,530 @@
+"""Streamed split execution: makespan model, planner parity on every
+config, K=1 ≡ non-streamed exactness, chunked adjustment/controller, the
+overlap-aware fleet, and the satellite regressions (trace-integrating
+transfers, vectorized generate_trace)."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.core import (DEFAULT_CHUNK_GRID, NetworkSim, PlacementPlan,
+                        RoboECC, Thresholds, TraceConfig, Workload,
+                        adjust_placement, build_graph, build_pool,
+                        chunk_sizes, evaluate_placement, generate_trace,
+                        search_multicut, search_streamed,
+                        search_streamed_scalar, stream_applies,
+                        stream_bubble_fraction, stream_makespan,
+                        stream_makespan_scalar, sweep_multicut)
+from repro.core.hardware import A100, ORIN
+from repro.runtime.fleet import FleetConfig, run_fleet
+
+W = Workload()
+BWS = np.geomspace(0.1e6, 40e6, 4)
+AXIS = ("identity", "int8", "int4")
+QUOTA = 5.8e9
+DOWN = 8.0
+GRID = (1, 2, 4, 8)
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return {k: build_graph(get_config(k), W) for k in sorted(ARCHS)}
+
+
+# ---------------------------------------------------------- makespan model
+def test_makespan_k1_is_sequential_sum():
+    assert stream_makespan_scalar(0.01, 0.5, 0.2, 1, rtt_s=0.005) == \
+        pytest.approx(0.01 + 0.5 + 0.005 + 0.2, rel=1e-15)
+    assert float(stream_makespan(0.01, 0.5, 0.2, 1, 0.005)) == \
+        pytest.approx(0.01 + 0.5 + 0.005 + 0.2, rel=1e-15)
+
+
+def test_makespan_recurrence_matches_closed_form():
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        enc, wire, comp = rng.uniform(0, 0.5, 3)
+        rtt = rng.uniform(0, 0.02)
+        for k in (1, 2, 3, 4, 8, 16):
+            rec = stream_makespan_scalar(enc, wire, comp, k, rtt)
+            closed = float(stream_makespan(enc, wire, comp, k, rtt))
+            assert rec == pytest.approx(closed, rel=1e-12), (enc, wire,
+                                                             comp, k, rtt)
+
+
+def test_makespan_overlap_bounds():
+    """Pipelining can never beat the bottleneck stage nor lose to the
+    sequential sum (at zero per-chunk overhead)."""
+    enc, wire, comp = 0.01, 0.4, 0.3
+    seq = enc + wire + comp
+    for k in (2, 4, 8):
+        m = stream_makespan_scalar(enc, wire, comp, k, rtt_s=0.0)
+        assert max(enc, wire, comp) <= m <= seq
+    # with per-chunk rtt, heavy chunking of a transfer-bound pipe loses
+    m16 = stream_makespan_scalar(0.0, 0.1, 0.0, 16, rtt_s=0.01)
+    assert m16 > 0.1 + 0.01  # 16 rtts serialize on the bottleneck wire
+
+
+def test_makespan_non_uniform_chunks():
+    """Per-chunk wire times (the fleet's trace-integrated transfers)."""
+    b = [0.1, 0.3, 0.05]
+    m = stream_makespan_scalar(0.03, b, 0.3, 3, rtt_s=0.0)
+    # recurrence by hand: a=0.01, c=0.1
+    t_enc = t_tx = t_out = 0.0
+    for bi in b:
+        t_enc += 0.01
+        t_tx = max(t_enc, t_tx) + bi
+        t_out = max(t_tx, t_out) + 0.1
+    assert m == pytest.approx(t_out, rel=1e-15)
+    with pytest.raises(ValueError):
+        stream_makespan_scalar(0.0, [0.1, 0.2], 0.0, 3)
+
+
+def test_bubble_fraction_shrinks_with_chunks():
+    enc, wire, comp = 0.01, 0.4, 0.3
+    fr = [float(stream_bubble_fraction(enc, wire, comp, k)) for k in
+          (1, 2, 4, 8, 16)]
+    assert all(0.0 <= f < 1.0 for f in fr)
+    assert fr[-1] < fr[0]          # pipelining recovers fill/drain time
+    assert float(stream_bubble_fraction(0.0, 0.0, 0.0, 4)) == 0.0
+
+
+def test_chunk_sizes_partition():
+    for total, k in ((12, 1), (12, 4), (13, 4), (3, 8), (0, 2)):
+        sizes = chunk_sizes(total, k)
+        assert len(sizes) == k and sum(sizes) == total
+        assert max(sizes) - min(sizes) <= 1
+    with pytest.raises(ValueError):
+        chunk_sizes(10, 0)
+
+
+def test_stream_applies_gate():
+    assert stream_applies(3, 10, 100.0)
+    assert not stream_applies(0, 10, 100.0)   # raw observation upload
+    assert not stream_applies(10, 10, 0.0)    # edge-only, no traffic
+    assert not stream_applies(5, 10, 0.0)     # zero-byte cut
+
+
+# ----------------------------------------------------------- oracle parity
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_streamed_vectorized_matches_scalar_oracle_every_config(arch,
+                                                                graphs):
+    """The vectorized (C, S1, S2, K, B) pass must return the identical
+    (cuts, codec, chunks) plan to the exhaustive scalar makespan oracle on
+    every registered config — the streaming acceptance gate."""
+    g = graphs[arch]
+    res = search_streamed(g, ORIN, A100, BWS, QUOTA, codecs=AXIS,
+                          chunk_grid=GRID, rtt_s=0.005,
+                          input_bytes=W.input_bytes, down_bw_factor=DOWN)
+    for j, bw in enumerate(BWS):
+        sc = search_streamed_scalar(
+            g, ORIN, A100, float(bw), QUOTA, codecs=AXIS, chunk_grid=GRID,
+            rtt_s=0.005, input_bytes=W.input_bytes, down_bw_factor=DOWN)
+        assert res.plan_at(j) == sc.plan, (arch, bw)
+        assert int(res.n_chunks[j]) == sc.n_chunks, (arch, bw)
+        assert res.total_s[j] == pytest.approx(sc.total_s, rel=1e-9)
+
+
+def test_streamed_unbudgeted_and_single_cut_parity(graphs):
+    g = graphs["openvla-7b"]
+    for budget in (None, QUOTA):
+        for sco in (False, True):
+            res = search_streamed(g, ORIN, A100, BWS, budget, codecs=AXIS,
+                                  chunk_grid=GRID, rtt_s=0.005,
+                                  input_bytes=W.input_bytes,
+                                  down_bw_factor=DOWN, single_cut_only=sco)
+            for j, bw in enumerate(BWS):
+                sc = search_streamed_scalar(
+                    g, ORIN, A100, float(bw), budget, codecs=AXIS,
+                    chunk_grid=GRID, rtt_s=0.005,
+                    input_bytes=W.input_bytes, down_bw_factor=DOWN,
+                    single_cut_only=sco)
+                assert res.plan_at(j) == sc.plan, (budget, sco, bw)
+                assert res.total_s[j] == pytest.approx(sc.total_s,
+                                                       rel=1e-9)
+
+
+# ------------------------------------------------- K=1 ≡ non-streamed exact
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_chunk_grid_one_reproduces_multicut_exactly(arch, graphs):
+    """chunk_grid=(1,) must reproduce the non-streamed search bit-for-bit
+    — the K=1 plane is literally the shared sequential tensor."""
+    g = graphs[arch]
+    for budget in (None, QUOTA):
+        st = search_streamed(g, ORIN, A100, BWS, budget, codecs=AXIS,
+                             chunk_grid=(1,), rtt_s=0.005,
+                             input_bytes=W.input_bytes, down_bw_factor=DOWN)
+        mc = search_multicut(g, ORIN, A100, BWS, budget, codecs=AXIS,
+                             rtt_s=0.005, input_bytes=W.input_bytes,
+                             down_bw_factor=DOWN)
+        assert np.array_equal(st.s1, mc.s1), (arch, budget)
+        assert np.array_equal(st.s2, mc.s2)
+        assert np.array_equal(st.codec_idx, mc.codec_idx)
+        assert np.array_equal(st.total_s, mc.total_s)  # bitwise
+        assert np.all(st.n_chunks == 1)
+        assert np.all(st.bubble_frac == 0.0)
+
+
+def test_evaluate_placement_streamed_chunks_one_is_exact(graphs):
+    """streamed=True with all cut_chunks == 1 must price identically to
+    streamed=False (K=1 is defined as the sequential path)."""
+    g = graphs["openvla-7b"]
+    n = len(g)
+    for plan in (PlacementPlan.single(28, "int8"),
+                 PlacementPlan.edge_cloud_edge(43, 57, "int4", "int4"),
+                 PlacementPlan.single(n), PlacementPlan.single(0)):
+        a = evaluate_placement(g, plan, ORIN, A100, 1e6, rtt_s=0.005,
+                               input_bytes=W.input_bytes,
+                               down_bw_factor=DOWN, streamed=False)
+        b = evaluate_placement(g, plan, ORIN, A100, 1e6, rtt_s=0.005,
+                               input_bytes=W.input_bytes,
+                               down_bw_factor=DOWN, streamed=True)
+        assert a.total_s == b.total_s and a.up_s == b.up_s
+        assert b.n_chunks == 1 and b.bubble_frac == 0.0
+
+
+def test_evaluate_placement_streamed_matches_oracle_components(graphs):
+    """A streamed plan priced by evaluate_placement must agree with the
+    scalar planner's pricing of the same (cuts, codec, chunks) cell."""
+    g = graphs["openvla-7b"]
+    for bw in (0.3e6, 1e6):
+        sc = search_streamed_scalar(g, ORIN, A100, bw, QUOTA, codecs=AXIS,
+                                    chunk_grid=GRID, rtt_s=0.005,
+                                    input_bytes=W.input_bytes,
+                                    down_bw_factor=DOWN)
+        ev = evaluate_placement(g, sc.plan, ORIN, A100, bw, rtt_s=0.005,
+                                input_bytes=W.input_bytes,
+                                down_bw_factor=DOWN, streamed=True)
+        assert ev.total_s == pytest.approx(sc.total_s, rel=1e-9)
+        assert ev.n_chunks == sc.n_chunks
+        if sc.n_chunks > 1:
+            assert ev.bubble_frac == pytest.approx(sc.bubble_frac,
+                                                   rel=1e-9)
+
+
+def test_evaluate_placement_streamed_overlaps_only_the_fed_window(graphs):
+    """A generalized plan with TWO cloud windows: chunked uplink overlap
+    is bounded by the FIRST window's compute (the one the chunks feed) —
+    later cloud segments cannot prefill data that hasn't been produced
+    yet, so the streamed saving must never exceed window-1 compute plus
+    the hidden codec compute."""
+    from repro.core.hardware import layer_latency
+    g = graphs["openvla-7b"]
+    plan_seq = PlacementPlan(cuts=(30, 40, 50), cut_chunks=(1, 1, 1),
+                             tiers=("edge", "cloud", "edge", "cloud"),
+                             cut_codecs=("int8", None, "int8"))
+    plan_st = PlacementPlan(cuts=(30, 40, 50), cut_chunks=(8, 1, 1),
+                            tiers=("edge", "cloud", "edge", "cloud"),
+                            cut_codecs=("int8", None, "int8"))
+    kw = dict(rtt_s=0.005, input_bytes=W.input_bytes, down_bw_factor=DOWN)
+    seq = evaluate_placement(g, plan_seq, ORIN, A100, 0.2e6, **kw)
+    st = evaluate_placement(g, plan_st, ORIN, A100, 0.2e6, streamed=True,
+                            **kw)
+    window1 = sum(layer_latency(c, A100) for c in g[30:40])
+    assert st.n_chunks == 8
+    saving = seq.total_s - st.total_s
+    assert saving <= window1 + 1e-9        # window 2 never overlaps
+    assert st.total_s >= st.edge_s + st.cloud_s + st.down_s - 1e-12
+
+
+def test_streamed_never_loses_to_sequential_in_the_model(graphs):
+    """The chunk axis is a superset search: its optimum can only match or
+    beat the non-streamed optimum at every bandwidth."""
+    for arch in ("openvla-7b", "cogact-7b", "llama3.2-3b"):
+        g = graphs[arch]
+        st = search_streamed(g, ORIN, A100, BWS, QUOTA, codecs=AXIS,
+                             chunk_grid=GRID, rtt_s=0.005,
+                             input_bytes=W.input_bytes, down_bw_factor=DOWN)
+        mc = search_multicut(g, ORIN, A100, BWS, QUOTA, codecs=AXIS,
+                             rtt_s=0.005, input_bytes=W.input_bytes,
+                             down_bw_factor=DOWN)
+        assert np.all(st.total_s <= mc.total_s + 1e-12), arch
+
+
+def test_chunk_count_drifts_with_bandwidth_and_overchunking_loses(graphs):
+    """The performance-drift story on the chunk axis: the optimal chunk
+    count moves with bandwidth (why the controller replans it from the
+    forecast), and a FIXED over-chunked plan is strictly worse than the
+    sequential transfer on a transfer-bound link — per-chunk rtt is pure
+    overhead once there is nothing left to overlap (the honest negative
+    result recorded in docs/EXPERIMENTS.md §Streaming)."""
+    g = graphs["openvla-7b"]
+    full = DEFAULT_CHUNK_GRID
+    k_lo = int(search_streamed(g, ORIN, A100, [0.5e6], QUOTA, codecs=AXIS,
+                               chunk_grid=full, rtt_s=0.005,
+                               input_bytes=W.input_bytes,
+                               down_bw_factor=DOWN).n_chunks[0])
+    k_hi = int(search_streamed(g, ORIN, A100, [5e6], QUOTA, codecs=AXIS,
+                               chunk_grid=full, rtt_s=0.005,
+                               input_bytes=W.input_bytes,
+                               down_bw_factor=DOWN).n_chunks[0])
+    assert k_lo > 1 and k_hi > 1 and k_lo != k_hi   # the optimum drifts
+
+    def total(k):
+        plan = PlacementPlan.edge_cloud_edge(43, 57, "int4", "int4",
+                                             up_chunks=k)
+        return evaluate_placement(g, plan, ORIN, A100, 0.2e6, rtt_s=0.005,
+                                  input_bytes=W.input_bytes,
+                                  down_bw_factor=DOWN,
+                                  streamed=True).total_s
+    assert total(k_lo) < total(1)        # right chunking wins at 0.2 MB/s
+    assert total(16) > total(1) + 0.02   # over-chunking loses > 20 ms
+
+
+# --------------------------------------------------------- placement plans
+def test_plan_carries_cut_chunks():
+    n = 10
+    p = PlacementPlan.edge_cloud_edge(3, 7, "int8", "int8", up_chunks=4)
+    assert p.cut_chunks == (4, 1)
+    assert p.primary_chunks(n) == 4
+    assert p.normalize(n).cut_chunks == (4, 1)
+    # collapsing the tail keeps the uplink's chunk count
+    assert PlacementPlan.edge_cloud_edge(3, n, "int8", None, 4) \
+        .normalize(n).cut_chunks == (4,)
+    assert PlacementPlan.single(5).cut_chunks == (1,)
+    with pytest.raises(ValueError):
+        PlacementPlan(cuts=(3,), tiers=("edge", "cloud"), cut_chunks=(0,))
+    with pytest.raises(ValueError):
+        PlacementPlan(cuts=(3,), tiers=("edge", "cloud"),
+                      cut_chunks=(2, 2))
+    assert "x4" in p.describe(n)
+
+
+def test_from_window_pins_chunks_on_degenerate_plans():
+    n = 10
+    assert PlacementPlan.from_window(3, 7, n, "int8", 4).cut_chunks == (4, 1)
+    assert PlacementPlan.from_window(3, n, n, None, 4).cut_chunks == (4,)
+    assert PlacementPlan.from_window(n, n, n, None, 4).cut_chunks == (1,)
+    assert PlacementPlan.from_window(0, n, n, None, 4).cut_chunks == (1,)
+
+
+# ------------------------------------------------------- adjustment layer
+def test_adjust_placement_chunk_moves(graphs):
+    g = graphs["openvla-7b"]
+    n = len(g)
+    pool = build_pool(g, 43)
+    pool2 = build_pool(g, 57)
+    cur = PlacementPlan.edge_cloud_edge(43, 57, "int4", "int4", up_chunks=1)
+    thr = Thresholds(high=2e6, low=-2e6)
+    # predicted drop: the joint argmin may answer with chunking — the
+    # slow link hides behind the overlapped cloud-window prefill
+    dn = adjust_placement(g, pool, cur, 0.3e6, 10e6, thr, pool2=pool2,
+                          codecs=AXIS, edge=ORIN, cloud=A100,
+                          down_bw_factor=DOWN, chunk_grid=DEFAULT_CHUNK_GRID,
+                          rtt_s=0.005)
+    assert dn.reason == "down"
+    k_dn = dn.placement.primary_chunks(n)
+    assert k_dn > 1
+    # hold keeps the current plan (and its chunks) untouched
+    hold = adjust_placement(g, pool, dn.placement, 10.05e6, 10e6, thr,
+                            pool2=pool2, codecs=AXIS, edge=ORIN, cloud=A100,
+                            down_bw_factor=DOWN,
+                            chunk_grid=DEFAULT_CHUNK_GRID, rtt_s=0.005)
+    assert hold.reason == "hold"
+    assert hold.placement == dn.placement.normalize(n)
+    # chunk_grid=None reduces exactly to the chunk-free adjuster
+    legacy = adjust_placement(g, pool, cur, 0.3e6, 10e6, thr, pool2=pool2,
+                              codecs=AXIS, edge=ORIN, cloud=A100,
+                              down_bw_factor=DOWN)
+    assert legacy.placement.cut_chunks == \
+        (1,) * legacy.placement.n_cuts
+
+
+def test_adjust_placement_up_sheds_chunks(graphs):
+    """On a predicted rise to a fast link the per-chunk rtt dominates the
+    vanished transfer, so the exploit move sheds chunking."""
+    g = graphs["openvla-7b"]
+    n = len(g)
+    pool = build_pool(g, 43)
+    pool2 = build_pool(g, 57)
+    cur = PlacementPlan.edge_cloud_edge(43, 57, "int4", "int4",
+                                        up_chunks=16)
+    thr = Thresholds(high=2e6, low=-2e6)
+    up = adjust_placement(g, pool, cur, 200e6, 10e6, thr, pool2=pool2,
+                          codecs=AXIS, edge=ORIN, cloud=A100,
+                          down_bw_factor=DOWN, chunk_grid=(1, 16),
+                          rtt_s=0.005)
+    assert up.reason == "up"
+    assert up.placement.primary_chunks(n) < 16
+
+
+# ------------------------------------------------------------- controller
+def test_controller_streamed_end_to_end():
+    cfg = get_config("openvla-7b")
+    ctl = RoboECC(cfg, ORIN, A100, cloud_budget_bytes=QUOTA,
+                  nominal_bw_bps=1e6, codec="int4",
+                  adjust_codecs=["identity", "int8", "int4"],
+                  multicut=True, down_bw_factor=DOWN, streamed=True)
+    n = len(ctl.graph)
+    assert ctl.placement.primary_chunks(n) > 1   # 1 MB/s: chunking pays
+    trace = generate_trace(1500, seed=1)
+    ctl.fit_predictor(trace[:1000])
+    net = NetworkSim(trace[1000:])
+    net.step(40)
+    res = [ctl.tick(net) for _ in range(20)]
+    assert all(r.total_s > 0 for r in res)
+    assert all(r.n_chunks >= 1 for r in res)
+    assert any(r.n_chunks > 1 for r in res)
+
+
+def test_controller_streamed_replans_chunks_from_forecast():
+    """The LSTM forecast drives chunk replanning: on a synthetic cliff
+    from 10 MB/s to 0.2 MB/s the predicted drop re-chunks the uplink."""
+    cfg = get_config("openvla-7b")
+    ctl = RoboECC(cfg, ORIN, A100, cloud_budget_bytes=QUOTA,
+                  nominal_bw_bps=10e6, codec="int4",
+                  adjust_codecs=["int4"], multicut=True,
+                  down_bw_factor=DOWN, streamed=True,
+                  thresholds=Thresholds(high=2e6, low=-2e6))
+    n = len(ctl.graph)
+    trace = np.concatenate([np.full(600, 10e6), np.full(200, 0.2e6)])
+    ctl.fit_predictor(generate_trace(1000, seed=2))
+    net = NetworkSim(trace)
+    net.step(590)
+    ks = [ctl.tick(net).n_chunks for _ in range(60)]
+    # once the window fills with 0.2 MB/s samples the forecast drops and
+    # the ΔNB move answers with more chunks than the 10 MB/s plan used
+    assert max(ks[20:]) > ks[0] or ks[0] > 1
+
+
+def test_controller_streamed_replan_outage_and_recovery():
+    cfg = get_config("openvla-7b")
+    ctl = RoboECC(cfg, ORIN, A100, cloud_budget_bytes=QUOTA,
+                  nominal_bw_bps=1e6, codec="int4", multicut=True,
+                  down_bw_factor=DOWN, streamed=True)
+    n = len(ctl.graph)
+    plan0 = ctl.placement
+    dead = A100.with_eta(1e-12, 1e-12)
+    ctl.replan(cloud=dead, nominal_bw_bps=1e6)
+    assert ctl.split == n and ctl.placement.is_single
+    assert ctl.placement.primary_chunks(n) == 1   # nothing to stream
+    ctl.replan(cloud=A100, cloud_budget_bytes=QUOTA, nominal_bw_bps=1e6)
+    assert ctl.placement == plan0
+
+
+# ------------------------------------------------------------------ fleet
+def _fleet_cfg(bw, streamed, **kw):
+    trace = TraceConfig(mean_bps=bw, bad_bps=max(bw / 4, 0.2e6))
+    return FleetConfig(n_robots=16, archs=("openvla-7b",), n_ticks=200,
+                       n_replicas=3, seed=0, codecs=AXIS, trace=trace,
+                       nominal_bw_bps=bw, cloud_budget_bytes=QUOTA,
+                       multicut=True, down_bw_factor=DOWN,
+                       streamed=streamed, **kw)
+
+
+def test_fleet_streamed_beats_non_streamed_p95_at_low_bandwidth():
+    """The tentpole fleet win: chunked streaming beats sequential
+    transfers on fleet p95 at ≤ 1 MB/s on openvla-7b."""
+    seq = run_fleet(_fleet_cfg(0.2e6, False))
+    st = run_fleet(_fleet_cfg(0.2e6, True))
+    assert st.n_streamed_requests > 0
+    assert st.fleet_p95_s < seq.fleet_p95_s - 0.05   # > 50 ms win
+    seq1 = run_fleet(_fleet_cfg(1e6, False))
+    st1 = run_fleet(_fleet_cfg(1e6, True))
+    assert st1.fleet_p95_s <= seq1.fleet_p95_s + 1e-9
+    assert st1.fleet_p50_s < seq1.fleet_p50_s
+
+
+def test_fleet_streamed_counters_and_determinism():
+    a = run_fleet(_fleet_cfg(0.2e6, True))
+    b = run_fleet(_fleet_cfg(0.2e6, True))
+    assert a.fleet_p95_s == b.fleet_p95_s
+    assert a.n_chunk_reconfigs == b.n_chunk_reconfigs
+    assert 0.0 <= a.mean_bubble_frac < 1.0
+    assert a.n_streamed_requests > 0
+    assert any(r.n_chunks > 1 for r in a.robots)
+    assert "chunk reconfigs" in a.summary()
+
+
+def test_fleet_streamed_chunk_grid_one_matches_non_streamed():
+    """streamed mode restricted to 1 chunk must reproduce the
+    non-streamed fleet — same plans, same latencies."""
+    seq = run_fleet(_fleet_cfg(1e6, False))
+    st = run_fleet(_fleet_cfg(1e6, True, chunk_grid=(1,)))
+    assert st.n_streamed_requests == 0
+    assert st.n_chunk_reconfigs == 0
+    assert st.fleet_p95_s == pytest.approx(seq.fleet_p95_s, rel=1e-12)
+    assert st.fleet_p50_s == pytest.approx(seq.fleet_p50_s, rel=1e-12)
+    assert st.n_requests == seq.n_requests
+
+
+def test_fleet_streamed_single_cut_mode():
+    """streamed works without multicut: single-cut plans with a chunk
+    axis (S2 pinned to n everywhere)."""
+    trace = TraceConfig(mean_bps=0.5e6, bad_bps=0.2e6)
+    cfg = FleetConfig(n_robots=8, archs=("openvla-7b",), n_ticks=120,
+                      n_replicas=2, seed=1, codecs=AXIS, trace=trace,
+                      nominal_bw_bps=0.5e6, cloud_budget_bytes=12.1e9,
+                      multicut=False, streamed=True)
+    rep = run_fleet(cfg)
+    assert rep.n_multicut_requests == 0
+    assert rep.n_streamed_requests > 0
+
+
+# ------------------------------------------------- satellite: NetworkSim
+def test_wire_trace_s_integrates_the_trace():
+    net = NetworkSim(np.array([1e6, 2e6, 4e6, 4e6]), tick_s=0.05,
+                     rtt_s=0.005)
+    assert net.transfer_trace_s(0) == 0.0            # zero bytes free
+    assert net.wire_trace_s(50e3) == pytest.approx(0.05)   # one full tick
+    # spans two ticks at different rates: 50 KB @ 1 MB/s + 100 KB @ 2 MB/s
+    assert net.wire_trace_s(150e3) == pytest.approx(0.10)
+    # mid-tick start: offset lands in tick 1 (2 MB/s)
+    assert net.wire_trace_s(50e3, offset_s=0.05) == pytest.approx(0.025)
+    # the instantaneous price is wrong on a rising link — by design
+    assert net.transfer_s(150e3) > net.transfer_trace_s(150e3)
+    # clamp: past the trace end bandwidth holds at the last sample
+    long = net.wire_trace_s(4e6 * 0.05 * 100)
+    assert long == pytest.approx(0.05 * 2 + (4e6 * 0.05 * 100 - 150e3)
+                                 / 4e6)
+    assert net.transfer_trace_s(100e3) == \
+        pytest.approx(net.wire_trace_s(100e3) + 0.005)
+
+
+def test_wire_trace_s_advances_with_sim_time():
+    net = NetworkSim(np.array([1e6, 4e6, 4e6]), tick_s=0.05, rtt_s=0.0)
+    t0 = net.wire_trace_s(100e3)
+    net.step()
+    t1 = net.wire_trace_s(100e3)       # now starts on the 4 MB/s tick
+    assert t1 < t0
+
+
+# --------------------------------------------- satellite: generate_trace
+def test_generate_trace_seed0_regression():
+    """Pin seed-0 summary stats of the vectorized generator (bulk RNG,
+    event-walked regime chain, convolution AR) — the reproducibility
+    contract across releases."""
+    tr = generate_trace(2000, seed=0)
+    assert tr.shape == (2000,)
+    assert float(tr.mean()) == pytest.approx(8611777.963389495, rel=1e-9)
+    assert float(tr.std()) == pytest.approx(3811575.557226897, rel=1e-9)
+    assert float(tr.min()) == pytest.approx(174870.53832042433, rel=1e-9)
+    assert float(tr.max()) == pytest.approx(17891667.39795722, rel=1e-9)
+    # both regimes visited, floor respected
+    assert 0.05 < float((tr < 3e6).mean()) < 0.5
+    assert tr.min() >= TraceConfig().floor_bps
+
+
+def test_generate_trace_vectorized_matches_scalar_semantics():
+    """The regime chain must equal the historical per-tick recurrence on
+    the SAME uniform stream (the vectorization changed the RNG draw
+    order, not the process law)."""
+    from repro.core.network import _regime_chain
+    rng = np.random.default_rng(11)
+    u = rng.random(4000)
+    for pd, pr in ((0.02, 0.15), (0.0, 0.15), (1.0, 0.0), (0.5, 0.5)):
+        bad = np.zeros(len(u), dtype=bool)
+        prev = False
+        for t in range(len(u)):
+            prev = (u[t] >= pr) if prev else (u[t] < pd)
+            bad[t] = prev
+        assert np.array_equal(_regime_chain(u, pd, pr), bad), (pd, pr)
+
+
+def test_generate_trace_reproducible_and_fast():
+    a = generate_trace(50_000, seed=5)
+    b = generate_trace(50_000, seed=5)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a[:2000], generate_trace(2000, seed=6))
+    import time
+    t0 = time.perf_counter()
+    generate_trace(100_000, seed=9)
+    assert time.perf_counter() - t0 < 2.0   # was ~seconds under the loop

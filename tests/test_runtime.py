@@ -10,7 +10,8 @@ from repro.configs import get_config
 from repro.models import build
 from repro.models.transformer import lm_hidden, lm_logits
 from repro.runtime.partition import (LMSplitExecutor, SplitPlan,
-                                     VLASplitExecutor, payload_bytes)
+                                     VLASplitExecutor, chunk_payload,
+                                     merge_chunks, payload_bytes)
 from repro.runtime.scheduler import (ElasticPool, MicroBatcher, Request,
                                      StragglerMitigator)
 from repro.runtime.serving import greedy_generate
@@ -160,6 +161,81 @@ def test_vla_two_pool_semantic_downlink_slice():
     seq = cfg.n_patches + tokens.shape[1]
     assert payloads["down"]["x"].shape[1] == 1
     assert payload_bytes(payloads["down"]) < payload_bytes(payloads["up"]) / seq * 2
+
+
+def test_chunk_payload_partitions_bytes_and_merges_exactly():
+    """Chunk slices partition the payload bytes exactly and reassemble
+    bit-identically — for raw, int8 and int4 wire formats."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 13, 256))
+    from repro.runtime.partition import decode_activation, encode_activation
+    for codec in ("", "int8", "int4"):
+        payload = encode_activation(x.astype(jnp.bfloat16), codec)
+        for k in (1, 2, 4, 13, 20):          # incl. empty chunks (k > S)
+            chunks = chunk_payload(payload, k)
+            assert len(chunks) == k
+            assert sum(payload_bytes(c) for c in chunks) == \
+                payload_bytes(payload)
+            merged = merge_chunks(chunks)
+            ref = decode_activation(payload)
+            got = decode_activation(merged)
+            assert np.array_equal(np.asarray(ref), np.asarray(got)), \
+                (codec, k)
+
+
+def test_lm_run_streamed_bit_identical_no_retrace(lm_setup):
+    """Streamed transport must change NOTHING numerically — chunked
+    shipping reassembles to the exact payload — and the jitted forwards
+    must not retrace when the chunk count changes between requests."""
+    cfg, model, params, tokens, ref = lm_setup
+    traces = {"edge": 0, "cloud": 0}
+    ex = LMSplitExecutor(cfg, SplitPlan(2, 5, codec="int8"))
+    orig_edge, orig_cloud = ex._edge_fwd, ex._cloud_fwd
+
+    def count(name, fn):
+        def wrapped(*a):
+            traces[name] += 1
+            return fn(*a)
+        return wrapped
+
+    ex._edge = jax.jit(count("edge", orig_edge))
+    ex._cloud = jax.jit(count("cloud", orig_cloud))
+    base, payload = ex.run(params, tokens, 3)
+    for k in (1, 2, 3, 5, 12):
+        logits, chunks = ex.run_streamed(params, tokens, 3, k)
+        assert len(chunks) == k
+        assert np.array_equal(np.asarray(logits), np.asarray(base)), k
+        assert sum(payload_bytes(c) for c in chunks) == \
+            payload_bytes(payload)
+    # one trace per function across the monolithic run AND all chunk
+    # counts — the chunk count never reaches a traced function
+    assert traces == {"edge": 1, "cloud": 1}
+
+
+def test_lm_two_pool_run_streamed_bit_identical(lm_setup):
+    cfg, model, params, tokens, ref = lm_setup
+    ex = LMSplitExecutor(cfg, SplitPlan(1, 3, pool2_start=4, pool2_end=6))
+    base, _ = ex.run(params, tokens, 2, split2=5)
+    logits, payloads = ex.run_streamed(params, tokens, 2, 4, split2=5)
+    assert np.array_equal(np.asarray(logits), np.asarray(base))
+    assert isinstance(payloads["up"], list) and len(payloads["up"]) == 4
+    assert isinstance(payloads["down"], dict)  # small tail never streams
+
+
+def test_vla_run_streamed_bit_identical():
+    cfg = get_config("cogact-7b").reduced().replace(n_layers=6)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(3)
+    patches = jax.random.normal(key, (2, cfg.n_patches, cfg.vit_dim))
+    tokens = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    Lv = cfg.vit_layers
+    ex = VLASplitExecutor(cfg, SplitPlan(Lv + 1, Lv + 3, codec="int8"))
+    base, _ = ex.run(params, patches, tokens, Lv + 2, key)
+    for k in (1, 3, 8):
+        act, chunks = ex.run_streamed(params, patches, tokens, Lv + 2, k,
+                                      key=key)
+        assert np.array_equal(np.asarray(act), np.asarray(base)), k
+        assert len(chunks) == k
 
 
 def test_moe_split_equivalence():

@@ -1,0 +1,152 @@
+"""Direct unit tests for runtime/scheduler.py primitives — previously
+exercised only indirectly through the fleet simulator: StragglerMitigator
+hedge firing + p95 bookkeeping, ElasticPool join/leave → replan
+callbacks, MicroBatcher deadline semantics, LatencyStats windows."""
+import pytest
+
+from repro.runtime.scheduler import (Batch, ElasticPool, LatencyStats,
+                                     MicroBatcher, Request,
+                                     StragglerMitigator)
+
+
+# ------------------------------------------------------------ LatencyStats
+def test_latency_stats_p95_and_ewma():
+    st = LatencyStats(alpha=0.5, window=200)
+    assert st.p95() == float("inf")          # no samples yet: never hedge
+    for v in range(1, 101):
+        st.observe(float(v))
+    # sorted[min(n-1, int(.95*n))] with n=100 -> index 95 -> value 96
+    assert st.p95() == 96.0
+    assert st.mean is not None and 50.0 < st.mean < 101.0
+
+
+def test_latency_stats_sliding_window_forgets():
+    st = LatencyStats(window=4)
+    for v in (10.0, 10.0, 10.0, 10.0, 1.0, 1.0, 1.0, 1.0):
+        st.observe(v)
+    assert st.p95() == 1.0                   # old regime fully evicted
+
+
+# ------------------------------------------------------- StragglerMitigator
+def _seed(mit, replica, value, n=20):
+    for _ in range(n):
+        mit.stats[replica].observe(value)
+
+
+def test_pick_primary_prefers_lowest_mean_and_unknowns():
+    mit = StragglerMitigator()
+    _seed(mit, "slow", 2.0)
+    _seed(mit, "fast", 1.0)
+    assert mit.pick_primary(["slow", "fast"]) == "fast"
+    # an unobserved replica counts as mean 0 — it gets probed first
+    assert mit.pick_primary(["slow", "fast", "new"]) == "new"
+
+
+def test_hedge_fires_past_p95_and_backup_can_win():
+    mit = StragglerMitigator()
+    _seed(mit, "a", 1.0)
+    _seed(mit, "b", 2.0)
+    calls = []
+
+    def exec_fn(r):
+        calls.append(r)
+        return 10.0 if r == "a" else 0.5
+
+    out = mit.run(["a", "b"], exec_fn)
+    assert calls == ["a", "b"]               # hedge actually launched
+    assert out.hedged and out.replica == "a" and out.winner == "b"
+    # hedge fires AT the primary's p95 deadline: latency = deadline + backup
+    assert out.latency_s == pytest.approx(1.0 + 0.5)
+
+
+def test_hedge_does_not_fire_under_deadline():
+    mit = StragglerMitigator()
+    _seed(mit, "a", 1.0)
+    _seed(mit, "b", 1.0)
+    out = mit.run(["a", "b"], lambda r: 0.9)
+    assert not out.hedged and out.winner == "a"
+    assert out.latency_s == pytest.approx(0.9)
+
+
+def test_hedge_primary_still_wins_when_backup_slower():
+    mit = StragglerMitigator()
+    _seed(mit, "a", 1.0)
+    _seed(mit, "b", 1.0)
+    out = mit.run(["a", "b"], lambda r: 1.5 if r == "a" else 3.0)
+    assert out.hedged and out.winner == "a"  # deadline + 3.0 > 1.5
+    assert out.latency_s == pytest.approx(1.5)
+
+
+def test_single_replica_never_hedges():
+    mit = StragglerMitigator()
+    _seed(mit, "a", 1.0)
+    out = mit.run(["a"], lambda r: 50.0)
+    assert not out.hedged and out.latency_s == 50.0
+
+
+def test_run_updates_primary_p95():
+    """Every run feeds the primary's observed latency back into its
+    stats — a straggling replica's deadline adapts upward."""
+    mit = StragglerMitigator()
+    _seed(mit, "a", 1.0, n=4)
+    before = mit.stats["a"].p95()
+    for _ in range(30):
+        mit.run(["a"], lambda r: 5.0)
+    assert mit.stats["a"].p95() > before
+    assert mit.stats["a"].mean > 1.0
+
+
+# ------------------------------------------------------------- ElasticPool
+def test_elastic_pool_join_leave_fires_replan_callbacks():
+    seen = []
+    pool = ElasticPool(on_change=seen.append, timeout_s=1.0)
+    pool.heartbeat("r0", 0.0)
+    pool.heartbeat("r1", 0.0)
+    assert seen == [["r0"], ["r0", "r1"]]    # each join is a transition
+    # r1 goes silent past the timeout -> leave event on next refresh
+    pool.heartbeat("r0", 2.0)
+    assert seen[-1] == ["r0"]
+    assert pool.live(2.0) == ["r0"]
+    # r1 re-joins -> replan callback with the restored set
+    pool.heartbeat("r1", 2.5)
+    assert seen[-1] == ["r0", "r1"]
+
+
+def test_elastic_pool_full_outage_and_recovery():
+    seen = []
+    pool = ElasticPool(on_change=seen.append, timeout_s=0.5)
+    pool.heartbeat("r0", 0.0)
+    assert pool.live(10.0) == []             # timed out -> full outage
+    assert seen[-1] == []
+    pool.heartbeat("r0", 10.1)
+    assert seen[-1] == ["r0"]
+
+
+def test_elastic_pool_no_callback_without_transition():
+    seen = []
+    pool = ElasticPool(on_change=seen.append, timeout_s=1.0)
+    pool.heartbeat("r0", 0.0)
+    pool.heartbeat("r0", 0.1)
+    pool.heartbeat("r0", 0.2)
+    assert seen == [["r0"]]                  # steady state stays silent
+
+
+# ------------------------------------------------------------- MicroBatcher
+def test_microbatcher_deadline_forms_partial_batch():
+    mb = MicroBatcher(batch_size=8, max_wait_s=0.02)
+    mb.add(Request(0, 0.0, 1))
+    mb.add(Request(1, 0.005, 1))
+    assert mb.maybe_form(0.01) is None       # young queue, under size
+    b = mb.maybe_form(0.025)                 # oldest aged past deadline
+    assert isinstance(b, Batch) and len(b.requests) == 2
+    assert mb.maybe_form(0.03) is None       # drained
+
+
+def test_microbatcher_size_trigger_before_deadline():
+    mb = MicroBatcher(batch_size=2, max_wait_s=10.0)
+    mb.add(Request(0, 0.0, 1))
+    mb.add(Request(1, 0.0, 1))
+    mb.add(Request(2, 0.0, 1))
+    b = mb.maybe_form(0.001)
+    assert b is not None and [r.rid for r in b.requests] == [0, 1]
+    assert len(mb.queue) == 1                # remainder rides the next one

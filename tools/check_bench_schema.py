@@ -1,0 +1,136 @@
+#!/usr/bin/env python
+"""BENCH_fleet.json schema check: fail CI when the benchmark payload
+drifts from what downstream consumers (perf-trajectory tooling, the
+EXPERIMENTS.md tables, cross-PR diffs) expect.
+
+The schema is versioned: ``benchmarks/fleet_bench.py`` stamps
+``schema_version`` (currently 2 — the version that added the
+``streamed`` section) and this checker validates
+
+* the top-level sections and their per-entry keys,
+* value sanity (latencies positive and finite, p50 <= p95, counters
+  non-negative, bubble fractions in [0, 1)),
+* the planner section's parity wall-times.
+
+Run next to ``tools/check_doc_links.py`` in the workflow, after the
+fleet smoke emits the file:
+
+    python tools/check_bench_schema.py [--path BENCH_fleet.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import List
+
+EXPECTED_SCHEMA_VERSION = 2
+
+TOP_SECTIONS = ("schema_version", "config", "planner", "fleet", "codecs",
+                "multicut", "streamed")
+CONFIG_KEYS = ("n_robots", "n_ticks", "n_replicas", "seed", "smoke")
+PLANNER_KEYS = ("scalar_s", "vec_s", "cells", "codec_scalar_s",
+                "codec_vec_s", "codec_cells", "multicut_scalar_s",
+                "multicut_vec_s", "multicut_cells", "multicut_speedup")
+FLEET_KEYS = ("p50_s", "p95_s", "throughput_rps", "n_requests",
+              "sim_wall_s")
+CODEC_ENTRY_KEYS = ("p50_s", "p95_s", "throughput_rps")
+MULTICUT_ENTRY_KEYS = ("p50_s", "p95_s", "n_multicut_requests")
+STREAMED_ENTRY_KEYS = ("p50_s", "p95_s", "n_streamed_requests",
+                       "n_chunk_reconfigs", "mean_bubble_frac")
+
+
+def _finite_pos(x) -> bool:
+    return isinstance(x, (int, float)) and math.isfinite(x) and x > 0
+
+
+def check(payload: dict) -> List[str]:
+    errs: List[str] = []
+
+    def need(cond: bool, msg: str) -> None:
+        if not cond:
+            errs.append(msg)
+
+    for k in TOP_SECTIONS:
+        need(k in payload, f"missing top-level section {k!r}")
+    if errs:
+        return errs
+
+    need(payload["schema_version"] == EXPECTED_SCHEMA_VERSION,
+         f"schema_version {payload['schema_version']!r} != expected "
+         f"{EXPECTED_SCHEMA_VERSION}")
+    for k in CONFIG_KEYS:
+        need(k in payload["config"], f"config missing {k!r}")
+    for k in PLANNER_KEYS:
+        need(k in payload["planner"], f"planner missing {k!r}")
+    for k in ("scalar_s", "vec_s", "codec_scalar_s", "codec_vec_s",
+              "multicut_scalar_s", "multicut_vec_s"):
+        if k in payload["planner"]:
+            need(_finite_pos(payload["planner"][k]),
+                 f"planner.{k} must be finite positive")
+    for k in FLEET_KEYS:
+        need(k in payload["fleet"], f"fleet missing {k!r}")
+    fl = payload["fleet"]
+    if all(k in fl for k in ("p50_s", "p95_s")):
+        need(_finite_pos(fl["p50_s"]) and _finite_pos(fl["p95_s"]),
+             "fleet latencies must be finite positive")
+        need(fl["p50_s"] <= fl["p95_s"], "fleet p50 > p95")
+
+    def entries(section: str, keys) -> None:
+        need(isinstance(payload[section], dict) and payload[section],
+             f"section {section!r} must be a non-empty object")
+        for tag, entry in payload.get(section, {}).items():
+            for k in keys:
+                need(k in entry, f"{section}[{tag!r}] missing {k!r}")
+            if "p50_s" in entry and "p95_s" in entry:
+                need(_finite_pos(entry["p50_s"])
+                     and _finite_pos(entry["p95_s"]),
+                     f"{section}[{tag!r}] latencies must be positive")
+                need(entry["p50_s"] <= entry["p95_s"] + 1e-12,
+                     f"{section}[{tag!r}] p50 > p95")
+
+    entries("codecs", CODEC_ENTRY_KEYS)
+    entries("multicut", MULTICUT_ENTRY_KEYS)
+    entries("streamed", STREAMED_ENTRY_KEYS)
+    for tag, entry in payload.get("streamed", {}).items():
+        bf = entry.get("mean_bubble_frac")
+        if bf is not None:
+            need(isinstance(bf, (int, float)) and 0.0 <= bf < 1.0,
+                 f"streamed[{tag!r}].mean_bubble_frac out of [0, 1)")
+        for k in ("n_streamed_requests", "n_chunk_reconfigs"):
+            v = entry.get(k)
+            if v is not None:
+                need(isinstance(v, int) and v >= 0,
+                     f"streamed[{tag!r}].{k} must be a non-negative int")
+    # every operating point must carry BOTH modes for the comparison
+    tags = set(payload.get("streamed", {}))
+    for t in tags:
+        if t.endswith("_seq"):
+            need(t[:-4] + "_stream" in tags, f"streamed {t!r} lacks its "
+                 f"'_stream' counterpart")
+    return errs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--path", default="BENCH_fleet.json")
+    args = ap.parse_args()
+    try:
+        with open(args.path, encoding="utf-8") as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{args.path}: cannot read/parse: {e}", file=sys.stderr)
+        return 1
+    errs = check(payload)
+    for e in errs:
+        print(f"{args.path}: {e}", file=sys.stderr)
+    if errs:
+        return 1
+    print(f"{args.path}: schema v{payload['schema_version']} OK "
+          f"({len(payload['streamed'])} streamed entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

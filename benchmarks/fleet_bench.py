@@ -30,6 +30,14 @@ Four measurements:
    cloud window's prefill, and the report carries chunk reconfigs +
    residual bubble fraction (docs/EXPERIMENTS.md §Streaming).
 
+6. **Queue**: fixed-batch queue-blind (the pre-continuous baseline) vs
+   the continuous-batching cloud tier (``runtime/scheduler.
+   ContinuousBatcher``) vs continuous + queue-aware planning (M/G/1 wait
+   term in the plan tables) on the 1 MB/s OpenVLA multi-cut fleet, plus a
+   tight-KV-budget row that forces preempt/recompute — reporting p50/p95
+   alongside ``n_preemptions`` / ``mean_queue_delay_s`` /
+   ``kv_high_watermark_bytes`` (docs/EXPERIMENTS.md §Queue-aware).
+
 The machine-readable payload written to ``BENCH_fleet.json`` carries a
 ``schema_version`` field validated by ``tools/check_bench_schema.py``
 (wired into CI next to the doc-link check).
@@ -61,12 +69,19 @@ DEFAULT_ARCHS = ("openvla-7b", "cogact-7b", "llama3.2-3b", "glm4-9b")
 CODEC_AXIS = ("identity", "int8", "int4")
 # BENCH_fleet.json schema version — bump when payload sections/keys
 # change; tools/check_bench_schema.py validates the emitted file
-BENCH_SCHEMA_VERSION = 2
+# (v3: added the "queue" section — continuous batching + queue-aware
+# planning)
+BENCH_SCHEMA_VERSION = 3
 # multi-cut scenario: per-robot cloud quota (a shared cloud cannot host
 # every robot's full tail) + asymmetric WAN (downlink 8x the uplink)
 MULTICUT_QUOTA_BYTES = 5.8e9
 MULTICUT_DOWN_FACTOR = 8.0
 MULTICUT_POINTS_BPS = (10e6, 1e6, 0.2e6)
+# queue scenario: the 1 MB/s acceptance point; the tight budget is sized
+# well under the fleet's observed KV high watermark so preempt/recompute
+# actually fires in the comparison row
+QUEUE_BW_BPS = 1e6
+QUEUE_TIGHT_KV_BYTES = 1.5e8
 
 
 # ---------------------------------------------------------------- planner
@@ -262,6 +277,36 @@ def bench_streamed(n_robots: int = 16, n_ticks: int = 200,
     return rows
 
 
+def bench_queue(n_robots: int = 16, n_ticks: int = 200,
+                n_replicas: int = 2, seed: int = 0,
+                bw: float = QUEUE_BW_BPS, arch: str = "openvla-7b"):
+    """Continuous batching + queue-aware planning at the 1 MB/s OpenVLA
+    multi-cut operating point: the fixed-batch queue-blind fleet (the
+    pre-continuous baseline path, bit-identical to earlier releases) vs
+    the ContinuousBatcher tier, queue-blind and queue-aware, plus a
+    tight-KV-budget queue-aware row where preempt/recompute fires.
+    Returns ``[(label, FleetReport)]``."""
+    trace = TraceConfig(mean_bps=bw, bad_bps=max(bw / 4, 0.2e6))
+
+    def cfg(**kw) -> FleetConfig:
+        return FleetConfig(n_robots=n_robots, archs=(arch,),
+                           n_ticks=n_ticks, n_replicas=n_replicas,
+                           seed=seed, codecs=CODEC_AXIS, trace=trace,
+                           nominal_bw_bps=bw,
+                           cloud_budget_bytes=MULTICUT_QUOTA_BYTES,
+                           multicut=True,
+                           down_bw_factor=MULTICUT_DOWN_FACTOR, **kw)
+
+    return [
+        ("micro_blind", run_fleet(cfg())),
+        ("cont_blind", run_fleet(cfg(continuous=True))),
+        ("cont_aware", run_fleet(cfg(continuous=True, queue_aware=True))),
+        ("cont_tightkv", run_fleet(cfg(
+            continuous=True, queue_aware=True,
+            kv_budget_bytes=QUEUE_TIGHT_KV_BYTES))),
+    ]
+
+
 def print_report(rep: FleetReport) -> None:
     print(f"\n{'robot':9s} {'arch':22s} {'n':>4s} {'p50 ms':>8s} "
           f"{'p95 ms':>8s} {'mean ms':>8s}")
@@ -288,7 +333,8 @@ def run_with_json(quiet: bool = False, n_robots: int = 24,
         n_robots, n_ticks, n_replicas = 6, 40, 2
     payload: Dict = {"schema_version": BENCH_SCHEMA_VERSION,
                      "planner": {}, "fleet": {}, "codecs": {},
-                     "multicut": {}, "streamed": {}, "config": {
+                     "multicut": {}, "streamed": {}, "queue": {},
+                     "config": {
                          "n_robots": n_robots, "n_ticks": n_ticks,
                          "n_replicas": n_replicas, "seed": seed,
                          "smoke": smoke}}
@@ -368,6 +414,18 @@ def run_with_json(quiet: bool = False, n_robots: int = 24,
             "n_streamed_requests": srep.n_streamed_requests,
             "n_chunk_reconfigs": srep.n_chunk_reconfigs,
             "mean_bubble_frac": srep.mean_bubble_frac}
+    q_rows = bench_queue(n_robots=8 if smoke else 16,
+                         n_ticks=60 if smoke else 200,
+                         n_replicas=n_replicas, seed=seed)
+    for label, qrep in q_rows:
+        lines.append(f"fleet_queue_{label}_p95,"
+                     f"{qrep.fleet_p95_s * 1e6:.0f},"
+                     f"{qrep.n_preemptions}preempt")
+        payload["queue"][label] = {
+            "p50_s": qrep.fleet_p50_s, "p95_s": qrep.fleet_p95_s,
+            "n_preemptions": qrep.n_preemptions,
+            "mean_queue_delay_s": qrep.mean_queue_delay_s,
+            "kv_high_watermark_bytes": qrep.kv_high_watermark_bytes}
     if not quiet:
         print(f"planner: scalar {scalar_s * 1e3:.1f} ms vs vectorized "
               f"{vec_s * 1e3:.2f} ms over {cells} (model × bandwidth) cells "
@@ -413,6 +471,16 @@ def run_with_json(quiet: bool = False, n_robots: int = 24,
                   f"{(q.fleet_p95_s - s.fleet_p95_s) * 1e3:6.1f}ms "
                   f"{s.n_streamed_requests:8d} {s.n_chunk_reconfigs:7d} "
                   f"{s.mean_bubble_frac:7.3f}")
+        print(f"\ncontinuous batching + queue-aware planning (openvla-7b "
+              f"multi-cut fleet at {QUEUE_BW_BPS / 1e6:g} MB/s):")
+        print(f"{'mode':13s} {'p50 ms':>8s} {'p95 ms':>8s} {'reqs':>5s} "
+              f"{'preempt':>8s} {'qdelay ms':>10s} {'kv hw MB':>9s}")
+        for label, qrep in q_rows:
+            print(f"{label:13s} {qrep.fleet_p50_s * 1e3:8.1f} "
+                  f"{qrep.fleet_p95_s * 1e3:8.1f} {qrep.n_requests:5d} "
+                  f"{qrep.n_preemptions:8d} "
+                  f"{qrep.mean_queue_delay_s * 1e3:10.2f} "
+                  f"{qrep.kv_high_watermark_bytes / 1e6:9.1f}")
     return lines, payload
 
 

@@ -42,7 +42,8 @@ from .segmentation import (GraphArrays, MulticutResult, PlacementEval,
                            codec_applies, cut_bytes, downlink_bytes,
                            evaluate_placement, evaluate_split,
                            exhaustive_best, fixed_split, graph_arrays,
-                           net_time, search, search_joint, search_multicut,
+                           net_time, queue_delay_s, search, search_joint,
+                           search_multicut,
                            search_multicut_scalar, search_streamed,
                            search_streamed_scalar, search_vec,
                            sweep_multicut, sweep_search)
@@ -67,7 +68,8 @@ __all__ = [
     "GraphArrays", "MulticutResult", "PlacementEval", "SegmentationResult",
     "VecSearchResult", "codec_applies", "cut_bytes", "downlink_bytes",
     "evaluate_placement", "evaluate_split", "exhaustive_best", "fixed_split",
-    "graph_arrays", "net_time", "search", "search_joint", "search_multicut",
+    "graph_arrays", "net_time", "queue_delay_s", "search", "search_joint",
+    "search_multicut",
     "search_multicut_scalar", "search_streamed", "search_streamed_scalar",
     "search_vec", "sweep_multicut", "sweep_search",
     "LayerCost", "Workload", "build_graph", "total_flops",

@@ -45,7 +45,8 @@ from .hardware import DeviceSpec, layer_latency
 from .pipeline import stream_applies, stream_makespan_scalar
 from .placement import PlacementPlan
 from .pool import Pool
-from .segmentation import codec_applies, cut_bytes, downlink_bytes, net_time
+from .segmentation import (codec_applies, cut_bytes, downlink_bytes,
+                           net_time, queue_delay_s)
 from .structure import LayerCost
 
 
@@ -133,7 +134,9 @@ def adjust_placement(graph: Sequence[LayerCost], pool: Pool,
                      down_bw_factor: float = 1.0,
                      max_err: Optional[float] = None,
                      chunk_grid: Optional[Sequence[int]] = None,
-                     rtt_s: float = 0.0) -> PlacementDecision:
+                     rtt_s: float = 0.0, queue_hz: float = 0.0,
+                     queue_cv2: float = 1.0,
+                     queue_service_scale: float = 1.0) -> PlacementDecision:
     """Multi-cut ΔNB adjustment: the same up/down/hold policy as
     ``adjust``, generalized to move **either cut** of an edge→cloud→edge
     placement (uplink cut inside ``pool``, downlink cut inside ``pool2``).
@@ -162,6 +165,14 @@ def adjust_placement(graph: Sequence[LayerCost], pool: Pool,
     where ``n_chunks = 1`` always wins (per-chunk rtt with nothing to
     overlap).
 
+    ``queue_hz > 0`` makes the "down" move queue-aware: every candidate
+    pays the M/G/1 expected wait of its cloud window
+    (``segmentation.queue_delay_s`` — same parameters the planner uses),
+    so a congested cloud biases the retreat toward shallower windows.
+    The "up" move stays the paper's greedy max-volume exploit (it never
+    priced absolute cost, so it gains no queue term).  ``queue_hz = 0``
+    (default) reproduces the queue-blind move set bit-for-bit.
+
     With ``pool2=None``, ``chunk_grid=None`` and a single-cut ``current``
     this reduces exactly to ``adjust`` (the K=1 special case); the
     ``AdjustmentDecision`` split is ``placement.primary_cut(n)``."""
@@ -176,8 +187,9 @@ def adjust_placement(graph: Sequence[LayerCost], pool: Pool,
     ks = sorted({int(k) for k in chunk_grid} | {1}) \
         if chunk_grid is not None else [1]
     # suffix cloud-latency cumsum: O(1) window compute for chunk pricing
+    # and for the queue-aware down move's M/G/1 wait
     csum = None
-    if cloud is not None and len(ks) > 1:
+    if cloud is not None and (len(ks) > 1 or queue_hz > 0):
         lat = np.array([layer_latency(c, cloud) for c in graph])
         csum = np.concatenate([np.cumsum(lat[::-1])[::-1], [0.0]])
 
@@ -267,11 +279,18 @@ def adjust_placement(graph: Sequence[LayerCost], pool: Pool,
                                   applicable=codec_applies(s2, n),
                                   edge=cloud, cloud=edge) \
                         if s1 < s2 < n else 0.0
+                    # queue-aware retreat: transport-equivalent seconds
+                    # also pay the window's expected M/G/1 wait (0 when
+                    # queue_hz == 0 — the historical objective exactly)
+                    wq = queue_delay_s(window_cloud_s(s1, s2), queue_hz,
+                                       cv2=queue_cv2,
+                                       service_scale=queue_service_scale) \
+                        if queue_hz > 0 else 0.0
                     for k in ks:
                         up = up_leg(s1, s2, c, k, nb_pred_bps)
                         if up is None:
                             continue
-                        t = up + dn
+                        t = up + dn + wq
                         if best is None or t < best[0]:
                             best = (t, ci, s1, s2, k)
         if best is None:

@@ -87,7 +87,15 @@ class RoboECC:
     performance-drift story replayed on a new axis.  ``plan_rtt_s`` is
     the per-chunk rtt the streamed planner and adjuster price (chunking
     is free at rtt 0, so it must be the deployment's real rtt);
-    ``chunk_grid`` the chunk counts searched."""
+    ``chunk_grid`` the chunk counts searched.
+
+    ``queue_hz > 0`` makes planning queue-aware: Alg. 1 (and the
+    multi-cut / streamed scans, and the ΔNB down move) add the M/G/1
+    expected wait ``segmentation.queue_delay_s`` for each candidate's
+    cloud service time, so the controller retreats toward the edge when
+    the shared cloud replica is congested.  The fleet simulator
+    estimates the per-replica rate from its own closed loop
+    (``FleetConfig(queue_aware=True)``)."""
 
     def __init__(self, cfg: ModelConfig, edge: DeviceSpec, cloud: DeviceSpec,
                  *, workload: Workload = Workload(),
@@ -103,7 +111,10 @@ class RoboECC:
                  down_bw_factor: float = 1.0,
                  streamed: bool = False,
                  chunk_grid=DEFAULT_CHUNK_GRID,
-                 plan_rtt_s: float = 0.005):
+                 plan_rtt_s: float = 0.005,
+                 queue_hz: float = 0.0,
+                 queue_cv2: float = 1.0,
+                 queue_service_scale: float = 1.0):
         self.cfg = cfg
         self.edge_dev, self.cloud_dev = edge, cloud
         self.workload = workload
@@ -121,10 +132,18 @@ class RoboECC:
         self.streamed = streamed
         self.chunk_grid = tuple(chunk_grid)
         self.plan_rtt_s = plan_rtt_s
+        # expected per-replica arrival rate (+ M/G/1 shape parameters)
+        # the planner and adjuster price cloud congestion with —
+        # queue_hz = 0 keeps every decision queue-blind (bit-for-bit)
+        self.queue_hz = queue_hz
+        self.queue_cv2 = queue_cv2
+        self.queue_service_scale = queue_service_scale
         self.seg: SegmentationResult = search(
             self.graph, edge, cloud, nominal_bw_bps,
             cloud_budget_bytes=cloud_budget_bytes,
-            input_bytes=workload.input_bytes, codec=self.codec)
+            input_bytes=workload.input_bytes, codec=self.codec,
+            queue_hz=queue_hz, queue_cv2=queue_cv2,
+            queue_service_scale=queue_service_scale)
         self.placement: PlacementPlan = self._plan_placement(nominal_bw_bps,
                                                              cloud_budget_bytes)
         self._rebuild_pools()
@@ -147,7 +166,9 @@ class RoboECC:
                 chunk_grid=self.chunk_grid, rtt_s=self.plan_rtt_s,
                 input_bytes=self.workload.input_bytes,
                 down_bw_factor=self.down_bw_factor,
-                single_cut_only=not self.multicut)
+                single_cut_only=not self.multicut,
+                queue_hz=self.queue_hz, queue_cv2=self.queue_cv2,
+                queue_service_scale=self.queue_service_scale)
             return st.plan_at(0)
         if not self.multicut:
             return PlacementPlan.single(
@@ -157,7 +178,9 @@ class RoboECC:
             cloud_budget_bytes,
             codecs=[self.codec] if self.codec is not None else None,
             rtt_s=0.0, input_bytes=self.workload.input_bytes,
-            down_bw_factor=self.down_bw_factor)
+            down_bw_factor=self.down_bw_factor,
+            queue_hz=self.queue_hz, queue_cv2=self.queue_cv2,
+            queue_service_scale=self.queue_service_scale)
         return mc.plan_at(0)
 
     def _rebuild_pools(self) -> None:
@@ -229,7 +252,9 @@ class RoboECC:
                     edge=self.edge_dev, cloud=self.cloud_dev,
                     down_bw_factor=self.down_bw_factor,
                     chunk_grid=self.chunk_grid if self.streamed else None,
-                    rtt_s=self.plan_rtt_s if self.streamed else 0.0)
+                    rtt_s=self.plan_rtt_s if self.streamed else 0.0,
+                    queue_hz=self.queue_hz, queue_cv2=self.queue_cv2,
+                    queue_service_scale=self.queue_service_scale)
                 self.placement = decision.placement
                 self.split = self.placement.primary_cut(len(self.graph))
             else:
@@ -290,7 +315,9 @@ class RoboECC:
         self.seg = search(self.graph, self.edge_dev, self.cloud_dev,
                           nominal_bw_bps, cloud_budget_bytes=cloud_budget_bytes,
                           input_bytes=self.workload.input_bytes,
-                          codec=self.codec)
+                          codec=self.codec, queue_hz=self.queue_hz,
+                          queue_cv2=self.queue_cv2,
+                          queue_service_scale=self.queue_service_scale)
         self.placement = self._plan_placement(nominal_bw_bps,
                                               cloud_budget_bytes)
         self._rebuild_pools()

@@ -51,6 +51,17 @@ window), so those cells price a *makespan* instead of a sum.  The
 the smallest chunk count, so chunking only appears where it strictly
 pays.  ``sweep_multicut(chunk_grid=...)`` extends the fleet plan table
 with the same axis.
+
+Queue-aware planning (``queue_hz=``): every search accepts an expected
+per-replica arrival rate and adds an M/G/1 expected-wait term
+``queue_delay_s`` for the cloud-side service time of each candidate —
+Alg. 1 stops assuming an idle cloud, so under congestion the optimum
+retreats toward the edge exactly where the fleet's replicas queue.  The
+term is a *planning prior*, not a realized latency: ``total_s`` includes
+it but the ``edge_s``/``cloud_s``/``net_s`` decomposition stays
+physical, so components no longer sum to ``total_s`` when
+``queue_hz > 0``.  ``queue_hz = 0`` (the default) adds nothing and
+reproduces the queue-blind plans bit-for-bit (docs/DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -127,6 +138,32 @@ def net_time(wire_raw: float, bandwidth_bps: float, *, rtt_s: float = 0.0,
                        rtt_s=rtt_s)
 
 
+def queue_delay_s(service_s, arrival_hz: float, *, cv2: float = 1.0,
+                  service_scale: float = 1.0):
+    """Expected M/G/1 queueing wait (Pollaczek–Khinchine) for a cloud
+    window whose solo service time is ``service_s`` seconds:
+
+        W = λ·S²·(1 + cv²) / (2·(1 − ρ)),   ρ = λ·S
+
+    with ``λ = arrival_hz`` (requests/s reaching ONE replica), ``cv²``
+    the squared coefficient of variation of service times (1 ≡ M/M/1;
+    the fleet's lognormal straggler noise puts it slightly above), and
+    ``S = service_s · service_scale`` (``service_scale`` folds in the
+    mean batching efficiency ``eff(k)/k`` of the continuous batcher).
+    ``ρ ≥ 1`` → ``inf`` (saturated: the planner retreats toward the
+    edge, whose wait is 0 by construction); ``S ≤ 0`` → 0.  Elementwise
+    over numpy arrays; scalar in → float out."""
+    S = np.asarray(service_s, dtype=np.float64) * service_scale
+    if arrival_hz <= 0:
+        w = np.zeros_like(S)
+    else:
+        rho = arrival_hz * S
+        with np.errstate(divide="ignore", invalid="ignore"):
+            w = arrival_hz * S * S * (1.0 + cv2) / (2.0 * (1.0 - rho))
+        w = np.where(S <= 0, 0.0, np.where(rho >= 1.0, np.inf, w))
+    return float(w) if np.ndim(service_s) == 0 else w
+
+
 def evaluate_split(graph: Sequence[LayerCost], split: int,
                    edge: DeviceSpec, cloud: DeviceSpec,
                    bandwidth_bps: float, *, rtt_s: float = 0.0,
@@ -144,11 +181,17 @@ def evaluate_split(graph: Sequence[LayerCost], split: int,
 def search(graph: Sequence[LayerCost], edge: DeviceSpec, cloud: DeviceSpec,
            bandwidth_bps: float, cloud_budget_bytes: Optional[float] = None,
            *, rtt_s: float = 0.0, input_bytes: float = 0.0,
-           codec: Optional[Codec] = None) -> SegmentationResult:
+           codec: Optional[Codec] = None, queue_hz: float = 0.0,
+           queue_cv2: float = 1.0,
+           queue_service_scale: float = 1.0) -> SegmentationResult:
     """Alg. 1: scan S from n (edge-only) towards 0 while the cloud-side load
     fits the budget; keep the latency-optimal feasible split.  ``codec``
     prices mid-graph transport through ``core/codec.py`` (encode + wire +
-    decode), so compression participates in WHERE the cut lands."""
+    decode), so compression participates in WHERE the cut lands.
+    ``queue_hz > 0`` adds the M/G/1 expected wait ``queue_delay_s`` of
+    each candidate's cloud service time to its total (module docstring:
+    the wait is in ``total_s``/``latencies`` but not in the physical
+    component decomposition)."""
     codec = get_codec(codec)
     n = len(graph)
     budget = cloud_budget_bytes if cloud_budget_bytes is not None else float("inf")
@@ -165,6 +208,9 @@ def search(graph: Sequence[LayerCost], edge: DeviceSpec, cloud: DeviceSpec,
                                  rtt_s=rtt_s, input_bytes=input_bytes,
                                  codec=codec)
         total = e + c + t
+        if queue_hz > 0:
+            total += queue_delay_s(c, queue_hz, cv2=queue_cv2,
+                                   service_scale=queue_service_scale)
         feasible.append(s)
         latencies.append(total)
         if best is None or total < best[1]:
@@ -183,7 +229,9 @@ def search_joint(graph: Sequence[LayerCost], edge: DeviceSpec,
                  cloud: DeviceSpec, bandwidth_bps: float,
                  codecs: Sequence, cloud_budget_bytes: Optional[float] = None,
                  *, rtt_s: float = 0.0, input_bytes: float = 0.0,
-                 max_err: Optional[float] = None) -> SegmentationResult:
+                 max_err: Optional[float] = None, queue_hz: float = 0.0,
+                 queue_cv2: float = 1.0,
+                 queue_service_scale: float = 1.0) -> SegmentationResult:
     """Scalar joint (split × codec) oracle: run Alg. 1 once per codec (in
     list order) and keep the first strict latency winner — the tie-break
     the vectorized codec axis reproduces (earliest codec in the list,
@@ -193,7 +241,9 @@ def search_joint(graph: Sequence[LayerCost], edge: DeviceSpec,
     best: Optional[SegmentationResult] = None
     for c in cs:
         seg = search(graph, edge, cloud, bandwidth_bps, cloud_budget_bytes,
-                     rtt_s=rtt_s, input_bytes=input_bytes, codec=c)
+                     rtt_s=rtt_s, input_bytes=input_bytes, codec=c,
+                     queue_hz=queue_hz, queue_cv2=queue_cv2,
+                     queue_service_scale=queue_service_scale)
         if best is None or seg.total_s < best.total_s:
             best = seg
     return best
@@ -379,7 +429,9 @@ def search_vec(graph: Sequence[LayerCost], edge: DeviceSpec,
                rtt_s: float = 0.0, input_bytes: float = 0.0,
                arrays: Optional[GraphArrays] = None,
                codecs: Optional[Sequence] = None,
-               max_err: Optional[float] = None) -> VecSearchResult:
+               max_err: Optional[float] = None, queue_hz: float = 0.0,
+               queue_cv2: float = 1.0,
+               queue_service_scale: float = 1.0) -> VecSearchResult:
     """Vectorized Alg. 1: optimal split for every bandwidth in one pass.
 
     Equivalent to calling ``search`` once per bandwidth (the scalar path is
@@ -397,7 +449,9 @@ def search_vec(graph: Sequence[LayerCost], edge: DeviceSpec,
     ``search_joint`` per bandwidth: latency ties break toward the earliest
     codec in the list, then the largest split within that codec.
     ``max_err`` drops codecs whose ``err_bound`` exceeds it before the
-    search.
+    search.  ``queue_hz > 0`` adds ``queue_delay_s`` of each split's
+    cloud service time to the totals (equivalent to the scalar
+    ``search``/``search_joint`` with the same rate).
     """
     ga = arrays if arrays is not None else graph_arrays(
         graph, edge, cloud, input_bytes=input_bytes)
@@ -406,10 +460,15 @@ def search_vec(graph: Sequence[LayerCost], edge: DeviceSpec,
         else float("inf")
     cs = resolve_codecs(codecs, max_err)
     cols = np.arange(len(bw))
+    qd = queue_delay_s(ga.cloud_s, queue_hz, cv2=queue_cv2,
+                       service_scale=queue_service_scale) \
+        if queue_hz > 0 else None                    # (n+1,)
     if cs is None:
         net = np.where(ga.wire_bytes[:, None] > 0,
                        ga.wire_bytes[:, None] / bw[None, :] + rtt_s, 0.0)
         totals = ga.edge_s[:, None] + ga.cloud_s[:, None] + net   # (n+1, B)
+        if qd is not None:
+            totals = totals + qd[:, None]
         totals = np.where((ga.cloud_load_bytes > budget)[:, None],
                           np.inf, totals)
         # argmin over flipped split axis -> largest split wins ties
@@ -424,6 +483,8 @@ def search_vec(graph: Sequence[LayerCost], edge: DeviceSpec,
                    wire_c[:, :, None] / bw[None, None, :] + rtt_s, 0.0) \
         + ovh[:, :, None]                                      # (C, n+1, B)
     totals = ga.edge_s[None, :, None] + ga.cloud_s[None, :, None] + net
+    if qd is not None:
+        totals = totals + qd[None, :, None]
     totals = np.where((ga.cloud_load_bytes > budget)[None, :, None],
                       np.inf, totals)
     # flatten (codec, flipped-split): first occurrence of the min is the
@@ -448,7 +509,8 @@ def sweep_search(graphs: Mapping[str, Sequence[LayerCost]], edge: DeviceSpec,
                  *, rtt_s: float = 0.0,
                  input_bytes: Union[float, Mapping[str, float]] = 0.0,
                  codecs: Optional[Sequence] = None,
-                 max_err: Optional[float] = None
+                 max_err: Optional[float] = None, queue_hz: float = 0.0,
+                 queue_cv2: float = 1.0, queue_service_scale: float = 1.0
                  ) -> Dict[str, VecSearchResult]:
     """Fleet-scale plan: Alg. 1 over (model × split × bandwidth × codec) in
     ONE padded numpy pass.
@@ -497,11 +559,18 @@ def sweep_search(graphs: Mapping[str, Sequence[LayerCost]], edge: DeviceSpec,
                         for k in names], dtype=np.float64)
     infeasible = (L > budgets[:, None])                        # (M, S)
     cols = np.arange(len(bw))
+    # queue prior on the padded cloud-service matrix: padded cells carry
+    # cloud_s = 0 so their wait is 0 (and their edge_s = inf anyway)
+    qd = queue_delay_s(C, queue_hz, cv2=queue_cv2,
+                       service_scale=queue_service_scale) \
+        if queue_hz > 0 else None                              # (M, S)
 
     if cs is None:
         net = np.where(W[:, :, None] > 0, W[:, :, None] / bw[None, None, :]
                        + rtt_s, 0.0)
         totals = E[:, :, None] + C[:, :, None] + net           # (M, S, B)
+        if qd is not None:
+            totals = totals + qd[:, :, None]
         totals = np.where(infeasible[:, :, None], np.inf, totals)
         splits = (S - 1) - np.argmin(totals[:, ::-1, :], axis=1)  # (M, B)
         out: Dict[str, VecSearchResult] = {}
@@ -523,6 +592,8 @@ def sweep_search(graphs: Mapping[str, Sequence[LayerCost]], edge: DeviceSpec,
                    wire_c[..., None] / bw[None, None, None, :] + rtt_s, 0.0) \
         + ovh[..., None]                                    # (M, C, S, B)
     totals = E[:, None, :, None] + C[:, None, :, None] + net
+    if qd is not None:
+        totals = totals + qd[:, None, :, None]
     totals = np.where(infeasible[:, None, :, None], np.inf, totals)
     flat = totals[:, :, ::-1, :].reshape(M, len(cs) * S, len(bw))
     idx = np.argmin(flat, axis=1)                           # (M, B)
@@ -720,13 +791,16 @@ class _PlanTensors:
     net_up: np.ndarray          # (C, S, B) sequential uplink leg seconds
     net_dn: np.ndarray          # (C, S, B) sequential downlink leg seconds
     totals: np.ndarray          # (C, S1, S2, B) sequential plan totals
+    queue_t: Optional[np.ndarray] = None  # (S1, S2) M/G/1 wait, or None
 
 
 def _plan_tensors(ga: GraphArrays, bw: np.ndarray,
                   cloud_budget_bytes: Optional[float],
                   cs: Optional[Sequence[Codec]], rtt_s: float,
                   down_bw_factor: float, single_cut_only: bool,
-                  edge: DeviceSpec, cloud: DeviceSpec) -> _PlanTensors:
+                  edge: DeviceSpec, cloud: DeviceSpec,
+                  queue_hz: float = 0.0, queue_cv2: float = 1.0,
+                  queue_service_scale: float = 1.0) -> _PlanTensors:
     """Build the (C, S1, S2, B) sequential-pricing tensors — the exact
     expressions ``search_multicut`` has always evaluated, factored out so
     ``search_streamed`` prices its K = 1 plane with bit-identical
@@ -774,11 +848,18 @@ def _plan_tensors(ga: GraphArrays, bw: np.ndarray,
     totals = edge_t[None, :, :, None] + cloud_t[None, :, :, None] \
         + np.where(tri[None, :, :, None],
                    net_up[:, :, None, :] + net_dn[:, None, :, :], 0.0)
+    queue_t = None
+    if queue_hz > 0:
+        # M/G/1 wait on the window's cloud service time (0 outside the
+        # triangular region since cloud_t is 0 there)
+        queue_t = queue_delay_s(cloud_t, queue_hz, cv2=queue_cv2,
+                                service_scale=queue_service_scale)
+        totals = totals + queue_t[None, :, :, None]
     totals = np.where(infeasible[None, :, :, None], np.inf, totals)
     return _PlanTensors(n_c=n_c, edge_t=edge_t, cloud_t=cloud_t, tri=tri,
                         infeasible=infeasible, up_w=up_w, up_enc=up_enc,
                         up_dec=up_dec, net_up=net_up, net_dn=net_dn,
-                        totals=totals)
+                        totals=totals, queue_t=queue_t)
 
 
 def search_multicut_scalar(graph: Sequence[LayerCost], edge: DeviceSpec,
@@ -788,12 +869,17 @@ def search_multicut_scalar(graph: Sequence[LayerCost], edge: DeviceSpec,
                            rtt_s: float = 0.0, input_bytes: float = 0.0,
                            down_bw_factor: float = 1.0,
                            arrays: Optional[GraphArrays] = None,
-                           max_err: Optional[float] = None) -> PlacementEval:
+                           max_err: Optional[float] = None,
+                           queue_hz: float = 0.0, queue_cv2: float = 1.0,
+                           queue_service_scale: float = 1.0
+                           ) -> PlacementEval:
     """Scalar (S1, S2, codec) oracle: exhaustive triangular scan in the
     exact tie-break order the vectorized pass reproduces — earliest codec
     in the list, then largest ``S1``, then largest ``S2`` (so single-cut
     ``S2 = n`` wins ties over a pointless second cut).  The property-test
-    oracle for ``search_multicut``."""
+    oracle for ``search_multicut``.  ``queue_hz > 0`` adds the window's
+    M/G/1 wait to each candidate total (the wait rides ``total_s`` only,
+    not the physical decomposition)."""
     ga = arrays if arrays is not None else graph_arrays(
         graph, edge, cloud, input_bytes=input_bytes)
     n = ga.n
@@ -811,6 +897,9 @@ def search_multicut_scalar(graph: Sequence[LayerCost], edge: DeviceSpec,
                     s1, s2, bandwidth_bps, rtt_s, codec=c,
                     down_bw_factor=down_bw_factor)
                 total = e + cl + up + dn
+                if queue_hz > 0:
+                    total += queue_delay_s(cl, queue_hz, cv2=queue_cv2,
+                                           service_scale=queue_service_scale)
                 if best is None or total < best[0]:
                     best = (total, ci, s1, s2, e, cl, up, dn)
     assert best is not None, "no feasible placement (budget < 0?)"
@@ -831,7 +920,9 @@ def search_multicut(graph: Sequence[LayerCost], edge: DeviceSpec,
                     down_bw_factor: float = 1.0,
                     arrays: Optional[GraphArrays] = None,
                     max_err: Optional[float] = None,
-                    single_cut_only: bool = False) -> MulticutResult:
+                    single_cut_only: bool = False, queue_hz: float = 0.0,
+                    queue_cv2: float = 1.0,
+                    queue_service_scale: float = 1.0) -> MulticutResult:
     """Vectorized multi-cut Alg. 1: the joint optimum over every
     edge→cloud→edge plan ``(S1 ≤ S2)``, every codec and every bandwidth in
     one (C, S1, S2, B) numpy pass.
@@ -849,7 +940,8 @@ def search_multicut(graph: Sequence[LayerCost], edge: DeviceSpec,
     bw = np.atleast_1d(np.asarray(bandwidths_bps, dtype=np.float64))
     cs = resolve_codecs(codecs, max_err)
     pt = _plan_tensors(ga, bw, cloud_budget_bytes, cs, rtt_s,
-                       down_bw_factor, single_cut_only, edge, cloud)
+                       down_bw_factor, single_cut_only, edge, cloud,
+                       queue_hz, queue_cv2, queue_service_scale)
     n, S = ga.n, ga.n + 1
 
     # flatten (codec, flipped-S1, flipped-S2): first occurrence of the min
@@ -893,7 +985,10 @@ def search_streamed_scalar(graph: Sequence[LayerCost], edge: DeviceSpec,
                            down_bw_factor: float = 1.0,
                            arrays: Optional[GraphArrays] = None,
                            max_err: Optional[float] = None,
-                           single_cut_only: bool = False) -> PlacementEval:
+                           single_cut_only: bool = False,
+                           queue_hz: float = 0.0, queue_cv2: float = 1.0,
+                           queue_service_scale: float = 1.0
+                           ) -> PlacementEval:
     """Scalar (S1, S2, codec, n_chunks) oracle: exhaustive scan in the
     exact tie-break order the vectorized pass reproduces — earliest codec,
     largest ``S1``, largest ``S2``, then SMALLEST chunk count (so the
@@ -922,9 +1017,14 @@ def search_streamed_scalar(graph: Sequence[LayerCost], edge: DeviceSpec,
                     s1, s2, bandwidth_bps, rtt_s, codec=c,
                     down_bw_factor=down_bw_factor)
                 wire = float(ga.wire_bytes[s1])
+                # chunking overlaps transport, not the queue: every K
+                # cell of a window pays the same M/G/1 wait
+                wq = queue_delay_s(cl, queue_hz, cv2=queue_cv2,
+                                   service_scale=queue_service_scale) \
+                    if queue_hz > 0 else 0.0
                 for k in ks:
                     if k == 1:
-                        total, up_k, bub = e + cl + up + dn, up, 0.0
+                        total, up_k, bub = e + cl + up + dn + wq, up, 0.0
                     elif s1 < s2 and stream_applies(s1, n, wire):
                         enc = c.encode_s(wire, edge) if c is not None else 0.0
                         dec = c.decode_s(wire, cloud) if c is not None \
@@ -932,7 +1032,7 @@ def search_streamed_scalar(graph: Sequence[LayerCost], edge: DeviceSpec,
                         wire_c = c.wire_bytes(wire) if c is not None else wire
                         m = stream_makespan_scalar(
                             enc, wire_c / bandwidth_bps, dec + cl, k, rtt_s)
-                        total = (e + m) + dn
+                        total = (e + m) + dn + wq
                         up_k = m - cl
                         bub = float(stream_bubble_fraction(
                             enc, wire_c / bandwidth_bps, dec + cl, k, rtt_s))
@@ -959,7 +1059,9 @@ def search_streamed(graph: Sequence[LayerCost], edge: DeviceSpec,
                     down_bw_factor: float = 1.0,
                     arrays: Optional[GraphArrays] = None,
                     max_err: Optional[float] = None,
-                    single_cut_only: bool = False) -> MulticutResult:
+                    single_cut_only: bool = False, queue_hz: float = 0.0,
+                    queue_cv2: float = 1.0,
+                    queue_service_scale: float = 1.0) -> MulticutResult:
     """Vectorized streamed Alg. 1: the joint optimum over every placement
     window, codec, streaming chunk count and bandwidth in one
     (C, S1, S2, K, B) numpy pass.
@@ -984,7 +1086,8 @@ def search_streamed(graph: Sequence[LayerCost], edge: DeviceSpec,
     cs = resolve_codecs(codecs, max_err)
     ks = _chunk_axis(chunk_grid)
     pt = _plan_tensors(ga, bw, cloud_budget_bytes, cs, rtt_s,
-                       down_bw_factor, single_cut_only, edge, cloud)
+                       down_bw_factor, single_cut_only, edge, cloud,
+                       queue_hz, queue_cv2, queue_service_scale)
 
     # streaming gate: mid-graph uplink cuts with traffic, inside a real
     # cloud window (mirrors codec_applies + non-empty payload)
@@ -1008,6 +1111,8 @@ def search_streamed(graph: Sequence[LayerCost], edge: DeviceSpec,
         comp = pt.up_dec[:, :, None, None] + pt.cloud_t[None, :, :, None]
         m = stream_makespan(enc, wire_t, comp, k, rtt_s)
         plane = (pt.edge_t[None, :, :, None] + m) + pt.net_dn[:, None, :, :]
+        if pt.queue_t is not None:
+            plane = plane + pt.queue_t[None, :, :, None]
         planes.append(np.where(stream_ok[None, :, :, None], plane, np.inf))
         bub_planes.append(stream_bubble_fraction(enc, wire_t, comp, k,
                                                  rtt_s))
@@ -1035,11 +1140,13 @@ def search_streamed(graph: Sequence[LayerCost], edge: DeviceSpec,
     down_chosen = np.where(real, pt.net_dn[ci, s2v, cols], 0.0)
     # uplink-exposed seconds: sequential leg for K = 1 bins, makespan −
     # cloud window for streamed bins (back out of the chosen total so the
-    # edge/cloud/up/down decomposition stays additive)
+    # edge/cloud/up/down decomposition stays additive — minus the queue
+    # wait, which rides total_s only)
     up_seq = np.where(real, pt.net_up[ci, s1v, cols], 0.0)
+    queue_chosen = pt.queue_t[s1v, s2v] if pt.queue_t is not None else 0.0
     up_chosen = np.where(kv == 1, up_seq,
                          total_chosen - pt.edge_t[s1v, s2v]
-                         - cloud_chosen - down_chosen)
+                         - cloud_chosen - down_chosen - queue_chosen)
     return MulticutResult(
         bandwidths_bps=bw, s1=s1v, s2=s2v,
         total_s=total_chosen,
@@ -1063,7 +1170,8 @@ def sweep_multicut(graphs: Mapping[str, Sequence[LayerCost]],
                    down_bw_factor: float = 1.0,
                    max_err: Optional[float] = None,
                    single_cut_only: bool = False,
-                   chunk_grid=None
+                   chunk_grid=None, queue_hz: float = 0.0,
+                   queue_cv2: float = 1.0, queue_service_scale: float = 1.0
                    ) -> Dict[str, MulticutResult]:
     """Fleet-scale multi-cut plan: one padded (M, C, S1, S2, B) pass over
     every registered model — the multi-cut sibling of ``sweep_search``.
@@ -1101,7 +1209,9 @@ def sweep_multicut(graphs: Mapping[str, Sequence[LayerCost]],
                 codecs=codecs, chunk_grid=chunk_grid, rtt_s=rtt_s,
                 input_bytes=per_model(input_bytes, k, 0.0),
                 down_bw_factor=down_bw_factor, max_err=max_err,
-                single_cut_only=single_cut_only)
+                single_cut_only=single_cut_only, queue_hz=queue_hz,
+                queue_cv2=queue_cv2,
+                queue_service_scale=queue_service_scale)
             for k, g in graphs.items()}
 
     gas = [graph_arrays(graphs[k], edge, cloud,
@@ -1166,6 +1276,11 @@ def sweep_multicut(graphs: Mapping[str, Sequence[LayerCost]],
     totals = edge_t[:, None, :, :, None] + cloud_t[:, None, :, :, None] \
         + np.where(tri[:, None, :, :, None],
                    net_up[:, :, :, None, :] + net_dn[:, :, None, :, :], 0.0)
+    if queue_hz > 0:
+        # (M, S1, S2) M/G/1 wait on the window's cloud service time
+        qd = queue_delay_s(cloud_t, queue_hz, cv2=queue_cv2,
+                           service_scale=queue_service_scale)
+        totals = totals + qd[:, None, :, :, None]
     totals = np.where(infeasible[:, None, :, :, None], np.inf, totals)
 
     flat = totals[:, :, ::-1, ::-1, :].reshape(M, n_c * S * S, len(bw))

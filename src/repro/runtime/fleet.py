@@ -32,6 +32,22 @@ Composes the pieces that exist elsewhere in the repo but never meet:
   (``runtime/scheduler.py``) — cloud-side work is batched per replica,
   hedged across replicas on tail events, and replica loss/join is detected
   via heartbeats;
+* a **continuous-batching** cloud tier (``runtime/scheduler.
+  ContinuousBatcher``, ``continuous=True``): replicas admit arriving
+  prefills straight into the in-flight batch, track per-slot KV
+  occupancy (``runtime/kvcache.graph_kv_cumsum`` prices each placement
+  window's cache analytically) and preempt/requeue the youngest slot
+  when occupancy would cross ``kv_budget_bytes``; ``FleetReport`` gains
+  ``n_preemptions`` / ``mean_queue_delay_s`` / ``kv_high_watermark_bytes``
+  and ``continuous=False`` keeps the fixed-batch path bit-for-bit;
+* **queue-aware planning** (``queue_aware=True``): the plan tables and
+  per-robot controllers fold an M/G/1 expected-wait term
+  (``core/segmentation.queue_delay_s`` — per-replica arrival rate ×
+  roofline service time) into Alg. 1's objective, so congested fleets
+  retreat toward the edge *before* the queues build; the arrival rate is
+  auto-estimated from the queue-blind plan at the nominal bandwidth
+  (override with ``queue_hz``), and a zero rate reproduces the
+  queue-blind tables bit-for-bit;
 * shared cloud replicas with **finite capacity**: each replica serializes
   its batches (a ``busy_until`` clock), so queueing delay emerges when the
   fleet outruns cloud capacity;
@@ -76,7 +92,8 @@ from ..core.pipeline import (DEFAULT_CHUNK_GRID, stream_applies,
 from ..core.segmentation import (GraphArrays, graph_arrays, sweep_multicut,
                                  sweep_search)
 from ..core.structure import LayerCost, Workload, build_graph
-from .scheduler import ElasticPool, MicroBatcher, Request, StragglerMitigator
+from .scheduler import (ContinuousBatcher, ElasticPool, MicroBatcher,
+                        Request, StragglerMitigator)
 
 
 # ------------------------------------------------------------------ config
@@ -131,6 +148,29 @@ class FleetConfig:
     # pay plan K = 1, which prices exactly like ``streamed=False``.
     streamed: bool = False
     chunk_grid: Sequence[int] = DEFAULT_CHUNK_GRID
+    # continuous-batching cloud tier (runtime/scheduler.ContinuousBatcher):
+    # replicas admit arriving prefills into the in-flight batch as slots
+    # free up (``batch_size`` caps the slot count), each slot's KV
+    # occupancy ramps to the placement window's analytic footprint
+    # (runtime/kvcache.py), and the youngest slot is preempted/requeued
+    # with a full recompute when aggregate occupancy would cross
+    # ``kv_budget_bytes``.  False keeps the fixed-batch MicroBatcher path
+    # bit-for-bit as the degenerate/control case.
+    continuous: bool = False
+    kv_budget_bytes: float = 1.0e9     # per-replica KV memory budget
+    kv_admit_frac: float = 0.25        # KV fraction pinned at admission
+    # queue-aware planning: fold the M/G/1 expected-wait term
+    # (core/segmentation.queue_delay_s, Pollaczek–Khinchine) into the
+    # plan-table sweeps and every controller's Alg. 1 / ΔNB decisions.
+    # ``queue_hz=None`` auto-estimates the per-replica arrival rate from
+    # the queue-blind plan at the nominal bandwidth (robots with planned
+    # cloud work re-issue at their closed-loop rate, spread over the
+    # replicas); queue_aware=False — or an estimated rate of 0 —
+    # reproduces the queue-blind tables bit-for-bit.
+    queue_aware: bool = False
+    queue_hz: Optional[float] = None
+    queue_cv2: float = 1.0             # service-time coefficient-of-var²
+    queue_service_scale: float = 1.0   # planned→served service inflation
     pool_overhead_target: float = 0.026
     batch_overlap: float = 0.8        # fraction of non-max work overlapped
     straggler_sigma: float = 0.2      # lognormal sigma on replica exec time
@@ -191,6 +231,11 @@ class FleetReport:
     # mean fill/drain bubble fraction over streamed requests (0 when none):
     # how much pipeline dead time the chosen chunking left unrecovered
     mean_bubble_frac: float = 0.0
+    # continuous-batching tier (continuous=True; all zero under the
+    # MicroBatcher control path)
+    n_preemptions: int = 0            # KV-budget evictions (recomputed)
+    mean_queue_delay_s: float = 0.0   # cloud admission wait per completion
+    kv_high_watermark_bytes: float = 0.0   # peak per-replica KV occupancy
 
     def summary(self) -> str:
         return (f"{len(self.robots)} robots, {self.n_requests} requests: "
@@ -200,7 +245,8 @@ class FleetReport:
                 f"{self.n_hedged} hedges, {self.n_replans} replans, "
                 f"{self.n_codec_switches} codec switches, "
                 f"{self.n_cut_moves} cut moves, "
-                f"{self.n_chunk_reconfigs} chunk reconfigs")
+                f"{self.n_chunk_reconfigs} chunk reconfigs, "
+                f"{self.n_preemptions} preemptions")
 
 
 @dataclasses.dataclass
@@ -247,56 +293,21 @@ class FleetSimulator:
         # the NEAREST grid bin in log space (plain searchsorted on the grid
         # would always round up to the plan of a faster link)
         self._bw_mid = np.sqrt(self.bw_grid[:-1] * self.bw_grid[1:])
-        if cfg.streamed:
-            # streamed plan table: per-model (C, S1, S2, K, B) passes —
-            # each bin stores the joint (S1, S2, codec, n_chunks) optimum
-            # (single-cut masked when not multicut); K = 1 bins price
-            # exactly like the non-streamed tables
-            st = sweep_multicut(self.graphs, cfg.edge, cfg.cloud,
-                                self.bw_grid, cfg.cloud_budget_bytes,
-                                rtt_s=cfg.rtt_s,
-                                input_bytes=cfg.workload.input_bytes,
-                                codecs=self.codecs,
-                                down_bw_factor=cfg.down_bw_factor,
-                                single_cut_only=not cfg.multicut,
-                                chunk_grid=cfg.chunk_grid)
-            self.plan: Dict[str, np.ndarray] = {a: st[a].s1 for a in archs}
-            self.plan_s2: Dict[str, np.ndarray] = {
-                a: st[a].s2 for a in archs}
-            self.plan_codec: Dict[str, np.ndarray] = {
-                a: st[a].codec_idx for a in archs}
-            self.plan_chunks: Dict[str, np.ndarray] = {
-                a: st[a].n_chunks for a in archs}
-        elif cfg.multicut:
-            # multi-cut plan table: one (M, C, S1, S2, B) pass — each bin
-            # stores the joint (S1, S2, codec) optimum; S2 == n collapses
-            # the bin to the single-cut plan
-            mc = sweep_multicut(self.graphs, cfg.edge, cfg.cloud,
-                                self.bw_grid, cfg.cloud_budget_bytes,
-                                rtt_s=cfg.rtt_s,
-                                input_bytes=cfg.workload.input_bytes,
-                                codecs=self.codecs,
-                                down_bw_factor=cfg.down_bw_factor)
-            self.plan: Dict[str, np.ndarray] = {a: mc[a].s1 for a in archs}
-            self.plan_s2: Dict[str, np.ndarray] = {
-                a: mc[a].s2 for a in archs}
-            self.plan_codec: Dict[str, np.ndarray] = {
-                a: mc[a].codec_idx for a in archs}
-            self.plan_chunks = {a: np.ones(len(self.bw_grid), dtype=int)
-                                for a in archs}
-        else:
-            plans = sweep_search(self.graphs, cfg.edge, cfg.cloud,
-                                 self.bw_grid, cfg.cloud_budget_bytes,
-                                 rtt_s=cfg.rtt_s,
-                                 input_bytes=cfg.workload.input_bytes,
-                                 codecs=self.codecs)
-            self.plan = {a: plans[a].splits for a in archs}
-            self.plan_s2 = {a: np.full(len(self.bw_grid),
-                                       self.arrays[a].n, dtype=int)
-                            for a in archs}
-            self.plan_codec = {a: plans[a].codec_idx for a in archs}
-            self.plan_chunks = {a: np.ones(len(self.bw_grid), dtype=int)
-                                for a in archs}
+        (self.plan, self.plan_s2, self.plan_codec,
+         self.plan_chunks) = self._build_plans(0.0)
+        # queue-aware planning: estimate the per-replica arrival rate the
+        # queue-blind plan induces at the nominal bandwidth, then rebuild
+        # the tables with the M/G/1 wait term in the objective.  λ = 0
+        # skips the rebuild, so the degenerate case keeps the queue-blind
+        # tables bit-for-bit.
+        self.plan_queue_hz = 0.0
+        if cfg.queue_aware:
+            lam = (float(cfg.queue_hz) if cfg.queue_hz is not None
+                   else self._estimate_arrival_hz())
+            if lam > 0.0:
+                self.plan_queue_hz = lam
+                (self.plan, self.plan_s2, self.plan_codec,
+                 self.plan_chunks) = self._build_plans(lam)
 
         # robots start on the codec planned at the nominal bandwidth; the
         # same codec prices the controller's Alg. 1 (so replan() after an
@@ -316,7 +327,10 @@ class FleetSimulator:
                     down_bw_factor=cfg.down_bw_factor,
                     streamed=cfg.streamed,
                     chunk_grid=cfg.chunk_grid,
-                    plan_rtt_s=cfg.rtt_s)
+                    plan_rtt_s=cfg.rtt_s,
+                    queue_hz=self.plan_queue_hz,
+                    queue_cv2=cfg.queue_cv2,
+                    queue_service_scale=cfg.queue_service_scale)
             for i, a in enumerate(self.arch_of)]
         # per-robot effective placement state (for n_cut_moves)
         self.place_of: List[tuple] = [
@@ -337,6 +351,20 @@ class FleetSimulator:
         self.batchers: Dict[str, MicroBatcher] = {
             r: MicroBatcher(cfg.batch_size, cfg.batch_wait_s)
             for r in self.replica_names}
+        self.cbatchers: Dict[str, ContinuousBatcher] = {}
+        self.kv_cumsum: Dict[str, np.ndarray] = {}
+        if cfg.continuous:
+            # lazy: kvcache pulls in jax for its buffer helpers; the
+            # analytic cumsums used here are numpy-only
+            from .kvcache import graph_kv_cumsum
+            self.kv_cumsum = {
+                a: graph_kv_cumsum(self.graphs[a], get_config(a),
+                                   cfg.workload) for a in archs}
+            self.cbatchers = {
+                r: ContinuousBatcher(cfg.batch_size, cfg.kv_budget_bytes,
+                                     batch_overlap=cfg.batch_overlap,
+                                     kv_admit_frac=cfg.kv_admit_frac)
+                for r in self.replica_names}
         self.mitigator = StragglerMitigator()
         self.busy_until: Dict[str, float] = {r: 0.0
                                              for r in self.replica_names}
@@ -356,6 +384,87 @@ class FleetSimulator:
         self.n_chunk_reconfigs = 0
         self.n_streamed_requests = 0
         self._bubble_sum = 0.0
+
+    # ---------------------------------------------------------- plan tables
+    def _build_plans(self, queue_hz: float):
+        """One vectorized plan-table pass at the given per-replica arrival
+        rate.  Returns ``(plan, plan_s2, plan_codec, plan_chunks)`` dicts
+        keyed by arch; ``queue_hz = 0`` is the queue-blind table."""
+        cfg = self.cfg
+        archs = list(self.graphs)
+        qkw = dict(queue_hz=queue_hz, queue_cv2=cfg.queue_cv2,
+                   queue_service_scale=cfg.queue_service_scale)
+        if cfg.streamed:
+            # streamed plan table: per-model (C, S1, S2, K, B) passes —
+            # each bin stores the joint (S1, S2, codec, n_chunks) optimum
+            # (single-cut masked when not multicut); K = 1 bins price
+            # exactly like the non-streamed tables
+            st = sweep_multicut(self.graphs, cfg.edge, cfg.cloud,
+                                self.bw_grid, cfg.cloud_budget_bytes,
+                                rtt_s=cfg.rtt_s,
+                                input_bytes=cfg.workload.input_bytes,
+                                codecs=self.codecs,
+                                down_bw_factor=cfg.down_bw_factor,
+                                single_cut_only=not cfg.multicut,
+                                chunk_grid=cfg.chunk_grid, **qkw)
+            return ({a: st[a].s1 for a in archs},
+                    {a: st[a].s2 for a in archs},
+                    {a: st[a].codec_idx for a in archs},
+                    {a: st[a].n_chunks for a in archs})
+        if cfg.multicut:
+            # multi-cut plan table: one (M, C, S1, S2, B) pass — each bin
+            # stores the joint (S1, S2, codec) optimum; S2 == n collapses
+            # the bin to the single-cut plan
+            mc = sweep_multicut(self.graphs, cfg.edge, cfg.cloud,
+                                self.bw_grid, cfg.cloud_budget_bytes,
+                                rtt_s=cfg.rtt_s,
+                                input_bytes=cfg.workload.input_bytes,
+                                codecs=self.codecs,
+                                down_bw_factor=cfg.down_bw_factor, **qkw)
+            return ({a: mc[a].s1 for a in archs},
+                    {a: mc[a].s2 for a in archs},
+                    {a: mc[a].codec_idx for a in archs},
+                    {a: np.ones(len(self.bw_grid), dtype=int)
+                     for a in archs})
+        plans = sweep_search(self.graphs, cfg.edge, cfg.cloud,
+                             self.bw_grid, cfg.cloud_budget_bytes,
+                             rtt_s=cfg.rtt_s,
+                             input_bytes=cfg.workload.input_bytes,
+                             codecs=self.codecs, **qkw)
+        return ({a: plans[a].splits for a in archs},
+                {a: np.full(len(self.bw_grid), self.arrays[a].n, dtype=int)
+                 for a in archs},
+                {a: plans[a].codec_idx for a in archs},
+                {a: np.ones(len(self.bw_grid), dtype=int) for a in archs})
+
+    def _estimate_arrival_hz(self) -> float:
+        """Per-replica cloud arrival rate implied by the queue-blind plan
+        at the nominal bandwidth: every robot whose nominal-bin plan has a
+        non-empty cloud window re-issues as fast as its planned closed
+        loop allows (rate ``1 / T_i``, with ``T_i`` the plan's end-to-end
+        latency), spread uniformly over the replicas."""
+        cfg = self.cfg
+        k0 = int(np.searchsorted(self._bw_mid, cfg.nominal_bw_bps))
+        lam = 0.0
+        for a in self.arch_of:
+            arrays = self.arrays[a]
+            s1 = int(self.plan[a][k0])
+            s2 = int(self.plan_s2[a][k0])
+            if s1 >= s2:
+                continue                       # no cloud work planned
+            cdc = self.codecs[int(self.plan_codec[a][k0])]
+            if s2 < arrays.n:
+                eh, c, t, dn = arrays.placement_latency(
+                    s1, s2, cfg.nominal_bw_bps, cfg.rtt_s, codec=cdc,
+                    down_bw_factor=cfg.down_bw_factor)
+                total = eh + c + t + dn
+            else:
+                e, c, t = arrays.latency(s1, cfg.nominal_bw_bps,
+                                         cfg.rtt_s, codec=cdc)
+                total = e + c + t
+            if total > 0:
+                lam += 1.0 / total
+        return lam / max(1, cfg.n_replicas)
 
     # ----------------------------------------------------------- elasticity
     def _on_replicas(self, live: List[str]) -> None:
@@ -501,6 +610,32 @@ class FleetSimulator:
                            + (ready - it.ready_s) + out.latency_s
                            + it.down_s)
 
+    def _finish_cont(self, req: Request, fin_s: float) -> None:
+        """Fold one continuous-tier completion: the robot pays its edge +
+        uplink legs, the replica-side sojourn (admission wait + batched
+        service, ``fin_s - ready_s``) and any 2-cut downlink tail."""
+        it = self._pending.pop(req.rid)
+        if it.two_cut:
+            self.n_multicut_requests += 1
+        self._complete(it.robot, it.issued_s,
+                       it.edge_s + it.net_s + (fin_s - it.ready_s)
+                       + it.down_s)
+
+    def _drain_dead_cont(self, routable: List[str]) -> None:
+        """Continuous tier: a dead replica's slots and queue are evicted
+        (in-flight KV is lost — full recompute) and re-admitted on the
+        least-backlogged routable replica, or fall back to edge-only
+        re-execution when no replica accepts work."""
+        for r in self.replica_names:
+            if r in self._down and len(self.cbatchers[r]):
+                for req, svc, kv in self.cbatchers[r].drain():
+                    if routable:
+                        tgt = min(routable, key=lambda x:
+                                  self.cbatchers[x].backlog_s)
+                        self.cbatchers[tgt].add(req, svc, kv)
+                    else:
+                        self._fallback_one(self._pending.pop(req.rid))
+
     def _fallback_one(self, it: _CloudWork) -> None:
         """Cloud unavailable with work in flight: re-execute the request
         entirely on its robot's edge device (uplink time already spent is
@@ -584,8 +719,27 @@ class FleetSimulator:
                                       two_cut)
                     self._pending[wid] = work
                     self.next_free[i] = float("inf")   # until completion
-                    replica = self.mitigator.pick_primary(routable)
-                    self.batchers[replica].add(Request(wid, now + e + t, 0))
+                    if cfg.continuous:
+                        # continuous tier: the straggler multiplier is
+                        # drawn per request at enqueue (batching
+                        # efficiency lives in the batcher's eff(k)
+                        # model), the window's analytic KV footprint is
+                        # priced from the suffix cumsums, and routing is
+                        # least-backlog rather than EWMA-primary
+                        slow = float(np.exp(self.rng.normal(
+                            0.0, cfg.straggler_sigma)))
+                        if self.rng.random() < cfg.tail_prob:
+                            slow *= cfg.tail_scale
+                        kvc = self.kv_cumsum[self.arch_of[i]]
+                        replica = min(routable, key=lambda r:
+                                      self.cbatchers[r].backlog_s)
+                        self.cbatchers[replica].add(
+                            Request(wid, now + e + t, 0), c * slow,
+                            float(kvc[s1] - kvc[s2]))
+                    else:
+                        replica = self.mitigator.pick_primary(routable)
+                        self.batchers[replica].add(
+                            Request(wid, now + e + t, 0))
                 elif c > 0.0:
                     # planned a collaborative split but no replica accepts
                     # work (undetected outage window): edge re-execution
@@ -601,38 +755,54 @@ class FleetSimulator:
                         self.n_outage_completions += 1
 
             # ---- replicas that died with queued work: re-route or fall back
-            for r in self.replica_names:
-                if r in self._down and self.batchers[r].queue:
-                    if routable:
-                        for rq in list(self.batchers[r].queue):
-                            self.batchers[self.mitigator.pick_primary(
-                                routable)].add(rq)
-                        self.batchers[r].queue.clear()
-                    else:
-                        batch = self.batchers[r].flush(now)
-                        while batch is not None:
-                            self._fallback(batch.requests)
+            if cfg.continuous:
+                self._drain_dead_cont(routable)
+            else:
+                for r in self.replica_names:
+                    if r in self._down and self.batchers[r].queue:
+                        if routable:
+                            for rq in list(self.batchers[r].queue):
+                                self.batchers[self.mitigator.pick_primary(
+                                    routable)].add(rq)
+                            self.batchers[r].queue.clear()
+                        else:
                             batch = self.batchers[r].flush(now)
+                            while batch is not None:
+                                self._fallback(batch.requests)
+                                batch = self.batchers[r].flush(now)
 
             # ---- form + execute batches per accepting replica
             end = now + cfg.tick_s
-            for r in routable:
-                batch = self.batchers[r].maybe_form(end)
-                while batch is not None:
-                    self._execute(batch.requests, routable)
+            if cfg.continuous:
+                # continuous tier: advance each accepting replica's event
+                # loop to the tick boundary; completions release robots
+                for r in routable:
+                    for req, fin in self.cbatchers[r].step(end):
+                        self._finish_cont(req, fin)
+            else:
+                for r in routable:
                     batch = self.batchers[r].maybe_form(end)
+                    while batch is not None:
+                        self._execute(batch.requests, routable)
+                        batch = self.batchers[r].maybe_form(end)
 
         # ---- drain whatever is still queued at the end of the run
         end = cfg.n_ticks * cfg.tick_s
         routable = [r for r in self.replica_names if r not in self._down]
-        for r in self.replica_names:
-            batch = self.batchers[r].flush(end)
-            while batch is not None:
-                if routable:
-                    self._execute(batch.requests, routable)
-                else:
-                    self._fallback(batch.requests)
+        if cfg.continuous:
+            self._drain_dead_cont(routable)
+            for r in routable:
+                for req, fin in self.cbatchers[r].step(None):
+                    self._finish_cont(req, fin)
+        else:
+            for r in self.replica_names:
                 batch = self.batchers[r].flush(end)
+                while batch is not None:
+                    if routable:
+                        self._execute(batch.requests, routable)
+                    else:
+                        self._fallback(batch.requests)
+                    batch = self.batchers[r].flush(end)
         return self._report()
 
     # --------------------------------------------------------------- report
@@ -651,6 +821,8 @@ class FleetSimulator:
         allx = np.asarray([x for lats in self.latencies for x in lats]
                           or [0.0])
         sim_s = cfg.n_ticks * cfg.tick_s
+        cbs = list(self.cbatchers.values())
+        n_cont_done = sum(cb.n_completed for cb in cbs)
         return FleetReport(
             robots=robots, n_requests=int(sum(r.n_requests for r in robots)),
             fleet_p50_s=float(np.percentile(allx, 50)),
@@ -664,7 +836,12 @@ class FleetSimulator:
             n_chunk_reconfigs=self.n_chunk_reconfigs,
             n_streamed_requests=self.n_streamed_requests,
             mean_bubble_frac=(self._bubble_sum / self.n_streamed_requests
-                              if self.n_streamed_requests else 0.0))
+                              if self.n_streamed_requests else 0.0),
+            n_preemptions=int(sum(cb.n_preempted for cb in cbs)),
+            mean_queue_delay_s=(sum(cb.queue_delay_sum_s for cb in cbs)
+                                / max(1, n_cont_done)),
+            kv_high_watermark_bytes=max(
+                (cb.kv_high_watermark_bytes for cb in cbs), default=0.0))
 
 
 def run_fleet(cfg: FleetConfig) -> FleetReport:

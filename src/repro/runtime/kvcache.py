@@ -1,7 +1,16 @@
-"""Cache utilities: allocation, prefill->decode padding, accounting."""
+"""Cache utilities: allocation, prefill->decode padding, accounting.
+
+Also hosts the *analytic* KV sizing used by the continuous-batching
+cloud tier (``runtime/scheduler.ContinuousBatcher``): numpy-only
+closed-form byte counts per attention layer so the fleet simulator can
+price a request's KV footprint for any placement window without
+allocating real jax buffers.
+"""
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, List
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -9,6 +18,42 @@ import jax.numpy as jnp
 from ..models.sharding import init_params, is_spec, shape_tree
 
 Tree = Any
+
+# graph layer kinds that materialize a decode-time KV cache (attention
+# blocks); ViT/encoder/mamba/DiT/head stages run once per request and
+# hold no KV across decode steps
+KV_KINDS = ("llm", "moe")
+
+
+def kv_bytes_per_token(cfg, act_bytes: int = 2) -> float:
+    """Per-token per-attention-layer KV cache bytes for ``cfg``.
+
+    Standard attention stores K and V per kv-head; MLA (DeepSeek) stores
+    the compressed latent (``kv_lora_rank``) plus the decoupled RoPE key
+    (``qk_rope_dim``) instead.
+    """
+    if getattr(cfg, "use_mla", False):
+        return (cfg.kv_lora_rank + cfg.qk_rope_dim) * act_bytes
+    return 2 * cfg.n_kv_heads * cfg.resolved_head_dim * act_bytes
+
+
+def request_kv_tokens(workload) -> int:
+    """Tokens resident in the cache at the end of a request: the full
+    context + the new chunk + one slot per decode step."""
+    return workload.s_ctx + workload.s_new + workload.decode_steps
+
+
+def graph_kv_cumsum(graph: List, cfg, workload) -> np.ndarray:
+    """Suffix cumulative KV bytes over a layer graph: ``out[s]`` is the
+    full per-request KV footprint of layers ``[s, n)``, so a placement
+    window's cloud-side KV is ``out[s1] - out[s2]`` — the same window
+    convention as ``GraphArrays``' cost cumsums."""
+    per_layer = kv_bytes_per_token(cfg, workload.act_bytes) \
+        * request_kv_tokens(workload) * workload.batch
+    has_kv = np.array([1.0 if c.kind in KV_KINDS else 0.0 for c in graph])
+    out = np.zeros(len(graph) + 1)
+    out[:-1] = per_layer * has_kv[::-1].cumsum()[::-1]
+    return out
 
 
 def alloc_cache(model, batch: int, max_len: int, **kw) -> Tree:

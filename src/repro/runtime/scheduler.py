@@ -11,6 +11,13 @@ Simulation-grade but real control logic (unit-tested), designed for the
 * ``ElasticPool`` — replicas join/leave; on loss of the edge tier the
   RoboECC controller's ``replan()`` degrades to cloud-only (split=0), on
   re-join it re-runs Alg. 1.
+* ``ContinuousBatcher`` — vLLM-style continuous batching: arriving
+  prefills are admitted into the in-flight batch as slots free up, each
+  slot's KV occupancy ramps from a reserved fraction to its full
+  footprint as the request executes, and the youngest slot is preempted
+  (requeued with a full recompute) when aggregate occupancy would cross
+  the replica KV budget.  ``MicroBatcher`` stays as the fixed-batch
+  degenerate/control case (``FleetConfig(continuous=False)``).
 """
 from __future__ import annotations
 
@@ -111,12 +118,211 @@ class StragglerMitigator:
         hedged, winner, lat = False, primary, t_primary
         if t_primary > deadline and len(replicas) > 1:
             backup = self.pick_primary([r for r in replicas if r != primary])
-            t_backup = deadline + exec_fn(backup)  # hedge fires at deadline
+            t_backup_exec = exec_fn(backup)
+            t_backup = deadline + t_backup_exec  # hedge fires at deadline
             hedged = True
+            # the backup's own service time is a real observation too —
+            # without it the backup keeps mean=None (scored 0.0 by
+            # pick_primary) and hedge targets are chosen on no data
+            self.stats[backup].observe(t_backup_exec)
             if t_backup < t_primary:
                 winner, lat = backup, t_backup
         self.stats[primary].observe(t_primary)
         return HedgeOutcome(primary, lat, hedged, winner)
+
+
+@dataclasses.dataclass
+class _ContItem:
+    """A queued request: full (re)compute cost + final KV footprint."""
+    req: Request
+    service_s: float
+    kv_bytes: float
+    wait_from: float            # queue-delay clock start (arrival/preempt)
+
+
+@dataclasses.dataclass
+class _ContSlot:
+    """An in-flight request occupying one batch slot."""
+    item: _ContItem
+    remaining_s: float          # service-seconds of work left
+    admit_s: float
+    kv_reserved: float          # bytes pinned at admission
+
+
+class ContinuousBatcher:
+    """Continuous batching with KV-budget preemption (event-driven).
+
+    Requests carry a *service time* (full solo execution cost, seconds)
+    and a *KV footprint* (bytes held once the request's cache is fully
+    materialized).  The batcher runs an exact event loop:
+
+    * k in-flight slots share the replica; batching efficiency follows
+      the fleet's micro-batch cost model — a k-batch costs
+      ``eff(k) = 1 + (k - 1) * (1 - batch_overlap)`` times one request,
+      so each slot drains ``dt / eff(k)`` service-seconds per wall
+      second.
+    * A slot's KV occupancy ramps linearly from a reserved fraction
+      (``kv_admit_frac * kv_bytes``, pinned at admission) to its full
+      footprint as the request progresses — the prefill writes cache as
+      it runs.
+    * When aggregate occupancy would cross ``kv_budget_bytes``, the
+      YOUNGEST preemptable slot (never slot 0 — guaranteed progress) is
+      evicted back to the front of the queue with its full service time
+      restored (preempt-with-recompute, as in vLLM's recompute policy).
+    * Admission is FIFO and happens only at arrival / completion /
+      horizon events, never at budget-crossing events, which bounds the
+      event count and rules out admit/preempt livelock.
+
+    Counters (``n_admitted`` / ``n_completed`` / ``n_preempted`` /
+    ``kv_high_watermark_bytes`` / ``queue_delay_sum_s``) feed the fleet
+    report's queue metrics.
+    """
+
+    _EPS = 1e-12
+
+    def __init__(self, max_slots: int, kv_budget_bytes: float, *,
+                 batch_overlap: float = 0.8, kv_admit_frac: float = 0.25):
+        self.max_slots = max(1, int(max_slots))
+        self.kv_budget_bytes = float(kv_budget_bytes)
+        self.batch_overlap = batch_overlap
+        self.kv_admit_frac = min(1.0, max(0.0, kv_admit_frac))
+        self.queue: deque[_ContItem] = deque()
+        self.slots: List[_ContSlot] = []    # admission order: oldest first
+        self.now_s = 0.0
+        self.n_admitted = 0
+        self.n_completed = 0
+        self.n_preempted = 0
+        self.kv_high_watermark_bytes = 0.0
+        self.queue_delay_sum_s = 0.0
+
+    # ------------------------------------------------------------- model
+    def _eff(self, k: int) -> float:
+        if k <= 1:
+            return 1.0
+        return 1.0 + (k - 1) * (1.0 - self.batch_overlap)
+
+    def _slot_occupancy(self, s: _ContSlot) -> float:
+        frac_done = 1.0 - s.remaining_s / s.item.service_s
+        return s.kv_reserved + (s.item.kv_bytes - s.kv_reserved) * frac_done
+
+    def occupancy_bytes(self) -> float:
+        return sum(self._slot_occupancy(s) for s in self.slots)
+
+    @property
+    def backlog_s(self) -> float:
+        """Outstanding service-seconds (in-flight + queued) — the fleet's
+        least-loaded routing metric."""
+        return (sum(s.remaining_s for s in self.slots)
+                + sum(it.service_s for it in self.queue))
+
+    def __len__(self) -> int:
+        return len(self.slots) + len(self.queue)
+
+    # ------------------------------------------------------------- input
+    def add(self, req: Request, service_s: float, kv_bytes: float) -> None:
+        item = _ContItem(req, max(service_s, self._EPS), float(kv_bytes),
+                         wait_from=max(req.arrival_s, self.now_s))
+        self.queue.append(item)
+
+    def _admit(self) -> None:
+        """FIFO admission while a slot and budget headroom exist.  When
+        the machine is idle the head is admitted unconditionally — a
+        request whose reservation alone exceeds the budget must still
+        run (solo) or the queue deadlocks."""
+        while self.queue and len(self.slots) < self.max_slots:
+            head = self.queue[0]
+            if head.req.arrival_s > self.now_s + self._EPS:
+                break                        # not here yet (future arrival)
+            res = self.kv_admit_frac * head.kv_bytes
+            if self.slots and \
+                    self.occupancy_bytes() + res > self.kv_budget_bytes + 1e-9:
+                break                        # no headroom: FIFO blocks
+            self.queue.popleft()
+            self.slots.append(_ContSlot(head, head.service_s, self.now_s,
+                                        res))
+            self.n_admitted += 1
+            self.queue_delay_sum_s += self.now_s - head.wait_from
+
+    # -------------------------------------------------------------- loop
+    def step(self, until_s: Optional[float] = None
+             ) -> List[Tuple[Request, float]]:
+        """Advance the event loop to ``until_s`` (or to quiescence when
+        ``None``).  Returns ``[(request, finish_s)]`` completions."""
+        horizon = float("inf") if until_s is None else float(until_s)
+        done: List[Tuple[Request, float]] = []
+        self._admit()
+        while True:
+            k = len(self.slots)
+            eff = self._eff(k)
+            occ = self.occupancy_bytes()
+            self.kv_high_watermark_bytes = max(
+                self.kv_high_watermark_bytes, occ)
+
+            t_done = min((s.remaining_s for s in self.slots),
+                         default=float("inf")) * eff + self.now_s
+            t_arr = float("inf")
+            if self.queue and self.queue[0].req.arrival_s > self.now_s:
+                t_arr = self.queue[0].req.arrival_s
+            # budget crossing: occupancy grows at sum((kv-res)/service)/eff
+            t_cross = float("inf")
+            preemptable = [i for i in range(1, k)
+                           if self.slots[i].item.kv_bytes > 0]
+            if preemptable:
+                rate = sum((s.item.kv_bytes - s.kv_reserved)
+                           / s.item.service_s for s in self.slots) / eff
+                if occ >= self.kv_budget_bytes - 1e-9:
+                    t_cross = self.now_s
+                elif rate > 0:
+                    t_cross = self.now_s \
+                        + (self.kv_budget_bytes - occ) / rate
+
+            t_next = min(t_done, t_arr, t_cross, horizon)
+            if t_next == float("inf"):
+                break
+            dt = t_next - self.now_s
+            if dt > 0:
+                for s in self.slots:
+                    s.remaining_s = max(0.0, s.remaining_s - dt / eff)
+                self.now_s = t_next
+                self.kv_high_watermark_bytes = max(
+                    self.kv_high_watermark_bytes, self.occupancy_bytes())
+
+            finished = [s for s in self.slots if s.remaining_s <= self._EPS]
+            if finished:
+                for s in finished:
+                    self.slots.remove(s)
+                    self.n_completed += 1
+                    done.append((s.item.req, self.now_s))
+                self._admit()                # freed slot + KV headroom
+                continue
+            if self.now_s >= horizon:
+                self._admit()                # same-instant arrivals
+                break
+            if t_next == t_cross:
+                # evict the youngest preemptable slot; its cache is
+                # dropped, so the full service time is restored.  NO
+                # admission here — re-admission waits for the next
+                # arrival/completion event, which bounds the event count
+                # (<= k-1 preemptions between admission events).
+                victim = self.slots.pop(preemptable[-1])
+                victim.item.wait_from = self.now_s
+                self.queue.appendleft(victim.item)
+                self.n_preempted += 1
+                continue
+            self._admit()                    # arrival event
+        return done
+
+    # ---------------------------------------------------------- teardown
+    def drain(self) -> List[Tuple[Request, float, float]]:
+        """Evict everything (replica death).  Returns
+        ``[(request, service_s, kv_bytes)]`` — in-flight slots first
+        (their work is lost; full recompute), then the queue in order."""
+        out = [(s.item.req, s.item.service_s, s.item.kv_bytes)
+               for s in self.slots]
+        out += [(it.req, it.service_s, it.kv_bytes) for it in self.queue]
+        self.slots.clear()
+        self.queue.clear()
+        return out
 
 
 class ElasticPool:

@@ -7,3 +7,17 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 jax.config.update("jax_platform_name", "cpu")
+
+# Deterministic hypothesis profile for CI (HYPOTHESIS_PROFILE=ci):
+# derandomized, example-capped, no deadline — property failures reproduce
+# bit-for-bit across runs.  Guarded: hypothesis is an optional test dep
+# and the suites fall back to seeded scenario tests without it.
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "ci", derandomize=True, max_examples=60, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))
+except ImportError:
+    pass

@@ -1,0 +1,112 @@
+"""Direct unit tests for runtime/kvcache.py — previously exercised only
+through serving: the jax cache helpers (alloc/pad/bytes) and the analytic
+KV sizing that prices the continuous-batching tier's placement windows."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Workload, build_graph
+from repro.models import build
+from repro.runtime.kvcache import (KV_KINDS, alloc_cache, cache_bytes,
+                                   graph_kv_cumsum, kv_bytes_per_token,
+                                   pad_cache, request_kv_tokens)
+
+W = Workload()
+
+
+# ----------------------------------------------------------- analytic KV
+def test_kv_bytes_per_token_standard_attention():
+    cfg = get_config("openvla-7b")
+    want = 2 * cfg.n_kv_heads * cfg.resolved_head_dim * 2
+    assert kv_bytes_per_token(cfg) == want
+    assert kv_bytes_per_token(cfg, act_bytes=4) == 2 * want
+
+
+def test_kv_bytes_per_token_mla_stores_latent_not_heads():
+    cfg = get_config("deepseek-v2-lite-16b")
+    assert cfg.use_mla
+    want = (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2
+    assert kv_bytes_per_token(cfg) == want
+    # MLA's whole point: far below the equivalent per-head cache
+    assert want < 2 * cfg.n_kv_heads * cfg.resolved_head_dim * 2
+
+
+def test_request_kv_tokens_counts_context_chunk_and_decode():
+    assert request_kv_tokens(W) == W.s_ctx + W.s_new + W.decode_steps
+
+
+def test_graph_kv_cumsum_window_convention():
+    cfg = get_config("openvla-7b")
+    g = build_graph(cfg, W)
+    out = graph_kv_cumsum(g, cfg, W)
+    assert out.shape == (len(g) + 1,)
+    assert out[-1] == 0.0                       # empty window beyond n
+    # suffix cumsum: non-increasing, so every window prices >= 0
+    assert (np.diff(out) <= 1e-9).all()
+    # out[0] is the whole model: per-layer bytes x KV-bearing layer count
+    n_kv = sum(1 for c in g if c.kind in KV_KINDS)
+    per = kv_bytes_per_token(cfg, W.act_bytes) * request_kv_tokens(W) \
+        * W.batch
+    assert out[0] == pytest.approx(per * n_kv)
+    # a window's KV is the cumsum difference, and only KV layers count
+    s1 = next(i for i, c in enumerate(g) if c.kind in KV_KINDS)
+    assert out[0] == out[s1]                    # ViT prefix holds no KV
+    assert out[s1] - out[s1 + 1] == pytest.approx(per)
+
+
+def test_graph_kv_cumsum_zero_for_cacheless_graph():
+    cfg = get_config("mamba2-1.3b")             # pure SSM trunk: no KV
+    g = build_graph(cfg, W)
+    assert not any(c.kind in KV_KINDS for c in g)
+    assert (graph_kv_cumsum(g, cfg, W) == 0.0).all()
+
+
+# ---------------------------------------------------------- jax helpers
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_config("llama3.2-3b").reduced().replace(n_layers=4,
+                                                      dtype="float32")
+    return cfg, build(cfg)
+
+
+def test_alloc_cache_bytes_match_analytic_sizing(lm):
+    """The analytic per-token formula prices exactly what alloc_cache
+    materializes: layers x batch x tokens x kv_bytes_per_token."""
+    cfg, model = lm
+    batch, max_len = 2, 8
+    cache = alloc_cache(model, batch, max_len)
+    want = kv_bytes_per_token(cfg, act_bytes=4) * cfg.n_layers \
+        * batch * max_len
+    assert cache_bytes(cache) == want
+
+
+def test_alloc_cache_zero_initialized(lm):
+    _, model = lm
+    cache = alloc_cache(model, 1, 4)
+    for leaf in jax.tree_util.tree_leaves(cache):
+        assert not jnp.any(leaf)
+
+
+def test_pad_cache_extends_seq_axis_and_keeps_content(lm):
+    cfg, model = lm
+    prompt = alloc_cache(model, 2, 5)
+    prompt = jax.tree_util.tree_map(jnp.ones_like, prompt)
+    specs = model.cache_specs(2, 8)
+    padded = pad_cache(prompt, specs)
+    shapes = jax.tree_util.tree_map(lambda x: x.shape, padded)
+    want = jax.tree_util.tree_map(lambda x: x.shape,
+                                  alloc_cache(model, 2, 8))
+    assert shapes == want
+    # zero padding: the prompt-sized content survives untouched
+    for before, after in zip(jax.tree_util.tree_leaves(prompt),
+                             jax.tree_util.tree_leaves(padded)):
+        assert float(after.sum()) == float(before.sum())
+
+
+def test_pad_cache_rejects_shrinking(lm):
+    _, model = lm
+    big = alloc_cache(model, 2, 8)
+    with pytest.raises(AssertionError):
+        pad_cache(big, model.cache_specs(2, 5))

@@ -1,0 +1,235 @@
+"""Queue-aware planning: M/G/1 wait-term semantics, scalar-oracle parity
+of every vectorized sweep under congestion, bitwise zero-rate degeneracy,
+and the fleet-level degenerate/determinism guarantees.
+
+Repo discipline: each vectorized search must agree with its scalar oracle
+under the new ``queue_hz`` axis on EVERY registered config, and setting
+the arrival rate to zero must reproduce the queue-blind results
+bit-for-bit (``np.array_equal``, not approx)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.core import (TraceConfig, Workload, build_graph, queue_delay_s,
+                        search, search_multicut, search_multicut_scalar,
+                        search_streamed, search_streamed_scalar, search_vec,
+                        sweep_multicut, sweep_search)
+from repro.core.hardware import A100, ORIN
+from repro.runtime.fleet import FleetConfig, FleetSimulator, run_fleet
+
+W = Workload()
+BWS = np.geomspace(0.05e6, 40e6, 7)
+AXIS = ("identity", "int8", "int4")
+QUOTA = 5.8e9
+DOWN = 8.0
+GRID = (1, 2, 4, 8)
+# a deliberately congested operating point: λ high enough that ρ → 1 for
+# the larger cloud windows, cv² and service inflation off their defaults
+QHZ = dict(queue_hz=7.0, queue_cv2=1.3, queue_service_scale=1.2)
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return {k: build_graph(get_config(k), W) for k in sorted(ARCHS)}
+
+
+# ------------------------------------------------------------ wait term
+def test_queue_delay_known_value_and_edges():
+    # M/M/1 check: λ=1, S=0.5 → W = 1·0.25·2 / (2·0.5) = 0.5
+    assert queue_delay_s(0.5, 1.0) == pytest.approx(0.5)
+    # zero arrival rate or zero service → no wait
+    assert queue_delay_s(0.5, 0.0) == 0.0
+    assert queue_delay_s(0.0, 10.0) == 0.0
+    # saturation ρ >= 1 → infinite wait (the planner must retreat)
+    assert queue_delay_s(1.0, 1.0) == float("inf")
+    assert queue_delay_s(2.0, 1.0) == float("inf")
+    # service_scale inflates S inside ρ as well: λ=1, S=0.25, scale=2
+    assert queue_delay_s(0.25, 1.0, service_scale=2.0) == \
+        pytest.approx(queue_delay_s(0.5, 1.0))
+    # cv² scales the numerator linearly below saturation
+    assert queue_delay_s(0.1, 1.0, cv2=3.0) == \
+        pytest.approx(2.0 * queue_delay_s(0.1, 1.0))
+
+
+def test_queue_delay_vectorized_matches_scalar():
+    xs = np.array([0.0, 0.01, 0.1, 0.5, 1.0, 3.0])
+    vec = queue_delay_s(xs, 1.7, cv2=1.3, service_scale=1.1)
+    assert vec.shape == xs.shape
+    for x, v in zip(xs, vec):
+        s = queue_delay_s(float(x), 1.7, cv2=1.3, service_scale=1.1)
+        assert v == s or (np.isinf(v) and np.isinf(s))
+
+
+# -------------------------------------------------- scalar-oracle parity
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_queue_aware_vec_search_matches_scalar_every_config(arch, graphs):
+    """Acceptance: the queue-aware vectorized sweep is plan-identical to
+    the scalar oracle on all registered configs."""
+    g = graphs[arch]
+    res = search_vec(g, ORIN, A100, BWS, QUOTA, rtt_s=0.005,
+                     input_bytes=W.input_bytes, **QHZ)
+    sw = sweep_search({arch: g}, ORIN, A100, BWS, QUOTA, rtt_s=0.005,
+                      input_bytes=W.input_bytes, **QHZ)[arch]
+    for j, bw in enumerate(BWS):
+        sc = search(g, ORIN, A100, float(bw), QUOTA, rtt_s=0.005,
+                    input_bytes=W.input_bytes, **QHZ)
+        assert int(res.splits[j]) == sc.split, (arch, bw)
+        assert res.total_s[j] == pytest.approx(sc.total_s, rel=1e-9)
+        assert int(sw.splits[j]) == sc.split, (arch, bw)
+
+
+@pytest.mark.parametrize("arch", ("openvla-7b", "deepseek-v2-lite-16b",
+                                  "llama3.2-3b"))
+def test_queue_aware_multicut_matches_scalar(arch, graphs):
+    g = graphs[arch]
+    res = search_multicut(g, ORIN, A100, BWS, QUOTA, codecs=AXIS,
+                          rtt_s=0.005, input_bytes=W.input_bytes,
+                          down_bw_factor=DOWN, **QHZ)
+    for j, bw in enumerate(BWS):
+        sc = search_multicut_scalar(g, ORIN, A100, float(bw), QUOTA,
+                                    codecs=AXIS, rtt_s=0.005,
+                                    input_bytes=W.input_bytes,
+                                    down_bw_factor=DOWN, **QHZ)
+        assert res.plan_at(j) == sc.plan, (arch, bw)
+        assert res.total_s[j] == pytest.approx(sc.total_s, rel=1e-9)
+
+
+@pytest.mark.parametrize("arch", ("openvla-7b", "cogact-7b"))
+def test_queue_aware_streamed_matches_scalar(arch, graphs):
+    g = graphs[arch]
+    res = search_streamed(g, ORIN, A100, BWS, QUOTA, codecs=AXIS,
+                          chunk_grid=GRID, rtt_s=0.005,
+                          input_bytes=W.input_bytes, down_bw_factor=DOWN,
+                          **QHZ)
+    for j, bw in enumerate(BWS):
+        sc = search_streamed_scalar(g, ORIN, A100, float(bw), QUOTA,
+                                    codecs=AXIS, chunk_grid=GRID,
+                                    rtt_s=0.005, input_bytes=W.input_bytes,
+                                    down_bw_factor=DOWN, **QHZ)
+        assert res.plan_at(j) == sc.plan, (arch, bw)
+        assert int(res.n_chunks[j]) == sc.n_chunks, (arch, bw)
+        assert res.total_s[j] == pytest.approx(sc.total_s, rel=1e-9)
+
+
+# ------------------------------------------------- zero-rate degeneracy
+def test_zero_arrival_rate_is_bitwise_queue_blind(graphs):
+    """queue_hz=0 must not merely approximate the queue-blind sweep — it
+    must take the identical code path and produce identical bits."""
+    sub = {k: graphs[k] for k in ("openvla-7b", "llama3.2-3b")}
+    blind = sweep_search(sub, ORIN, A100, BWS, QUOTA, rtt_s=0.005,
+                         input_bytes=W.input_bytes, codecs=AXIS)
+    zero = sweep_search(sub, ORIN, A100, BWS, QUOTA, rtt_s=0.005,
+                        input_bytes=W.input_bytes, codecs=AXIS,
+                        queue_hz=0.0, queue_cv2=2.0,
+                        queue_service_scale=3.0)
+    for k in sub:
+        for f in ("splits", "total_s", "edge_s", "cloud_s", "net_s",
+                  "codec_idx"):
+            assert np.array_equal(getattr(blind[k], f),
+                                  getattr(zero[k], f)), (k, f)
+
+    mc_b = sweep_multicut(sub, ORIN, A100, BWS, QUOTA, codecs=AXIS,
+                          rtt_s=0.005, input_bytes=W.input_bytes,
+                          down_bw_factor=DOWN, chunk_grid=GRID)
+    mc_z = sweep_multicut(sub, ORIN, A100, BWS, QUOTA, codecs=AXIS,
+                          rtt_s=0.005, input_bytes=W.input_bytes,
+                          down_bw_factor=DOWN, chunk_grid=GRID,
+                          queue_hz=0.0)
+    for k in sub:
+        for f in ("s1", "s2", "total_s", "edge_s", "cloud_s", "up_s",
+                  "down_s", "codec_idx", "n_chunks"):
+            assert np.array_equal(getattr(mc_b[k], f),
+                                  getattr(mc_z[k], f)), (k, f)
+
+
+def test_queue_term_is_planning_prior_not_physical(graphs):
+    """Under congestion the reported total carries the expected wait, so
+    the physical decomposition no longer sums to it — by design (the wait
+    is a planning prior, not a transport/compute leg)."""
+    g = graphs["openvla-7b"]
+    res = search_vec(g, ORIN, A100, BWS, QUOTA, rtt_s=0.005,
+                     input_bytes=W.input_bytes, **QHZ)
+    parts = res.edge_s + res.cloud_s + res.net_s
+    collaborative = res.splits < len(g)
+    if collaborative.any():
+        assert (res.total_s[collaborative]
+                > parts[collaborative] + 1e-12).all()
+    # edge-only bins carry no cloud queue → total == parts exactly
+    edge_only = ~collaborative
+    if edge_only.any():
+        assert np.array_equal(res.total_s[edge_only], parts[edge_only])
+
+
+# --------------------------------------------------------------- fleet
+def _fleet_cfg(**kw) -> FleetConfig:
+    bw = 1e6
+    return FleetConfig(n_robots=8, n_ticks=60, n_replicas=2,
+                       archs=("openvla-7b",), seed=3, multicut=True,
+                       codecs=AXIS, cloud_budget_bytes=QUOTA,
+                       down_bw_factor=DOWN,
+                       trace=TraceConfig(mean_bps=bw, bad_bps=bw / 4),
+                       nominal_bw_bps=bw, **kw)
+
+
+def test_fleet_queue_aware_zero_rate_bitwise_degenerate():
+    """queue_aware=True with an explicit zero rate skips the plan-table
+    rebuild entirely: the FleetReport equals the default run bit-for-bit
+    (dataclass equality covers every float)."""
+    a = run_fleet(_fleet_cfg())
+    b = run_fleet(_fleet_cfg(queue_aware=True, queue_hz=0.0))
+    assert a == b
+
+
+def test_fleet_continuous_false_leaves_micro_path_untouched():
+    """The continuous-batching knobs are inert under continuous=False:
+    identical report, zero queue metrics."""
+    a = run_fleet(_fleet_cfg())
+    b = run_fleet(_fleet_cfg(kv_budget_bytes=1.0, kv_admit_frac=0.9))
+    assert a == b
+    assert a.n_preemptions == 0 and a.mean_queue_delay_s == 0.0
+    assert a.kv_high_watermark_bytes == 0.0
+
+
+def test_fleet_queue_aware_auto_estimates_positive_rate():
+    sim = FleetSimulator(_fleet_cfg(queue_aware=True))
+    assert sim.plan_queue_hz > 0.0
+    # every controller plans with the same rate the tables used
+    assert all(c.queue_hz == sim.plan_queue_hz for c in sim.controllers)
+
+
+def test_fleet_continuous_seed_determinism():
+    """Satellite acceptance: two runs of the full continuous + queue-aware
+    configuration produce identical FleetReports; a different seed does
+    not."""
+    cfg = _fleet_cfg(continuous=True, queue_aware=True,
+                     kv_budget_bytes=4e8)
+    a, b = run_fleet(cfg), run_fleet(cfg)
+    assert a == b
+    c = run_fleet(dataclasses.replace(cfg, seed=99))
+    assert c != a
+
+
+def test_fleet_continuous_beats_micro_p95_at_1mbs():
+    """Acceptance: at the 1 MB/s OpenVLA operating point the continuous
+    tier (with queue-aware planning on) beats the micro-batching
+    baseline's fleet p95 — same plan tables, same trace (the measured
+    margin is ~100 ms; assert half of it so trace tweaks don't flake)."""
+    kw = dict(n_robots=16, n_ticks=200)
+    micro = run_fleet(dataclasses.replace(_fleet_cfg(), **kw))
+    cont = run_fleet(dataclasses.replace(
+        _fleet_cfg(continuous=True, queue_aware=True), **kw))
+    assert cont.n_requests >= micro.n_requests
+    assert cont.fleet_p95_s < micro.fleet_p95_s - 0.05
+
+
+def test_fleet_continuous_reports_queue_metrics():
+    cfg = _fleet_cfg(continuous=True, kv_budget_bytes=1.5e8)
+    rep = run_fleet(cfg)
+    assert rep.n_requests > 0
+    assert rep.n_hedged == 0                 # continuous tier never hedges
+    assert rep.kv_high_watermark_bytes > 0.0
+    assert rep.kv_high_watermark_bytes <= 1.5e8 + 1e-6
+    assert rep.mean_queue_delay_s >= 0.0
+    assert rep.n_preemptions > 0             # tight budget forces evictions

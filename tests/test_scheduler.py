@@ -1,12 +1,27 @@
 """Direct unit tests for runtime/scheduler.py primitives — previously
 exercised only indirectly through the fleet simulator: StragglerMitigator
 hedge firing + p95 bookkeeping, ElasticPool join/leave → replan
-callbacks, MicroBatcher deadline semantics, LatencyStats windows."""
+callbacks, MicroBatcher deadline semantics, LatencyStats windows, and the
+``ContinuousBatcher`` event loop.
+
+The continuous-batching invariants (conservation, KV watermark, FIFO
+no-starvation) run twice: as property-based ``hypothesis`` tests when the
+optional dep is installed, and always as seeded numpy-random scenario
+sweeps through the same checkers — CI gets the generative coverage, a
+bare container still exercises every invariant."""
+import numpy as np
 import pytest
 
-from repro.runtime.scheduler import (Batch, ElasticPool, LatencyStats,
-                                     MicroBatcher, Request,
+from repro.runtime.scheduler import (Batch, ContinuousBatcher, ElasticPool,
+                                     LatencyStats, MicroBatcher, Request,
                                      StragglerMitigator)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 # ------------------------------------------------------------ LatencyStats
@@ -150,3 +165,209 @@ def test_microbatcher_size_trigger_before_deadline():
     b = mb.maybe_form(0.001)
     assert b is not None and [r.rid for r in b.requests] == [0, 1]
     assert len(mb.queue) == 1                # remainder rides the next one
+
+
+def test_hedge_observes_backup_latency():
+    """Regression: the hedge used to discard the backup's own execution
+    time, so a hedged-to replica never accumulated stats and every later
+    hedge target was chosen on no data."""
+    mit = StragglerMitigator()
+    _seed(mit, "a", 1.0)
+    _seed(mit, "b", 2.0, n=1)
+    out = mit.run(["a", "b"], lambda r: 10.0 if r == "a" else 0.5)
+    assert out.hedged and out.winner == "b"
+    # the backup's service time is now a real observation
+    assert len(mit.stats["b"].samples) == 2
+    assert mit.stats["b"].mean == pytest.approx(0.8 * 2.0 + 0.2 * 0.5)
+    # and the next primary pick is made on measured data: a's EWMA moved
+    # to 0.8 * 1.0 + 0.2 * 10.0 = 2.8, b's down to 1.65
+    assert mit.stats["a"].mean == pytest.approx(2.8)
+    assert mit.pick_primary(["a", "b"]) == "b"
+
+
+# -------------------------------------------------------- ContinuousBatcher
+def test_continuous_admits_and_completes_in_batch():
+    """3 same-instant requests, 2 slots, overlap 0.8: the first pair runs
+    as a 2-batch (eff = 1.2 → both finish at 1.2 s), the third is
+    admitted on the first free slot and finishes 1 s later."""
+    cb = ContinuousBatcher(2, 1e9, batch_overlap=0.8)
+    for rid in range(3):
+        cb.add(Request(rid, 0.0, 1), 1.0, 1e6)
+    done = cb.step(None)
+    fins = {req.rid: fin for req, fin in done}
+    assert fins[0] == pytest.approx(1.2)
+    assert fins[1] == pytest.approx(1.2)
+    assert fins[2] == pytest.approx(2.2)
+    assert cb.n_admitted == 3 and cb.n_preempted == 0
+
+
+def test_continuous_preempts_youngest_and_recomputes():
+    """A tight KV budget forces the youngest slot out; the evicted
+    request recomputes from scratch and everything still completes."""
+    cb = ContinuousBatcher(3, 1.5e6, batch_overlap=1.0, kv_admit_frac=0.1)
+    for rid in range(3):
+        cb.add(Request(rid, 0.0, 1), 1.0, 1e6)
+    done = cb.step(None)
+    assert sorted(req.rid for req, _ in done) == [0, 1, 2]
+    assert cb.n_preempted > 0
+    assert cb.kv_high_watermark_bytes <= 1.5e6 + 1e-6
+    # every preemption re-queues → one extra admission each
+    assert cb.n_admitted == cb.n_completed + cb.n_preempted
+
+
+def test_continuous_horizon_stepping_and_future_arrivals():
+    cb = ContinuousBatcher(2, 1e9)
+    cb.add(Request(0, 0.0, 1), 1.0, 1e6)
+    cb.add(Request(1, 5.0, 1), 1.0, 1e6)     # not here yet
+    assert cb.step(0.5) == []                # mid-flight: nothing done
+    assert len(cb.slots) == 1
+    done = cb.step(2.0)
+    assert [req.rid for req, _ in done] == [0]
+    assert len(cb) == 1                      # rid 1 still queued (future)
+    done = cb.step(None)
+    assert [req.rid for req, _ in done] == [1]
+    assert done[0][1] == pytest.approx(6.0)  # starts at its arrival
+
+
+def test_continuous_solo_admission_exceeding_budget():
+    """A request whose reservation alone exceeds the budget still runs
+    (solo) instead of deadlocking the queue."""
+    cb = ContinuousBatcher(4, 1e6, kv_admit_frac=1.0)
+    cb.add(Request(0, 0.0, 1), 1.0, 5e6)
+    cb.add(Request(1, 0.0, 1), 1.0, 5e6)
+    done = cb.step(None)
+    assert sorted(req.rid for req, _ in done) == [0, 1]
+    assert cb.n_preempted == 0               # solo slots are never evicted
+
+
+def test_continuous_drain_returns_flight_then_queue():
+    cb = ContinuousBatcher(1, 1e9)
+    cb.add(Request(0, 0.0, 1), 1.0, 1e6)
+    cb.add(Request(1, 0.0, 1), 2.0, 2e6)
+    cb.step(0.5)                             # rid 0 in flight, rid 1 queued
+    out = cb.drain()
+    assert [(r.rid, svc, kv) for r, svc, kv in out] == \
+        [(0, 1.0, 1e6), (1, 2.0, 2e6)]       # full service restored
+    assert len(cb) == 0
+
+
+# --------------------------------------- continuous-batching invariants
+def _run_to_quiescence(reqs, max_slots, kv_budget, overlap, admit_frac):
+    """Feed a scenario (sorted by arrival — the fleet enqueues in time
+    order) and drain to quiescence."""
+    cb = ContinuousBatcher(max_slots, kv_budget, batch_overlap=overlap,
+                           kv_admit_frac=admit_frac)
+    for rid, (arr, svc, kv) in enumerate(sorted(reqs)):
+        cb.add(Request(rid, arr, 1), svc, kv)
+    return cb, cb.step(None)
+
+
+def _check_continuous_invariants(reqs, max_slots, kv_budget, overlap,
+                                 admit_frac):
+    reqs = sorted(reqs)
+    cb, done = _run_to_quiescence(reqs, max_slots, kv_budget, overlap,
+                                  admit_frac)
+    # conservation: every request completes exactly once, nothing lingers
+    assert sorted(req.rid for req, _ in done) == list(range(len(reqs)))
+    assert len(cb) == 0 and cb.n_completed == len(reqs)
+    # causality: a request cannot finish before arrival + full service
+    # (batching only stretches service, preemption only adds recompute)
+    for req, fin in done:
+        arr, svc, _ = reqs[req.rid]
+        assert fin >= arr + svc - 1e-9
+    # KV watermark never exceeds the budget — except when one request's
+    # footprint alone does (solo admission must still run it)
+    biggest = max((kv for _, _, kv in reqs), default=0.0)
+    assert cb.kv_high_watermark_bytes <= max(kv_budget, biggest) + 1e-6
+    # accounting: each preemption re-queues exactly one admission
+    assert cb.n_admitted == cb.n_completed + cb.n_preempted
+    assert cb.queue_delay_sum_s >= -1e-12
+
+
+def _check_no_starvation(reqs, max_slots, kv_budget, overlap, admit_frac,
+                         until_s):
+    """FIFO no-starvation: after a step, an arrived queue head is only
+    waiting because the machine genuinely cannot admit it — all slots
+    busy, or no KV headroom for its reservation."""
+    cb = ContinuousBatcher(max_slots, kv_budget, batch_overlap=overlap,
+                           kv_admit_frac=admit_frac)
+    for rid, (arr, svc, kv) in enumerate(sorted(reqs)):
+        cb.add(Request(rid, arr, 1), svc, kv)
+    cb.step(until_s)
+    if cb.queue and cb.queue[0].req.arrival_s <= cb.now_s:
+        head = cb.queue[0]
+        full = len(cb.slots) == cb.max_slots
+        res = cb.kv_admit_frac * head.kv_bytes
+        blocked = bool(cb.slots) and \
+            cb.occupancy_bytes() + res > cb.kv_budget_bytes + 1e-9
+        assert full or blocked
+
+
+def _check_micro_invariants(arrivals, batch_size, max_wait):
+    """MicroBatcher: FIFO order, batch-size cap, conservation."""
+    mb = MicroBatcher(batch_size, max_wait)
+    for rid, arr in enumerate(sorted(arrivals)):
+        mb.add(Request(rid, arr, 1))
+    seen = []
+    now = max(arrivals, default=0.0) + max_wait + 1.0
+    while True:
+        b = mb.maybe_form(now) or mb.flush(now)
+        if b is None:
+            break
+        assert len(b.requests) <= batch_size
+        seen.extend(r.rid for r in b.requests)
+    assert seen == list(range(len(arrivals)))     # FIFO + conservation
+
+
+_RNG_CASES = 40
+
+
+def _random_scenario(rng):
+    n = int(rng.integers(1, 13))
+    reqs = [(float(rng.uniform(0.0, 5.0)), float(rng.uniform(0.01, 3.0)),
+             float(rng.uniform(0.0, 2e6))) for _ in range(n)]
+    return (reqs, int(rng.integers(1, 7)), float(rng.uniform(1e5, 4e6)),
+            float(rng.uniform(0.0, 1.0)), float(rng.uniform(0.0, 1.0)))
+
+
+def test_continuous_invariants_seeded_sweep():
+    """Always-on fallback for the hypothesis properties: the same
+    invariant checkers over a deterministic random scenario sweep."""
+    rng = np.random.default_rng(1234)
+    for _ in range(_RNG_CASES):
+        args = _random_scenario(rng)
+        _check_continuous_invariants(*args)
+        _check_no_starvation(*args, until_s=float(rng.uniform(0.0, 8.0)))
+
+
+def test_micro_invariants_seeded_sweep():
+    rng = np.random.default_rng(99)
+    for _ in range(_RNG_CASES):
+        arrivals = [float(rng.uniform(0.0, 1.0))
+                    for _ in range(int(rng.integers(0, 20)))]
+        _check_micro_invariants(arrivals, int(rng.integers(1, 9)),
+                                float(rng.uniform(0.001, 0.1)))
+
+
+if HAVE_HYPOTHESIS:
+    _req = st.tuples(st.floats(0.0, 5.0), st.floats(0.01, 3.0),
+                     st.floats(0.0, 2e6))
+    _scenario = st.tuples(st.lists(_req, min_size=1, max_size=12),
+                          st.integers(1, 6), st.floats(1e5, 4e6),
+                          st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+
+    @settings(deadline=None)
+    @given(_scenario)
+    def test_continuous_invariants_property(case):
+        _check_continuous_invariants(*case)
+
+    @settings(deadline=None)
+    @given(_scenario, st.floats(0.0, 8.0))
+    def test_continuous_no_starvation_property(case, until_s):
+        _check_no_starvation(*case, until_s=until_s)
+
+    @settings(deadline=None)
+    @given(st.lists(st.floats(0.0, 1.0), max_size=20),
+           st.integers(1, 8), st.floats(0.001, 0.1))
+    def test_micro_invariants_property(arrivals, batch_size, max_wait):
+        _check_micro_invariants(arrivals, batch_size, max_wait)

@@ -4,8 +4,9 @@ drifts from what downstream consumers (perf-trajectory tooling, the
 EXPERIMENTS.md tables, cross-PR diffs) expect.
 
 The schema is versioned: ``benchmarks/fleet_bench.py`` stamps
-``schema_version`` (currently 2 — the version that added the
-``streamed`` section) and this checker validates
+``schema_version`` (currently 3 — the version that added the ``queue``
+section: continuous batching + queue-aware planning) and this checker
+validates
 
 * the top-level sections and their per-entry keys,
 * value sanity (latencies positive and finite, p50 <= p95, counters
@@ -25,10 +26,10 @@ import math
 import sys
 from typing import List
 
-EXPECTED_SCHEMA_VERSION = 2
+EXPECTED_SCHEMA_VERSION = 3
 
 TOP_SECTIONS = ("schema_version", "config", "planner", "fleet", "codecs",
-                "multicut", "streamed")
+                "multicut", "streamed", "queue")
 CONFIG_KEYS = ("n_robots", "n_ticks", "n_replicas", "seed", "smoke")
 PLANNER_KEYS = ("scalar_s", "vec_s", "cells", "codec_scalar_s",
                 "codec_vec_s", "codec_cells", "multicut_scalar_s",
@@ -39,6 +40,10 @@ CODEC_ENTRY_KEYS = ("p50_s", "p95_s", "throughput_rps")
 MULTICUT_ENTRY_KEYS = ("p50_s", "p95_s", "n_multicut_requests")
 STREAMED_ENTRY_KEYS = ("p50_s", "p95_s", "n_streamed_requests",
                        "n_chunk_reconfigs", "mean_bubble_frac")
+QUEUE_ENTRY_KEYS = ("p50_s", "p95_s", "n_preemptions",
+                    "mean_queue_delay_s", "kv_high_watermark_bytes")
+# the queue comparison needs its baseline and both continuous rows
+QUEUE_REQUIRED_TAGS = ("micro_blind", "cont_blind", "cont_aware")
 
 
 def _finite_pos(x) -> bool:
@@ -93,6 +98,20 @@ def check(payload: dict) -> List[str]:
     entries("codecs", CODEC_ENTRY_KEYS)
     entries("multicut", MULTICUT_ENTRY_KEYS)
     entries("streamed", STREAMED_ENTRY_KEYS)
+    entries("queue", QUEUE_ENTRY_KEYS)
+    for t in QUEUE_REQUIRED_TAGS:
+        need(t in payload.get("queue", {}), f"queue missing entry {t!r}")
+    for tag, entry in payload.get("queue", {}).items():
+        v = entry.get("n_preemptions")
+        if v is not None:
+            need(isinstance(v, int) and v >= 0,
+                 f"queue[{tag!r}].n_preemptions must be a non-negative int")
+        for k in ("mean_queue_delay_s", "kv_high_watermark_bytes"):
+            v = entry.get(k)
+            if v is not None:
+                need(isinstance(v, (int, float)) and math.isfinite(v)
+                     and v >= 0,
+                     f"queue[{tag!r}].{k} must be non-negative finite")
     for tag, entry in payload.get("streamed", {}).items():
         bf = entry.get("mean_bubble_frac")
         if bf is not None:
@@ -128,7 +147,8 @@ def main() -> int:
     if errs:
         return 1
     print(f"{args.path}: schema v{payload['schema_version']} OK "
-          f"({len(payload['streamed'])} streamed entries)")
+          f"({len(payload['streamed'])} streamed, "
+          f"{len(payload['queue'])} queue entries)")
     return 0
 
 

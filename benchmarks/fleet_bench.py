@@ -38,6 +38,12 @@ Four measurements:
    alongside ``n_preemptions`` / ``mean_queue_delay_s`` /
    ``kv_high_watermark_bytes`` (docs/EXPERIMENTS.md §Queue-aware).
 
+7. **Scale**: the event-driven engine (``runtime/events.py``) at
+   10k robots × 2000 ticks (1k in smoke) with the chaos schedule and an
+   open-loop Poisson stream — wall time plus the p99/p99.9 tail
+   percentiles only a fleet this size can estimate
+   (docs/EXPERIMENTS.md §Scale).
+
 The machine-readable payload written to ``BENCH_fleet.json`` carries a
 ``schema_version`` field validated by ``tools/check_bench_schema.py``
 (wired into CI next to the doc-link check).
@@ -70,8 +76,9 @@ CODEC_AXIS = ("identity", "int8", "int4")
 # BENCH_fleet.json schema version — bump when payload sections/keys
 # change; tools/check_bench_schema.py validates the emitted file
 # (v3: added the "queue" section — continuous batching + queue-aware
-# planning)
-BENCH_SCHEMA_VERSION = 3
+# planning; v4: added the "scale" section — event-engine 10k-robot run
+# with p99/p99.9 tails and open-loop arrival traffic)
+BENCH_SCHEMA_VERSION = 4
 # multi-cut scenario: per-robot cloud quota (a shared cloud cannot host
 # every robot's full tail) + asymmetric WAN (downlink 8x the uplink)
 MULTICUT_QUOTA_BYTES = 5.8e9
@@ -82,6 +89,13 @@ MULTICUT_POINTS_BPS = (10e6, 1e6, 0.2e6)
 # actually fires in the comparison row
 QUEUE_BW_BPS = 1e6
 QUEUE_TIGHT_KV_BYTES = 1.5e8
+# scale scenario: the event-engine acceptance run — 10k robots x 2000
+# ticks with the chaos schedule and an open-loop Poisson stream, under a
+# 60 s wall budget; smoke shrinks to 1k robots (the CI scale-smoke step
+# asserts its own wall budget against the emitted payload)
+SCALE_ROBOTS, SCALE_TICKS, SCALE_REPLICAS = 10_000, 2_000, 6
+SCALE_SMOKE_ROBOTS, SCALE_SMOKE_TICKS = 1_000, 200
+SCALE_ARRIVAL_HZ = 50.0
 
 
 # ---------------------------------------------------------------- planner
@@ -307,6 +321,25 @@ def bench_queue(n_robots: int = 16, n_ticks: int = 200,
     ]
 
 
+def bench_scale(n_robots: int = SCALE_ROBOTS, n_ticks: int = SCALE_TICKS,
+                n_replicas: int = SCALE_REPLICAS, seed: int = 7):
+    """Event-engine scale run (``runtime/events.py``): chaos schedule plus
+    an open-loop Poisson stream at 10k-robot scale — the regime where the
+    dense tick loop's every-robot-every-tick scan stops being viable and
+    the p99/p99.9 tail percentiles start meaning something.  Returns
+    ``(FleetReport, wall_s)``."""
+    from repro.runtime.fleet import ArrivalProcess
+    cfg = FleetConfig(
+        n_robots=n_robots, n_ticks=n_ticks, n_replicas=n_replicas,
+        batch_size=16, seed=seed, engine="events",
+        arrival_processes=(ArrivalProcess("users",
+                                          rate_hz=SCALE_ARRIVAL_HZ),))
+    cfg.replica_events = outage_schedule(cfg)
+    t0 = time.perf_counter()
+    rep = run_fleet(cfg)
+    return rep, time.perf_counter() - t0
+
+
 def print_report(rep: FleetReport) -> None:
     print(f"\n{'robot':9s} {'arch':22s} {'n':>4s} {'p50 ms':>8s} "
           f"{'p95 ms':>8s} {'mean ms':>8s}")
@@ -334,6 +367,7 @@ def run_with_json(quiet: bool = False, n_robots: int = 24,
     payload: Dict = {"schema_version": BENCH_SCHEMA_VERSION,
                      "planner": {}, "fleet": {}, "codecs": {},
                      "multicut": {}, "streamed": {}, "queue": {},
+                     "scale": {},
                      "config": {
                          "n_robots": n_robots, "n_ticks": n_ticks,
                          "n_replicas": n_replicas, "seed": seed,
@@ -426,6 +460,24 @@ def run_with_json(quiet: bool = False, n_robots: int = 24,
             "n_preemptions": qrep.n_preemptions,
             "mean_queue_delay_s": qrep.mean_queue_delay_s,
             "kv_high_watermark_bytes": qrep.kv_high_watermark_bytes}
+    sc_robots = SCALE_SMOKE_ROBOTS if smoke else SCALE_ROBOTS
+    sc_ticks = SCALE_SMOKE_TICKS if smoke else SCALE_TICKS
+    srep_scale, sc_wall = bench_scale(sc_robots, sc_ticks)
+    payload["scale"] = {
+        "engine": "events",
+        "n_robots": sc_robots, "n_ticks": sc_ticks,
+        "wall_s": sc_wall,
+        "p50_s": srep_scale.fleet_p50_s, "p95_s": srep_scale.fleet_p95_s,
+        "p99_s": srep_scale.fleet_p99_s,
+        "p999_s": srep_scale.fleet_p999_s,
+        "n_requests": srep_scale.n_requests,
+        "n_open_arrivals": srep_scale.n_open_arrivals,
+        "throughput_rps": srep_scale.throughput_rps}
+    lines += [
+        f"fleet_scale_wall,{sc_wall * 1e6:.0f},{sc_robots}robots",
+        f"fleet_scale_p999,{srep_scale.fleet_p999_s * 1e6:.0f},"
+        f"{srep_scale.n_requests}reqs",
+    ]
     if not quiet:
         print(f"planner: scalar {scalar_s * 1e3:.1f} ms vs vectorized "
               f"{vec_s * 1e3:.2f} ms over {cells} (model × bandwidth) cells "
@@ -481,6 +533,14 @@ def run_with_json(quiet: bool = False, n_robots: int = 24,
                   f"{qrep.n_preemptions:8d} "
                   f"{qrep.mean_queue_delay_s * 1e3:10.2f} "
                   f"{qrep.kv_high_watermark_bytes / 1e6:9.1f}")
+        print(f"\nevent-engine scale run ({sc_robots} robots x "
+              f"{sc_ticks} ticks, chaos + {SCALE_ARRIVAL_HZ:g} req/s "
+              f"open-loop): wall {sc_wall:.1f} s, "
+              f"{srep_scale.n_requests} closed-loop reqs + "
+              f"{srep_scale.n_open_arrivals} arrivals, "
+              f"p50 {srep_scale.fleet_p50_s * 1e3:.0f} ms, "
+              f"p99 {srep_scale.fleet_p99_s * 1e3:.0f} ms, "
+              f"p99.9 {srep_scale.fleet_p999_s * 1e3:.0f} ms")
     return lines, payload
 
 

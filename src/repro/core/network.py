@@ -188,6 +188,17 @@ class NetworkSim:
     def step(self, n: int = 1) -> None:
         self.t += n
 
+    def seek(self, tick: int) -> None:
+        """Jump the trace cursor to an absolute tick index.
+
+        The tick loop advances every robot's link once per tick
+        (``step()``), so at tick ``T`` a robot's net always sits at
+        ``t == T``.  The event-driven engine skips the per-tick walk and
+        positions the cursor absolutely before pricing — ``seek(T)``
+        followed by the same ``now_bps`` / ``wire_trace_s`` reads is
+        bit-identical to having stepped ``T`` times."""
+        self.t = int(tick)
+
     def window(self, n: int) -> np.ndarray:
         """Last n observed bandwidth samples (for the predictor)."""
         lo = max(0, self.t - n)

@@ -30,6 +30,13 @@ class Pool:
     def contains(self, split: int) -> bool:
         return self.start <= split <= self.end
 
+    def clamp(self, split: int) -> int:
+        """Nearest in-pool split position: a planned cut outside
+        ``[start, end]`` would ship weights, so it snaps to the pool
+        edge.  Equivalent to ``np.clip(split, start, end)`` but stays in
+        plain Python ints — the fleet hot path calls this per request."""
+        return min(max(int(split), self.start), self.end)
+
 
 def build_pool(graph: Sequence[LayerCost], optimal_split: int,
                overhead_target: float = 0.026) -> Pool:

@@ -77,6 +77,7 @@ Simulation loop (one control tick = ``tick_s`` seconds):
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
@@ -99,10 +100,49 @@ from .scheduler import (ContinuousBatcher, ElasticPool, MicroBatcher,
 # ------------------------------------------------------------------ config
 @dataclasses.dataclass(frozen=True)
 class ReplicaEvent:
-    """Scheduled availability change: replica leaves or joins at ``tick``."""
+    """Scheduled availability change: replica leaves or joins at ``tick``.
+
+    Carries a TOTAL order ``(tick, kind, replica)`` so that schedules
+    containing a leave and a join on the same tick sort deterministically
+    regardless of the input list's construction order (``sorted`` is
+    stable, so a key on ``tick`` alone preserves whatever order the
+    caller happened to build — two logically identical schedules could
+    replay differently).  At equal ticks ``"join" < "leave"``, i.e. the
+    leave is applied last and wins the tick."""
     tick: int
     replica: str
     kind: str                    # "leave" | "join"
+
+    def _key(self):
+        return (self.tick, self.kind, self.replica)
+
+    def __lt__(self, other: "ReplicaEvent") -> bool:
+        if not isinstance(other, ReplicaEvent):
+            return NotImplemented
+        return self._key() < other._key()
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalProcess:
+    """Open-loop request traffic alongside the closed-loop robots
+    (``engine="events"`` only): stateless one-shot requests of ``arch``
+    arriving as a Poisson stream (``kind="poisson"``) or a sinusoidally
+    modulated Poisson stream (``kind="diurnal"``, thinned against the
+    peak rate ``rate_hz * (1 + diurnal_amp)``).  Each process rides its
+    own seeded bandwidth trace (or a fixed ``bw_bps``) and its own RNG
+    stream, so adding processes never perturbs the closed-loop robots'
+    draw order.  Arrivals look up the shared plan table at their
+    process link bandwidth, pay the same edge/uplink/cloud/downlink legs
+    as robots, and are batched on the same replicas — but hold no
+    controller state (no pool clamps, no sticky codec) and never
+    re-issue: they model external users, not robots."""
+    name: str
+    arch: str = "openvla-7b"
+    kind: str = "poisson"          # "poisson" | "diurnal"
+    rate_hz: float = 5.0           # mean arrival rate over the run
+    diurnal_amp: float = 0.5       # relative amplitude, kind="diurnal"
+    diurnal_period_s: float = 30.0
+    bw_bps: Optional[float] = None  # fixed link; None -> own seeded trace
 
 
 @dataclasses.dataclass
@@ -183,6 +223,32 @@ class FleetConfig:
     cloud: DeviceSpec = A100
     replica_events: Sequence[ReplicaEvent] = ()
     seed: int = 0
+    # simulation engine: "ticks" replays the historical per-tick loop;
+    # "events" runs the sparse event-driven core (runtime/events.py) —
+    # proven FleetReport-dataclass-equal to the tick loop on every
+    # parity-matrix config (tests/test_engine_parity.py) and the only
+    # engine that scales to 10k+ robots (busy robots cost nothing).
+    engine: str = "ticks"
+    # open-loop arrival traffic (events engine only; the tick loop
+    # refuses it — it has no sub-tick arrival machinery)
+    arrival_processes: Sequence[ArrivalProcess] = ()
+    # SLO-based admission control for open-loop arrivals: reject (serve
+    # edge-only, counted in n_slo_rejections) when the estimated cloud
+    # wait exceeds slo_s.  None disables.  Closed-loop robots are never
+    # rejected — their backpressure is the closed loop itself.
+    slo_s: Optional[float] = None
+    # ElasticPool-driven replica autoscaling (events engine only): every
+    # autoscale_every ticks an AutoScaler (runtime/scheduler.py) compares
+    # mean backlog per routable replica against the high/low watermarks
+    # and joins/leaves one replica inside [autoscale_min, autoscale_max].
+    # Replicas beyond the initial live set are provisioned as cold spares
+    # via tick-0 leave events in replica_events.
+    autoscale: bool = False
+    autoscale_every: int = 20
+    autoscale_min: int = 1
+    autoscale_max: Optional[int] = None    # None -> n_replicas
+    autoscale_high_s: float = 0.25
+    autoscale_low_s: float = 0.02
 
 
 def outage_schedule(cfg: FleetConfig) -> List[ReplicaEvent]:
@@ -197,7 +263,7 @@ def outage_schedule(cfg: FleetConfig) -> List[ReplicaEvent]:
     for i in range(cfg.n_replicas):
         ev.append(ReplicaEvent(3 * T // 5, f"cloud{i}", "leave"))
         ev.append(ReplicaEvent(7 * T // 10, f"cloud{i}", "join"))
-    return sorted(ev, key=lambda e: e.tick)
+    return sorted(ev)          # ReplicaEvent total order: (tick, kind, name)
 
 
 # ------------------------------------------------------------------ report
@@ -211,6 +277,21 @@ class RobotStats:
     p95_s: float
     codec: str = "identity"      # codec the robot ended the run on
     n_chunks: int = 1            # chunk count the robot ended the run on
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessStats:
+    """Per-arrival-process latency breakdown (open-loop traffic only)."""
+    name: str
+    kind: str
+    n_arrivals: int
+    n_completed: int
+    n_rejected: int              # SLO admission rejections (served edge-only)
+    mean_s: float
+    p50_s: float
+    p95_s: float
+    p99_s: float
+    p999_s: float
 
 
 @dataclasses.dataclass(frozen=True)
@@ -236,6 +317,16 @@ class FleetReport:
     n_preemptions: int = 0            # KV-budget evictions (recomputed)
     mean_queue_delay_s: float = 0.0   # cloud admission wait per completion
     kv_high_watermark_bytes: float = 0.0   # peak per-replica KV occupancy
+    # tail percentiles over the fleet latency series — the scale story:
+    # p99/p99.9 only mean anything with thousands of robots' worth of
+    # samples, which is what the event engine exists to provide
+    fleet_p99_s: float = 0.0
+    fleet_p999_s: float = 0.0
+    # open-loop arrival traffic (events engine; empty/zero otherwise)
+    processes: tuple = ()             # tuple[ProcessStats, ...]
+    n_open_arrivals: int = 0          # arrivals generated across processes
+    n_slo_rejections: int = 0         # arrivals rejected by SLO admission
+    n_autoscale_events: int = 0       # replicas joined/left by the scaler
 
     def summary(self) -> str:
         return (f"{len(self.robots)} robots, {self.n_requests} requests: "
@@ -259,6 +350,7 @@ class _CloudWork:
     cloud_s: float
     down_s: float = 0.0          # downlink leg + edge tail (multi-cut only)
     two_cut: bool = False        # issued on a real (S2 < n) placement
+    proc: int = -1               # arrival-process index; -1 = robot traffic
 
 
 # --------------------------------------------------------------- simulator
@@ -293,6 +385,10 @@ class FleetSimulator:
         # the NEAREST grid bin in log space (plain searchsorted on the grid
         # would always round up to the plan of a faster link)
         self._bw_mid = np.sqrt(self.bw_grid[:-1] * self.bw_grid[1:])
+        # plain-float copy for the per-request lookup: bisect_left on a
+        # list is ~10x a scalar np.searchsorted and bit-identical to
+        # side="left" (same total order on finite floats)
+        self._bw_mid_list = [float(x) for x in self._bw_mid]
         (self.plan, self.plan_s2, self.plan_codec,
          self.plan_chunks) = self._build_plans(0.0)
         # queue-aware planning: estimate the per-replica arrival rate the
@@ -313,8 +409,12 @@ class FleetSimulator:
         # same codec prices the controller's Alg. 1 (so replan() after an
         # outage restores a codec-consistent split)
         k0 = int(np.searchsorted(self._bw_mid, cfg.nominal_bw_bps))
-        self.codec_of: List[int] = [
-            int(self.plan_codec[a][k0]) for a in self.arch_of]
+        # robot state is struct-of-arrays: at 10k+ robots, per-robot
+        # Python objects dominate memory and attribute access dominates
+        # time; int64/float64 arrays keep the hot path flat
+        self.codec_of = np.asarray(
+            [int(self.plan_codec[a][k0]) for a in self.arch_of],
+            dtype=np.int64)
         self.controllers: List[RoboECC] = [
             RoboECC(get_config(a), cfg.edge, cfg.cloud,
                     workload=cfg.workload,
@@ -333,12 +433,20 @@ class FleetSimulator:
                     queue_service_scale=cfg.queue_service_scale)
             for i, a in enumerate(self.arch_of)]
         # per-robot effective placement state (for n_cut_moves)
-        self.place_of: List[tuple] = [
-            (int(self.plan[a][k0]), int(self.plan_s2[a][k0]))
-            for a in self.arch_of]
+        self.place_s1 = np.asarray([int(self.plan[a][k0])
+                                    for a in self.arch_of], dtype=np.int64)
+        self.place_s2 = np.asarray([int(self.plan_s2[a][k0])
+                                    for a in self.arch_of], dtype=np.int64)
         # per-robot streaming chunk state (for n_chunk_reconfigs)
-        self.chunks_of: List[int] = [
-            int(self.plan_chunks[a][k0]) for a in self.arch_of]
+        self.chunks_of = np.asarray([int(self.plan_chunks[a][k0])
+                                     for a in self.arch_of], dtype=np.int64)
+        # per-robot pool bounds, cached as Pool objects: pools only move
+        # on replan(), so _on_replicas refreshes the cache and the
+        # per-request path clamps against plain ints (Pool.clamp) instead
+        # of chasing controller attributes + np.clip
+        self._pools1: List = [None] * cfg.n_robots
+        self._pools2: List = [None] * cfg.n_robots
+        self._refresh_pool_cache()
         self.nets: List[NetworkSim] = [
             NetworkSim(generate_trace(cfg.n_ticks + 1, cfg.trace,
                                       seed=cfg.seed * 100_003 + i),
@@ -373,8 +481,19 @@ class FleetSimulator:
         self._cloud_up = True
         self._pending: Dict[int, _CloudWork] = {}
         self._next_wid = 0
-        self.next_free: List[float] = [0.0] * cfg.n_robots
+        self.next_free = np.zeros(cfg.n_robots, dtype=np.float64)
         self.latencies: List[List[float]] = [[] for _ in range(cfg.n_robots)]
+        # engine hooks (events engine only; None = tick loop, no-ops):
+        # _wake(robot) fires after _complete releases a robot's closed
+        # loop, _enq(replica) after cloud work lands on a replica
+        self._wake = None
+        self._enq = None
+        # open-loop arrival traffic state (events engine fills these)
+        self.proc_latencies: List[List[float]] = [
+            [] for _ in cfg.arrival_processes]
+        self.proc_arrivals = [0] * len(cfg.arrival_processes)
+        self.proc_rejections = [0] * len(cfg.arrival_processes)
+        self.n_autoscale = 0
         self.n_hedged = 0
         self.n_replans = 0
         self.n_outage_completions = 0
@@ -466,6 +585,21 @@ class FleetSimulator:
                 lam += 1.0 / total
         return lam / max(1, cfg.n_replicas)
 
+    @property
+    def place_of(self) -> List[tuple]:
+        """Compatibility view of the per-robot placement state (the
+        struct-of-arrays refactor split it into ``place_s1``/``place_s2``)."""
+        return list(zip(self.place_s1.tolist(), self.place_s2.tolist()))
+
+    def _refresh_pool_cache(self) -> None:
+        """Re-snapshot every robot's parameter-sharing pools.  Pools move
+        only inside ``RoboECC.replan()``, so this runs at construction and
+        after each ``_on_replicas`` replan wave — the per-request clamp
+        then never touches the controller."""
+        for i, ctl in enumerate(self.controllers):
+            self._pools1[i] = ctl.pool
+            self._pools2[i] = getattr(ctl, "pool2", None)
+
     # ----------------------------------------------------------- elasticity
     def _on_replicas(self, live: List[str]) -> None:
         """ElasticPool transition: full outage → every robot replans to
@@ -477,6 +611,7 @@ class FleetSimulator:
                 ctl.replan(cloud=self._dead_cloud,
                            nominal_bw_bps=cfg.nominal_bw_bps)
                 self.n_replans += 1
+            self._refresh_pool_cache()
         elif live and not self._cloud_up:
             self._cloud_up = True
             for ctl in self.controllers:
@@ -484,6 +619,7 @@ class FleetSimulator:
                            cloud_budget_bytes=cfg.cloud_budget_bytes,
                            nominal_bw_bps=cfg.nominal_bw_bps)
                 self.n_replans += 1
+            self._refresh_pool_cache()
 
     # ------------------------------------------------------------- planning
     def _planned_placement(self, robot: int, bw_bps: float) -> tuple:
@@ -499,7 +635,7 @@ class FleetSimulator:
         clamped placements where streaming does not apply reset it to 1.
         Returns ``(s1, s2, n_chunks)``."""
         arch = self.arch_of[robot]
-        k = int(np.searchsorted(self._bw_mid, bw_bps))
+        k = bisect.bisect_left(self._bw_mid_list, bw_bps)
         n = self.arrays[arch].n
         s1_plan = int(self.plan[arch][k])
         s2_plan = int(self.plan_s2[arch][k])
@@ -513,16 +649,15 @@ class FleetSimulator:
             if ci != self.codec_of[robot]:
                 self.codec_of[robot] = ci
                 self.n_codec_switches += 1
-        ctl = self.controllers[robot]
-        s1 = int(np.clip(s1_plan, ctl.pool.start, ctl.pool.end))
-        pool2 = getattr(ctl, "pool2", None)
+        s1 = self._pools1[robot].clamp(s1_plan)
+        pool2 = self._pools2[robot]
         if pool2 is not None:
-            s2 = int(np.clip(s2_plan, pool2.start, pool2.end))
-            s2 = max(s1, s2)
+            s2 = max(s1, pool2.clamp(s2_plan))
         else:
             s2 = n
-        if (s1, s2) != self.place_of[robot]:
-            self.place_of[robot] = (s1, s2)
+        if s1 != self.place_s1[robot] or s2 != self.place_s2[robot]:
+            self.place_s1[robot] = s1
+            self.place_s2[robot] = s2
             self.n_cut_moves += 1
         kc = int(self.plan_chunks[arch][k]) if self.cfg.streamed else 1
         if not (s1 < s2 and stream_applies(
@@ -573,9 +708,23 @@ class FleetSimulator:
     # ------------------------------------------------------------ execution
     def _complete(self, robot: int, issued_s: float, latency_s: float) -> None:
         """Fold a finished request into the robot's series and release the
-        robot's control loop (closed loop: one outstanding request each)."""
+        robot's control loop (closed loop: one outstanding request each).
+        The events engine hooks ``_wake`` to schedule the robot's next
+        control step; the tick loop polls ``next_free`` instead."""
         self.latencies[robot].append(latency_s)
         self.next_free[robot] = issued_s + latency_s
+        if self._wake is not None:
+            self._wake(robot)
+
+    def _deliver(self, it: _CloudWork, latency_s: float) -> None:
+        """Route a finished piece of work to its owner: closed-loop robots
+        fold into ``_complete`` (releasing the control loop), open-loop
+        arrivals into their process latency series (nothing to release —
+        a one-shot request has no issuer waiting)."""
+        if it.proc >= 0:
+            self.proc_latencies[it.proc].append(latency_s)
+        else:
+            self._complete(it.robot, it.issued_s, latency_s)
 
     def _execute(self, requests: Sequence[Request], live: List[str]) -> None:
         """Run one formed batch on the best replica, hedging stragglers."""
@@ -606,9 +755,9 @@ class FleetSimulator:
             # outage fallbacks re-execute edge-only and don't.
             if it.two_cut:
                 self.n_multicut_requests += 1
-            self._complete(it.robot, it.issued_s, it.edge_s + it.net_s
-                           + (ready - it.ready_s) + out.latency_s
-                           + it.down_s)
+            self._deliver(it, it.edge_s + it.net_s
+                          + (ready - it.ready_s) + out.latency_s
+                          + it.down_s)
 
     def _finish_cont(self, req: Request, fin_s: float) -> None:
         """Fold one continuous-tier completion: the robot pays its edge +
@@ -617,9 +766,8 @@ class FleetSimulator:
         it = self._pending.pop(req.rid)
         if it.two_cut:
             self.n_multicut_requests += 1
-        self._complete(it.robot, it.issued_s,
-                       it.edge_s + it.net_s + (fin_s - it.ready_s)
-                       + it.down_s)
+        self._deliver(it, it.edge_s + it.net_s + (fin_s - it.ready_s)
+                      + it.down_s)
 
     def _drain_dead_cont(self, routable: List[str]) -> None:
         """Continuous tier: a dead replica's slots and queue are evicted
@@ -640,20 +788,175 @@ class FleetSimulator:
         """Cloud unavailable with work in flight: re-execute the request
         entirely on its robot's edge device (uplink time already spent is
         kept as sunk cost)."""
-        arrays = self.arrays[self.arch_of[it.robot]]
+        arch = (self.arch_of[it.robot] if it.proc < 0
+                else self.cfg.arrival_processes[it.proc].arch)
+        arrays = self.arrays[arch]
         edge_only = float(arrays.edge_s[arrays.n])
-        self._complete(it.robot, it.issued_s,
-                       it.edge_s + it.net_s + edge_only)
+        self._deliver(it, it.edge_s + it.net_s + edge_only)
         self.n_outage_completions += 1
 
     def _fallback(self, requests: Sequence[Request]) -> None:
         for rq in requests:
             self._fallback_one(self._pending.pop(rq.rid))
 
+    # --------------------------------------------------- shared phase bodies
+    # Both engines call these EXACT bodies.  The parity proof
+    # (tests/test_engine_parity.py: FleetReport dataclass-equal across the
+    # whole config matrix) rests on the event engine replaying the same
+    # arithmetic in the same order, just sparsely — so the phase bodies
+    # live here once, and the engines only differ in *when* they call them.
+
+    def _robot_step(self, i: int, now: float, routable: List[str]) -> None:
+        """One closed-loop control step for a free robot: plan, price,
+        enqueue cloud work (or complete locally).  The caller guarantees
+        ``now >= next_free[i]`` and that ``nets[i]`` sits at this tick."""
+        cfg = self.cfg
+        net = self.nets[i]
+        bw = net.now_bps
+        arrays = self.arrays[self.arch_of[i]]
+        down, two_cut = 0.0, False
+        if self._cloud_up:
+            s1, s2, kc = self._planned_placement(i, bw)
+            cdc = self.codecs[self.codec_of[i]]
+            if s2 < arrays.n:
+                # real 2-cut placement: the edge head runs before the
+                # uplink, the edge tail after the downlink — only the
+                # head gates when the cloud can start
+                eh, c, t, dn = arrays.placement_latency(
+                    s1, s2, bw, cfg.rtt_s, codec=cdc,
+                    down_bw_factor=cfg.down_bw_factor)
+                tail = float(arrays.edge_s[arrays.n] - arrays.edge_s[s2])
+                e = eh - tail
+                down = dn + tail
+                two_cut = True
+            else:
+                e, c, t = arrays.latency(s1, bw, cfg.rtt_s, codec=cdc)
+            if kc > 1 and c > 0.0:
+                # streamed uplink: chunk transfers drawn from the
+                # PER-TICK trace (not one frozen bandwidth) while the
+                # cloud window prefills arrived chunks; the exposed
+                # transport time replaces the sequential uplink leg
+                t, bub = self._stream_uplink(i, arrays, s1, cdc, e, c)
+                self.n_streamed_requests += 1
+                self._bubble_sum += bub
+        else:
+            e, c, t = float(arrays.edge_s[arrays.n]), 0.0, 0.0
+        net.step()                      # link evolves every tick
+        if c > 0.0 and routable:
+            wid = self._next_wid
+            self._next_wid += 1
+            work = _CloudWork(i, now, now + e + t, e, t, c, down, two_cut)
+            self._pending[wid] = work
+            self.next_free[i] = float("inf")   # until completion
+            if cfg.continuous:
+                # continuous tier: the straggler multiplier is drawn per
+                # request at enqueue (batching efficiency lives in the
+                # batcher's eff(k) model), the window's analytic KV
+                # footprint is priced from the suffix cumsums, and
+                # routing is least-backlog rather than EWMA-primary
+                slow = float(np.exp(self.rng.normal(
+                    0.0, cfg.straggler_sigma)))
+                if self.rng.random() < cfg.tail_prob:
+                    slow *= cfg.tail_scale
+                kvc = self.kv_cumsum[self.arch_of[i]]
+                replica = min(routable, key=lambda r:
+                              self.cbatchers[r].backlog_s)
+                self.cbatchers[replica].add(
+                    Request(wid, now + e + t, 0), c * slow,
+                    float(kvc[s1] - kvc[s2]))
+            else:
+                replica = self.mitigator.pick_primary(routable)
+                self.batchers[replica].add(Request(wid, now + e + t, 0))
+            if self._enq is not None:
+                self._enq(replica)
+        elif c > 0.0:
+            # planned a collaborative split but no replica accepts work
+            # (undetected outage window): edge re-execution
+            self._fallback_one(_CloudWork(i, now, now + e + t,
+                                          e, t, c, down, two_cut))
+        else:
+            # no cloud work: complete locally.  ``down`` is normally 0
+            # here, but a clamped placement degenerating to an empty
+            # cloud window still owes its edge-tail compute
+            self._complete(i, now, e + t + down)
+            if not self._cloud_up:
+                self.n_outage_completions += 1
+
+    def _drain_dead(self, now: float, routable: List[str]) -> None:
+        """Replicas that died with queued work: re-route or fall back."""
+        if self.cfg.continuous:
+            self._drain_dead_cont(routable)
+            return
+        for r in self.replica_names:
+            if r in self._down and self.batchers[r].queue:
+                if routable:
+                    for rq in list(self.batchers[r].queue):
+                        self.batchers[self.mitigator.pick_primary(
+                            routable)].add(rq)
+                    self.batchers[r].queue.clear()
+                else:
+                    batch = self.batchers[r].flush(now)
+                    while batch is not None:
+                        self._fallback(batch.requests)
+                        batch = self.batchers[r].flush(now)
+
+    def _service_replica(self, r: str, end: float,
+                         routable: List[str]) -> None:
+        """Advance one accepting replica's service to the tick boundary:
+        micro-batches form and execute, the continuous tier's event loop
+        runs to ``end`` and completions release robots."""
+        if self.cfg.continuous:
+            for req, fin in self.cbatchers[r].step(end):
+                self._finish_cont(req, fin)
+        else:
+            batch = self.batchers[r].maybe_form(end)
+            while batch is not None:
+                self._execute(batch.requests, routable)
+                batch = self.batchers[r].maybe_form(end)
+
+    def _final_drain(self) -> None:
+        """Drain whatever is still queued at the end of the run."""
+        cfg = self.cfg
+        end = cfg.n_ticks * cfg.tick_s
+        routable = [r for r in self.replica_names if r not in self._down]
+        if cfg.continuous:
+            self._drain_dead_cont(routable)
+            for r in routable:
+                for req, fin in self.cbatchers[r].step(None):
+                    self._finish_cont(req, fin)
+        else:
+            for r in self.replica_names:
+                batch = self.batchers[r].flush(end)
+                while batch is not None:
+                    if routable:
+                        self._execute(batch.requests, routable)
+                    else:
+                        self._fallback(batch.requests)
+                    batch = self.batchers[r].flush(end)
+
     # ------------------------------------------------------------------ run
     def run(self) -> FleetReport:
         cfg = self.cfg
-        events = sorted(cfg.replica_events, key=lambda e: e.tick)
+        if cfg.engine == "events":
+            from .events import EventEngine   # lazy: avoids import cycle
+            return EventEngine(self).run()
+        if cfg.engine != "ticks":
+            raise ValueError(f"unknown engine {cfg.engine!r} "
+                             "(expected 'ticks' or 'events')")
+        if cfg.arrival_processes:
+            raise ValueError("arrival_processes require engine='events' "
+                             "(the tick loop has no sub-tick arrivals)")
+        if cfg.autoscale:
+            raise ValueError("autoscale requires engine='events'")
+        return self._run_ticks()
+
+    def _run_ticks(self) -> FleetReport:
+        """The historical dense per-tick loop: every robot and replica is
+        visited every tick.  Kept as the parity oracle for the event
+        engine — and still the simplest thing to read when tracing a
+        small run by hand."""
+        cfg = self.cfg
+        events = sorted(cfg.replica_events)
         ei = 0
         for tick in range(cfg.n_ticks):
             now = tick * cfg.tick_s
@@ -674,135 +977,19 @@ class FleetSimulator:
             # ---- robots take one control step each (closed loop: a robot
             # issues its next observation once the previous action returned)
             for i in range(cfg.n_robots):
-                net = self.nets[i]
-                bw = net.now_bps
                 if now < self.next_free[i]:
-                    net.step()                  # link evolves every tick
+                    self.nets[i].step()         # link evolves every tick
                     continue                    # previous request in flight
-                arrays = self.arrays[self.arch_of[i]]
-                down, two_cut = 0.0, False
-                if self._cloud_up:
-                    s1, s2, kc = self._planned_placement(i, bw)
-                    cdc = self.codecs[self.codec_of[i]]
-                    if s2 < arrays.n:
-                        # real 2-cut placement: the edge head runs before
-                        # the uplink, the edge tail after the downlink —
-                        # only the head gates when the cloud can start
-                        eh, c, t, dn = arrays.placement_latency(
-                            s1, s2, bw, cfg.rtt_s, codec=cdc,
-                            down_bw_factor=cfg.down_bw_factor)
-                        tail = float(arrays.edge_s[arrays.n]
-                                     - arrays.edge_s[s2])
-                        e = eh - tail
-                        down = dn + tail
-                        two_cut = True
-                    else:
-                        e, c, t = arrays.latency(s1, bw, cfg.rtt_s,
-                                                 codec=cdc)
-                    if kc > 1 and c > 0.0:
-                        # streamed uplink: chunk transfers drawn from the
-                        # PER-TICK trace (not one frozen bandwidth) while
-                        # the cloud window prefills arrived chunks; the
-                        # exposed transport time replaces the sequential
-                        # uplink leg
-                        t, bub = self._stream_uplink(i, arrays, s1, cdc,
-                                                     e, c)
-                        self.n_streamed_requests += 1
-                        self._bubble_sum += bub
-                else:
-                    e, c, t = float(arrays.edge_s[arrays.n]), 0.0, 0.0
-                net.step()                      # link evolves every tick
-                if c > 0.0 and routable:
-                    wid = self._next_wid
-                    self._next_wid += 1
-                    work = _CloudWork(i, now, now + e + t, e, t, c, down,
-                                      two_cut)
-                    self._pending[wid] = work
-                    self.next_free[i] = float("inf")   # until completion
-                    if cfg.continuous:
-                        # continuous tier: the straggler multiplier is
-                        # drawn per request at enqueue (batching
-                        # efficiency lives in the batcher's eff(k)
-                        # model), the window's analytic KV footprint is
-                        # priced from the suffix cumsums, and routing is
-                        # least-backlog rather than EWMA-primary
-                        slow = float(np.exp(self.rng.normal(
-                            0.0, cfg.straggler_sigma)))
-                        if self.rng.random() < cfg.tail_prob:
-                            slow *= cfg.tail_scale
-                        kvc = self.kv_cumsum[self.arch_of[i]]
-                        replica = min(routable, key=lambda r:
-                                      self.cbatchers[r].backlog_s)
-                        self.cbatchers[replica].add(
-                            Request(wid, now + e + t, 0), c * slow,
-                            float(kvc[s1] - kvc[s2]))
-                    else:
-                        replica = self.mitigator.pick_primary(routable)
-                        self.batchers[replica].add(
-                            Request(wid, now + e + t, 0))
-                elif c > 0.0:
-                    # planned a collaborative split but no replica accepts
-                    # work (undetected outage window): edge re-execution
-                    self._fallback_one(_CloudWork(i, now, now + e + t,
-                                                  e, t, c, down, two_cut))
-                else:
-                    # no cloud work: complete locally.  ``down`` is
-                    # normally 0 here, but a clamped placement degenerating
-                    # to an empty cloud window still owes its edge-tail
-                    # compute
-                    self._complete(i, now, e + t + down)
-                    if not self._cloud_up:
-                        self.n_outage_completions += 1
+                self._robot_step(i, now, routable)
 
-            # ---- replicas that died with queued work: re-route or fall back
-            if cfg.continuous:
-                self._drain_dead_cont(routable)
-            else:
-                for r in self.replica_names:
-                    if r in self._down and self.batchers[r].queue:
-                        if routable:
-                            for rq in list(self.batchers[r].queue):
-                                self.batchers[self.mitigator.pick_primary(
-                                    routable)].add(rq)
-                            self.batchers[r].queue.clear()
-                        else:
-                            batch = self.batchers[r].flush(now)
-                            while batch is not None:
-                                self._fallback(batch.requests)
-                                batch = self.batchers[r].flush(now)
+            self._drain_dead(now, routable)
 
             # ---- form + execute batches per accepting replica
             end = now + cfg.tick_s
-            if cfg.continuous:
-                # continuous tier: advance each accepting replica's event
-                # loop to the tick boundary; completions release robots
-                for r in routable:
-                    for req, fin in self.cbatchers[r].step(end):
-                        self._finish_cont(req, fin)
-            else:
-                for r in routable:
-                    batch = self.batchers[r].maybe_form(end)
-                    while batch is not None:
-                        self._execute(batch.requests, routable)
-                        batch = self.batchers[r].maybe_form(end)
-
-        # ---- drain whatever is still queued at the end of the run
-        end = cfg.n_ticks * cfg.tick_s
-        routable = [r for r in self.replica_names if r not in self._down]
-        if cfg.continuous:
-            self._drain_dead_cont(routable)
             for r in routable:
-                for req, fin in self.cbatchers[r].step(None):
-                    self._finish_cont(req, fin)
-        else:
-            for r in self.replica_names:
-                batch = self.batchers[r].flush(end)
-                while batch is not None:
-                    if routable:
-                        self._execute(batch.requests, routable)
-                    else:
-                        self._fallback(batch.requests)
-                    batch = self.batchers[r].flush(end)
+                self._service_replica(r, end, routable)
+
+        self._final_drain()
         return self._report()
 
     # --------------------------------------------------------------- report
@@ -817,12 +1004,26 @@ class FleetSimulator:
                 p50_s=float(np.percentile(xs, 50)),
                 p95_s=float(np.percentile(xs, 95)),
                 codec=self.codecs[self.codec_of[i]].name,
-                n_chunks=self.chunks_of[i]))
+                n_chunks=int(self.chunks_of[i])))
         allx = np.asarray([x for lats in self.latencies for x in lats]
                           or [0.0])
         sim_s = cfg.n_ticks * cfg.tick_s
         cbs = list(self.cbatchers.values())
         n_cont_done = sum(cb.n_completed for cb in cbs)
+        procs = []
+        for p, proc in enumerate(cfg.arrival_processes):
+            lats = self.proc_latencies[p]
+            ys = np.asarray(lats if lats else [0.0])
+            procs.append(ProcessStats(
+                name=proc.name, kind=proc.kind,
+                n_arrivals=self.proc_arrivals[p],
+                n_completed=len(lats),
+                n_rejected=self.proc_rejections[p],
+                mean_s=float(ys.mean()),
+                p50_s=float(np.percentile(ys, 50)),
+                p95_s=float(np.percentile(ys, 95)),
+                p99_s=float(np.percentile(ys, 99)),
+                p999_s=float(np.percentile(ys, 99.9))))
         return FleetReport(
             robots=robots, n_requests=int(sum(r.n_requests for r in robots)),
             fleet_p50_s=float(np.percentile(allx, 50)),
@@ -841,7 +1042,13 @@ class FleetSimulator:
             mean_queue_delay_s=(sum(cb.queue_delay_sum_s for cb in cbs)
                                 / max(1, n_cont_done)),
             kv_high_watermark_bytes=max(
-                (cb.kv_high_watermark_bytes for cb in cbs), default=0.0))
+                (cb.kv_high_watermark_bytes for cb in cbs), default=0.0),
+            fleet_p99_s=float(np.percentile(allx, 99)),
+            fleet_p999_s=float(np.percentile(allx, 99.9)),
+            processes=tuple(procs),
+            n_open_arrivals=int(sum(self.proc_arrivals)),
+            n_slo_rejections=int(sum(self.proc_rejections)),
+            n_autoscale_events=self.n_autoscale)
 
 
 def run_fleet(cfg: FleetConfig) -> FleetReport:

@@ -325,6 +325,36 @@ class ContinuousBatcher:
         return out
 
 
+@dataclasses.dataclass
+class AutoScaler:
+    """Reactive replica autoscaling on backlog pressure.
+
+    A deliberately simple hysteresis policy (the point of the event
+    engine is to make policies like this *measurable* at 10k-robot
+    scale, not to bake in a clever one): scale up one replica when the
+    mean backlog per routable replica exceeds ``high_s`` seconds, scale
+    down one when it falls below ``low_s``, never leaving the
+    ``[min_replicas, max_replicas]`` band.  ``decide`` is pure — the
+    caller (``runtime/events.EventEngine``) owns the replica set and
+    applies the returned delta as synthetic join/leave transitions, so
+    the policy composes with scheduled ``ReplicaEvent`` chaos and the
+    ``ElasticPool`` heartbeat-timeout view without special cases."""
+    min_replicas: int = 1
+    max_replicas: int = 8
+    high_s: float = 0.25
+    low_s: float = 0.02
+
+    def decide(self, n_live: int, mean_backlog_s: float) -> int:
+        """Return the replica delta in {-1, 0, +1} for this control step."""
+        if n_live < self.min_replicas:
+            return 1
+        if mean_backlog_s > self.high_s and n_live < self.max_replicas:
+            return 1
+        if mean_backlog_s < self.low_s and n_live > self.min_replicas:
+            return -1
+        return 0
+
+
 class ElasticPool:
     """Tracks live replicas via heartbeats; triggers replan callbacks."""
 

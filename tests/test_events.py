@@ -1,0 +1,278 @@
+"""Event-engine internals: heap ordering properties, arrival-process
+generation, engine state invariants (run with ``validate=True``, which
+asserts nondecreasing pops, no robot acting while its request is in
+flight, continuous-tier capacity at every service boundary, and no
+request leaked past the horizon), and the 10k-robot scale run.
+
+The heap/arrival properties run twice, following the repo's pattern
+(``tests/test_scheduler.py``): property-based via ``hypothesis`` when the
+optional dep is installed, and always as seeded numpy scenario sweeps
+through the same checkers.
+"""
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.network import TraceConfig
+from repro.runtime.fleet import (ArrivalProcess, FleetConfig, FleetSimulator,
+                                 ReplicaEvent, outage_schedule, run_fleet)
+from repro.runtime.events import (EventEngine, EventHeap, PH_ARRIVAL,
+                                  PH_POOL, PH_REPLICA, PH_ROBOT, PH_SCALE,
+                                  PH_SERVICE, generate_arrivals)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ------------------------------------------------------------- EventHeap
+def _check_heap_order(keys):
+    """Pops come out sorted by (tick, phase, idx); equal keys pop in
+    insertion order; push/pop counters conserve."""
+    h = EventHeap(validate=True)
+    for seq, (tick, phase, idx) in enumerate(keys):
+        h.push(tick, phase, idx)
+    out = []
+    while len(h):
+        out.append(h.pop())
+    assert out == sorted(out)
+    assert sorted(out) == sorted(tuple(k) for k in keys)
+    assert h.n_pushed == h.n_popped == len(keys)
+
+
+def _check_heap_fifo_ties(n):
+    """Equal keys carry a strictly increasing seq tiebreak, so heap
+    entries with identical (tick, phase, idx) never compare equal — the
+    pop order of ties is the push order, deterministically."""
+    h = EventHeap()
+    for _ in range(n):
+        h.push(5, PH_SERVICE, 0)
+    seqs = [entry[3] for entry in h._h]
+    assert len(set(seqs)) == n                # all distinct
+    while len(h):
+        assert h.pop() == (5, PH_SERVICE, 0)
+    assert h.n_popped == n
+
+
+_RNG_CASES = 40
+
+
+def test_heap_order_seeded_sweep():
+    rng = np.random.default_rng(1234)
+    for _ in range(_RNG_CASES):
+        n = int(rng.integers(0, 60))
+        keys = [(int(rng.integers(0, 50)), int(rng.integers(0, 7)),
+                 int(rng.integers(0, 20))) for _ in range(n)]
+        _check_heap_order(keys)
+        _check_heap_fifo_ties(int(rng.integers(1, 10)))
+
+
+def test_heap_interleaved_push_pop_stays_ordered():
+    """Pops interleaved with pushes of later keys never regress — the
+    engine's actual access pattern (handlers push future events mid-drain)."""
+    rng = np.random.default_rng(7)
+    h = EventHeap(validate=True)
+    for t in range(10):
+        h.push(t, PH_ROBOT, 0)
+    last = None
+    while len(h):
+        key = h.pop()                 # validate=True raises on regression
+        if last is not None:
+            assert key >= last
+        last = key
+        if rng.random() < 0.5:
+            h.push(key[0] + int(rng.integers(0, 4)),
+                   int(rng.integers(0, 7)), int(rng.integers(0, 5)))
+
+
+def test_heap_validate_catches_phase_order():
+    """The phase constants must keep the tick loop's section order —
+    pinned so nobody reorders them without noticing."""
+    assert (PH_REPLICA < PH_POOL < PH_ROBOT < PH_ARRIVAL
+            < PH_SERVICE < PH_SCALE)
+
+
+if HAVE_HYPOTHESIS:
+    _key = st.tuples(st.integers(0, 50), st.integers(0, 6),
+                     st.integers(0, 20))
+
+    @settings(deadline=None)
+    @given(st.lists(_key, max_size=60))
+    def test_heap_order_property(keys):
+        _check_heap_order(keys)
+
+
+# ------------------------------------------------------ arrival processes
+def _arrival_cfg(n_ticks=200, **kw):
+    return FleetConfig(n_robots=2, n_ticks=n_ticks, tick_s=0.05, seed=5,
+                       **kw)
+
+
+def _check_arrivals(seed, rate, n_ticks):
+    cfg = FleetConfig(n_robots=2, n_ticks=n_ticks, tick_s=0.05, seed=seed,
+                      arrival_processes=(
+                          ArrivalProcess("a", rate_hz=rate),
+                          ArrivalProcess("b", kind="diurnal", rate_hz=rate,
+                                         diurnal_amp=0.7,
+                                         diurnal_period_s=3.0)))
+    arr = generate_arrivals(cfg)
+    horizon = cfg.n_ticks * cfg.tick_s
+    assert arr == sorted(arr)                       # globally time-sorted
+    assert all(0.0 <= t < horizon for t, _ in arr)
+    assert arr == generate_arrivals(cfg)            # deterministic
+    return arr
+
+
+def test_arrival_generation_seeded_sweep():
+    rng = np.random.default_rng(42)
+    for _ in range(_RNG_CASES):
+        _check_arrivals(int(rng.integers(0, 10_000)),
+                        float(rng.uniform(0.5, 40.0)),
+                        int(rng.integers(10, 300)))
+
+
+def test_poisson_rate_is_roughly_right():
+    cfg = _arrival_cfg(n_ticks=4000, arrival_processes=(
+        ArrivalProcess("a", rate_hz=20.0),))
+    n = len(generate_arrivals(cfg))
+    expect = 20.0 * 4000 * 0.05
+    assert 0.85 * expect < n < 1.15 * expect
+
+
+def test_diurnal_thinning_tracks_intensity():
+    """Arrivals in the sinusoid's peak half-period outnumber the trough's."""
+    cfg = _arrival_cfg(n_ticks=4000, arrival_processes=(
+        ArrivalProcess("d", kind="diurnal", rate_hz=10.0, diurnal_amp=0.9,
+                       diurnal_period_s=200.0),))
+    ts = np.asarray([t for t, _ in generate_arrivals(cfg)])
+    phase = (ts % 200.0) / 200.0
+    peak = int(((phase > 0.0) & (phase < 0.5)).sum())    # sin > 0 half
+    trough = int(((phase >= 0.5) & (phase < 1.0)).sum())
+    assert peak > 1.5 * trough
+
+
+def test_unknown_arrival_kind_raises():
+    cfg = _arrival_cfg(arrival_processes=(ArrivalProcess("x", kind="burst"),))
+    with pytest.raises(ValueError):
+        generate_arrivals(cfg)
+
+
+# --------------------------------------------- engine invariants (validate)
+def _validated_run(cfg):
+    cfg = dataclasses.replace(cfg, engine="events")
+    return EventEngine(FleetSimulator(cfg), validate=True).run()
+
+
+def test_validated_engine_matches_plain_run():
+    """validate=True adds assertions, never behavior: same report."""
+    cfg = FleetConfig(n_robots=6, n_ticks=50, n_replicas=2,
+                      archs=("openvla-7b",), batch_size=3,
+                      trace=TraceConfig(mean_bps=1e6, bad_bps=2.5e5),
+                      seed=9)
+    cfg = dataclasses.replace(cfg,
+                              replica_events=tuple(outage_schedule(cfg)))
+    plain = run_fleet(dataclasses.replace(cfg, engine="events"))
+    assert _validated_run(cfg) == plain
+
+
+def test_request_conservation_closed_loop():
+    """Every issued request completes exactly once: the report's request
+    count equals the robots' latency series lengths, and the engine's
+    internal pending map drains (asserted inside validate mode)."""
+    cfg = FleetConfig(n_robots=10, n_ticks=80, n_replicas=2,
+                      continuous=True, batch_size=4,
+                      trace=TraceConfig(mean_bps=1e6, bad_bps=2.5e5),
+                      seed=2)
+    cfg = dataclasses.replace(cfg,
+                              replica_events=tuple(outage_schedule(cfg)))
+    rep = _validated_run(cfg)
+    assert rep.n_requests == sum(r.n_requests for r in rep.robots)
+    assert rep.n_requests > 0
+
+
+def test_invariants_hold_under_chaos_sweep():
+    """Seeded sweep of chaotic configs through the validated engine: the
+    in-flight/capacity/conservation assertions must never fire."""
+    rng = np.random.default_rng(77)
+    for _ in range(8):
+        cfg = FleetConfig(
+            n_robots=int(rng.integers(2, 9)),
+            n_ticks=int(rng.integers(30, 90)),
+            n_replicas=int(rng.integers(1, 4)),
+            continuous=bool(rng.integers(0, 2)),
+            multicut=bool(rng.integers(0, 2)),
+            batch_size=int(rng.integers(2, 6)),
+            trace=TraceConfig(mean_bps=1e6, bad_bps=2.5e5),
+            seed=int(rng.integers(0, 1000)))
+        cfg = dataclasses.replace(
+            cfg, replica_events=tuple(outage_schedule(cfg)))
+        _validated_run(cfg)
+
+
+def test_autoscale_scales_and_conserves():
+    """Cold spares join under load and the run still conserves requests;
+    the scaler's actions are counted."""
+    spares = tuple(ReplicaEvent(0, f"cloud{i}", "leave") for i in (2, 3))
+    cfg = FleetConfig(n_robots=48, n_ticks=300, n_replicas=4,
+                      engine="events", autoscale=True, autoscale_every=25,
+                      trace=TraceConfig(mean_bps=1e6, bad_bps=2.5e5),
+                      replica_events=spares, seed=11)
+    rep = _validated_run(cfg)
+    assert rep.n_autoscale_events > 0
+    assert rep.n_requests == sum(r.n_requests for r in rep.robots)
+
+
+def test_slo_admission_rejects_under_pressure():
+    """A near-zero SLO with a saturated cloud rejects open-loop arrivals
+    to edge-only service; arrivals are conserved either way."""
+    procs = (ArrivalProcess("users", rate_hz=40.0),)
+    cfg = FleetConfig(n_robots=24, n_ticks=200, n_replicas=1,
+                      engine="events", continuous=True, batch_size=4,
+                      arrival_processes=procs, slo_s=1e-6,
+                      trace=TraceConfig(mean_bps=1e6, bad_bps=2.5e5),
+                      seed=4)
+    rep = _validated_run(cfg)
+    p = rep.processes[0]
+    assert p.n_arrivals == p.n_completed        # rejected still completes
+    assert rep.n_slo_rejections == p.n_rejected > 0
+    relaxed = _validated_run(dataclasses.replace(cfg, slo_s=None))
+    assert relaxed.n_slo_rejections == 0
+
+
+def test_open_arrivals_complete_and_report_percentiles():
+    procs = (ArrivalProcess("users", rate_hz=15.0),
+             ArrivalProcess("shift", kind="diurnal", rate_hz=8.0,
+                            diurnal_amp=0.8, diurnal_period_s=5.0))
+    cfg = FleetConfig(n_robots=8, n_ticks=300, n_replicas=2,
+                      engine="events", arrival_processes=procs, seed=6)
+    rep = _validated_run(cfg)
+    assert rep.n_open_arrivals == sum(p.n_arrivals for p in rep.processes)
+    for p in rep.processes:
+        assert p.n_completed == p.n_arrivals
+        assert 0.0 < p.p50_s <= p.p95_s <= p.p99_s <= p.p999_s
+
+
+# ----------------------------------------------------------------- scale
+@pytest.mark.slow
+def test_scale_10k_robots_under_budget():
+    """The acceptance bar: 10k robots x 2000 ticks, chaos schedule and
+    open-loop traffic included, completes inside the 60 s wall-clock
+    budget and produces meaningful tail percentiles."""
+    procs = (ArrivalProcess("users", rate_hz=50.0),)
+    cfg = FleetConfig(n_robots=10_000, n_ticks=2_000, n_replicas=6,
+                      batch_size=16, engine="events",
+                      arrival_processes=procs, seed=7)
+    cfg = dataclasses.replace(cfg,
+                              replica_events=tuple(outage_schedule(cfg)))
+    t0 = time.time()
+    rep = run_fleet(cfg)
+    wall = time.time() - t0
+    assert wall < 60.0, f"10k-robot run took {wall:.1f}s (budget 60s)"
+    assert rep.n_requests > 10_000
+    assert rep.fleet_p999_s >= rep.fleet_p99_s >= rep.fleet_p95_s > 0.0
+    assert rep.processes[0].n_completed == rep.processes[0].n_arrivals

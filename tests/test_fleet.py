@@ -216,3 +216,37 @@ def test_fleet_multicut_outage_replans_to_edge_only():
 def test_fleet_single_mode_has_no_multicut_requests():
     rep = run_fleet(_small_cfg())
     assert rep.n_multicut_requests == 0
+
+
+def test_replica_event_total_order_is_input_order_independent():
+    """Regression: ReplicaEvent carries a total order (tick, kind,
+    replica), so schedules listing a same-tick leave and join in either
+    order sort — and therefore replay — identically.  Before the total
+    order, ``sorted(..., key=lambda e: e.tick)`` was stable on the
+    caller's construction order and two logically identical schedules
+    could produce different fleets."""
+    a = ReplicaEvent(30, "cloud1", "leave")
+    b = ReplicaEvent(30, "cloud1", "join")
+    assert sorted([a, b]) == sorted([b, a]) == [b, a]   # join < leave
+    # ties break on replica name past (tick, kind)
+    c = ReplicaEvent(30, "cloud0", "leave")
+    assert sorted([a, c]) == [c, a]
+    with pytest.raises(TypeError):          # __lt__ rejects non-events
+        a < 42                              # noqa: B015
+
+    cfg = _small_cfg()
+    cfg.replica_events = [a, b]
+    fwd = run_fleet(cfg)
+    cfg.replica_events = [b, a]
+    rev = run_fleet(cfg)
+    assert fwd == rev
+    # leave wins the tick: the replica is down right after tick 30
+    sim = FleetSimulator(cfg)
+    sim.run()
+    assert "cloud1" in sim._down
+
+
+def test_outage_schedule_is_sorted():
+    cfg = _small_cfg()
+    ev = outage_schedule(cfg)
+    assert ev == sorted(ev)

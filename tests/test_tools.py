@@ -1,0 +1,175 @@
+"""Unit tests for the CI guard scripts, which until now were exercised
+only by actually running them in the workflow: the BENCH_fleet.json
+schema checker (``tools/check_bench_schema.py`` — valid payloads pass,
+each class of violation is reported with a pointed message, ``main``
+exit codes are correct) and the docs-link checker
+(``tools/check_doc_links.py`` — resolvable references in docstrings and
+markdown pass, dangling ones fail with file:line).
+"""
+import json
+import os
+import sys
+import textwrap
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+
+import check_bench_schema as cbs          # noqa: E402
+import check_doc_links as cdl             # noqa: E402
+
+
+# ------------------------------------------------------- schema fixtures
+def _valid_payload() -> dict:
+    lat = {"p50_s": 0.1, "p95_s": 0.2}
+    return {
+        "schema_version": cbs.EXPECTED_SCHEMA_VERSION,
+        "config": {"n_robots": 6, "n_ticks": 40, "n_replicas": 2,
+                   "seed": 0, "smoke": True},
+        "planner": {"scalar_s": 1.0, "vec_s": 0.01, "cells": 100,
+                    "codec_scalar_s": 1.0, "codec_vec_s": 0.01,
+                    "codec_cells": 300, "multicut_scalar_s": 2.0,
+                    "multicut_vec_s": 0.02, "multicut_cells": 5000,
+                    "multicut_speedup": 100.0},
+        "fleet": {**lat, "throughput_rps": 10.0, "n_requests": 100,
+                  "sim_wall_s": 0.5},
+        "codecs": {"identity": {**lat, "throughput_rps": 10.0}},
+        "multicut": {"1MBs_single": {**lat, "n_multicut_requests": 0},
+                     "1MBs_multi": {**lat, "n_multicut_requests": 5}},
+        "streamed": {"1MBs_seq": {**lat, "n_streamed_requests": 0,
+                                  "n_chunk_reconfigs": 0,
+                                  "mean_bubble_frac": 0.0},
+                     "1MBs_stream": {**lat, "n_streamed_requests": 9,
+                                     "n_chunk_reconfigs": 2,
+                                     "mean_bubble_frac": 0.12}},
+        "queue": {t: {**lat, "n_preemptions": 0,
+                      "mean_queue_delay_s": 0.01,
+                      "kv_high_watermark_bytes": 1e8}
+                  for t in cbs.QUEUE_REQUIRED_TAGS},
+        "scale": {"engine": "events", "n_robots": 1000, "n_ticks": 200,
+                  "wall_s": 3.2, "p50_s": 0.1, "p95_s": 0.2,
+                  "p99_s": 0.3, "p999_s": 0.4, "n_requests": 5000,
+                  "n_open_arrivals": 500, "throughput_rps": 25.0},
+    }
+
+
+def test_schema_valid_payload_passes():
+    assert cbs.check(_valid_payload()) == []
+
+
+@pytest.mark.parametrize("mutate,needle", [
+    (lambda p: p.pop("scale"), "missing top-level section 'scale'"),
+    (lambda p: p.update(schema_version=3), "schema_version"),
+    (lambda p: p["fleet"].update(p50_s=0.3), "fleet p50 > p95"),
+    (lambda p: p["planner"].update(vec_s=-1.0), "finite positive"),
+    (lambda p: p["queue"].pop("cont_aware"), "queue missing entry"),
+    (lambda p: p["queue"]["cont_blind"].update(n_preemptions=-2),
+     "n_preemptions"),
+    (lambda p: p["streamed"]["1MBs_stream"].update(mean_bubble_frac=1.5),
+     "mean_bubble_frac"),
+    (lambda p: p["streamed"].pop("1MBs_stream"), "'_stream' counterpart"),
+    (lambda p: p["scale"].update(engine="ticks"), "!= 'events'"),
+    (lambda p: p["scale"].update(wall_s=0.0), "wall_s"),
+    (lambda p: p["scale"].update(n_robots=-1), "non-negative int"),
+    (lambda p: p["scale"].update(p99_s=0.05), "nondecreasing"),
+    (lambda p: p["scale"].pop("p999_s"), "scale missing 'p999_s'"),
+])
+def test_schema_violations_are_reported(mutate, needle):
+    payload = _valid_payload()
+    mutate(payload)
+    errs = cbs.check(payload)
+    assert errs, f"expected an error containing {needle!r}"
+    assert any(needle in e for e in errs), errs
+
+
+def _run_schema_main(tmp_path, payload, monkeypatch):
+    p = tmp_path / "BENCH_fleet.json"
+    p.write_text(json.dumps(payload))
+    monkeypatch.setattr(sys, "argv",
+                        ["check_bench_schema.py", "--path", str(p)])
+    return cbs.main()
+
+
+def test_schema_main_exit_codes(tmp_path, monkeypatch, capsys):
+    assert _run_schema_main(tmp_path, _valid_payload(), monkeypatch) == 0
+    out = capsys.readouterr().out
+    assert f"schema v{cbs.EXPECTED_SCHEMA_VERSION} OK" in out
+
+    bad = _valid_payload()
+    bad["scale"]["p999_s"] = -1.0
+    assert _run_schema_main(tmp_path, bad, monkeypatch) == 1
+    assert "scale percentiles" in capsys.readouterr().err
+
+
+def test_schema_main_unreadable_file(tmp_path, monkeypatch, capsys):
+    p = tmp_path / "nope.json"
+    monkeypatch.setattr(sys, "argv",
+                        ["check_bench_schema.py", "--path", str(p)])
+    assert cbs.main() == 1
+    assert "cannot read/parse" in capsys.readouterr().err
+    p.write_text("{not json")
+    assert cbs.main() == 1
+
+
+# ------------------------------------------------------------- doc links
+def _mini_repo(tmp_path):
+    """A tiny repo layout exercising every resolution rule: repo-root
+    refs, the src/repro shorthand, sibling refs, docs/ refs and
+    bare-basename refs."""
+    (tmp_path / "src" / "repro" / "core").mkdir(parents=True)
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "README.md").write_text("see [design](docs/DESIGN.md)\n")
+    (tmp_path / "docs" / "DESIGN.md").write_text("covers core/util.py\n")
+    (tmp_path / "src" / "repro" / "core" / "util.py").write_text(
+        '"""Helper; see sibling core/extra.py and README.md."""\n')
+    (tmp_path / "src" / "repro" / "core" / "extra.py").write_text(
+        '"""Bare basename ref: util.py resolves anywhere."""\n')
+    return tmp_path
+
+
+def test_doc_links_clean_repo_passes(tmp_path):
+    assert cdl.check(str(_mini_repo(tmp_path))) == []
+
+
+def test_doc_links_dangling_docstring_ref_fails(tmp_path):
+    root = _mini_repo(tmp_path)
+    (root / "src" / "repro" / "core" / "bad.py").write_text(
+        '"""Cites core/missing_forever.py which does not exist."""\n')
+    errors = cdl.check(str(root))
+    assert len(errors) == 1
+    assert "missing_forever.py" in errors[0]
+    assert "bad.py:1" in errors[0]
+
+
+def test_doc_links_dangling_markdown_link_fails(tmp_path):
+    root = _mini_repo(tmp_path)
+    (root / "docs" / "NOTES.md").write_text(
+        "line one fine\nsee [gone](docs/GONE.md) here\n")
+    errors = cdl.check(str(root))
+    assert len(errors) == 1
+    assert "GONE.md" in errors[0] and "NOTES.md:2" in errors[0]
+
+
+def test_doc_links_urls_are_ignored(tmp_path):
+    root = _mini_repo(tmp_path)
+    (root / "docs" / "LINKS.md").write_text(
+        "[ext](https://example.com/paper.py) is out of scope\n")
+    assert cdl.check(str(root)) == []
+
+
+def test_doc_links_main_exit_codes(tmp_path, monkeypatch, capsys):
+    root = _mini_repo(tmp_path)
+    monkeypatch.setattr(sys, "argv",
+                        ["check_doc_links.py", "--root", str(root)])
+    assert cdl.main() == 0
+    assert "doc links OK" in capsys.readouterr().out
+    (root / "docs" / "BAD.md").write_text("[x](docs/NOPE.md)\n")
+    assert cdl.main() == 1
+    err = capsys.readouterr()
+    assert "unresolved repo-file reference" in err.err + err.out
+
+
+def test_doc_links_checker_passes_on_this_repo():
+    """The real repo must stay clean — the same invocation CI runs."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    assert cdl.check(os.path.abspath(root)) == []

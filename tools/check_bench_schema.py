@@ -4,14 +4,17 @@ drifts from what downstream consumers (perf-trajectory tooling, the
 EXPERIMENTS.md tables, cross-PR diffs) expect.
 
 The schema is versioned: ``benchmarks/fleet_bench.py`` stamps
-``schema_version`` (currently 3 — the version that added the ``queue``
-section: continuous batching + queue-aware planning) and this checker
-validates
+``schema_version`` (currently 4 — the version that added the ``scale``
+section: the event-engine 10k-robot run with p99/p99.9 tails) and this
+checker validates
 
 * the top-level sections and their per-entry keys,
-* value sanity (latencies positive and finite, p50 <= p95, counters
-  non-negative, bubble fractions in [0, 1)),
-* the planner section's parity wall-times.
+* value sanity (latencies positive and finite, percentile ladders
+  ordered p50 <= p95 <= p99 <= p99.9, counters non-negative, bubble
+  fractions in [0, 1)),
+* the planner section's parity wall-times,
+* the scale section's engine tag and wall time (the CI scale-smoke step
+  additionally asserts its wall budget against this payload).
 
 Run next to ``tools/check_doc_links.py`` in the workflow, after the
 fleet smoke emits the file:
@@ -26,10 +29,10 @@ import math
 import sys
 from typing import List
 
-EXPECTED_SCHEMA_VERSION = 3
+EXPECTED_SCHEMA_VERSION = 4
 
 TOP_SECTIONS = ("schema_version", "config", "planner", "fleet", "codecs",
-                "multicut", "streamed", "queue")
+                "multicut", "streamed", "queue", "scale")
 CONFIG_KEYS = ("n_robots", "n_ticks", "n_replicas", "seed", "smoke")
 PLANNER_KEYS = ("scalar_s", "vec_s", "cells", "codec_scalar_s",
                 "codec_vec_s", "codec_cells", "multicut_scalar_s",
@@ -44,6 +47,9 @@ QUEUE_ENTRY_KEYS = ("p50_s", "p95_s", "n_preemptions",
                     "mean_queue_delay_s", "kv_high_watermark_bytes")
 # the queue comparison needs its baseline and both continuous rows
 QUEUE_REQUIRED_TAGS = ("micro_blind", "cont_blind", "cont_aware")
+SCALE_KEYS = ("engine", "n_robots", "n_ticks", "wall_s", "p50_s", "p95_s",
+              "p99_s", "p999_s", "n_requests", "n_open_arrivals",
+              "throughput_rps")
 
 
 def _finite_pos(x) -> bool:
@@ -128,6 +134,27 @@ def check(payload: dict) -> List[str]:
         if t.endswith("_seq"):
             need(t[:-4] + "_stream" in tags, f"streamed {t!r} lacks its "
                  f"'_stream' counterpart")
+
+    sc = payload["scale"]
+    need(isinstance(sc, dict), "section 'scale' must be an object")
+    if isinstance(sc, dict):
+        for k in SCALE_KEYS:
+            need(k in sc, f"scale missing {k!r}")
+        need(sc.get("engine") == "events",
+             f"scale.engine {sc.get('engine')!r} != 'events'")
+        need(_finite_pos(sc.get("wall_s", 0)),
+             "scale.wall_s must be finite positive")
+        for k in ("n_robots", "n_ticks", "n_requests", "n_open_arrivals"):
+            v = sc.get(k)
+            need(isinstance(v, int) and v >= 0,
+                 f"scale.{k} must be a non-negative int")
+        ladder = [sc.get(k) for k in ("p50_s", "p95_s", "p99_s", "p999_s")]
+        if all(isinstance(v, (int, float)) for v in ladder):
+            need(all(math.isfinite(v) and v > 0 for v in ladder),
+                 "scale percentiles must be finite positive")
+            need(all(a <= b + 1e-12 for a, b in zip(ladder, ladder[1:])),
+                 "scale percentile ladder must be nondecreasing "
+                 "(p50 <= p95 <= p99 <= p99.9)")
     return errs
 
 
@@ -148,7 +175,9 @@ def main() -> int:
         return 1
     print(f"{args.path}: schema v{payload['schema_version']} OK "
           f"({len(payload['streamed'])} streamed, "
-          f"{len(payload['queue'])} queue entries)")
+          f"{len(payload['queue'])} queue entries, scale "
+          f"{payload['scale']['n_robots']} robots in "
+          f"{payload['scale']['wall_s']:.1f}s)")
     return 0
 
 

@@ -32,6 +32,8 @@ from typing import Iterator, List, Set, Tuple
 
 REF_RE = re.compile(r"[A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:py|md)\b")
 MD_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)")
+URL_RE = re.compile(r"\S+://\S+")    # strip URLs before REF_RE scans —
+# otherwise `https://host/x.py` yields a bogus `host/x.py` repo ref
 SCAN_DIRS = ("src",)
 DOC_DIRS = ("docs",)                 # every *.md here
 DOC_FILES = ("README.md",)           # plus these root files
@@ -90,9 +92,11 @@ def check(root: str) -> List[str]:
     errors: List[str] = []
 
     def scan_text(path: str, lineno: int, text: str) -> None:
-        refs = set(m.group(0) for m in REF_RE.finditer(text))
+        refs = set(m.group(0)
+                   for m in REF_RE.finditer(URL_RE.sub(" ", text)))
         refs |= set(m.group(1) for m in MD_LINK_RE.finditer(text)
-                    if m.group(1).endswith((".py", ".md")))
+                    if m.group(1).endswith((".py", ".md"))
+                    and "://" not in m.group(1))
         for ref in sorted(refs):
             if not _resolves(ref, os.path.dirname(path), root, basenames):
                 rel = os.path.relpath(path, root)

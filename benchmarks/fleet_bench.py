@@ -77,8 +77,12 @@ CODEC_AXIS = ("identity", "int8", "int4")
 # change; tools/check_bench_schema.py validates the emitted file
 # (v3: added the "queue" section — continuous batching + queue-aware
 # planning; v4: added the "scale" section — event-engine 10k-robot run
-# with p99/p99.9 tails and open-loop arrival traffic)
-BENCH_SCHEMA_VERSION = 4
+# with p99/p99.9 tails and open-loop arrival traffic; v5: added the
+# "scaling_curve" section — per-size wall/peak-RSS/setup-loop-replan
+# breakdown of the vectorized engine, monotonicity-checked — and the
+# "autoscale" section — AutoScaler threshold sweep over a two-cohort
+# regional bandwidth mix)
+BENCH_SCHEMA_VERSION = 5
 # multi-cut scenario: per-robot cloud quota (a shared cloud cannot host
 # every robot's full tail) + asymmetric WAN (downlink 8x the uplink)
 MULTICUT_QUOTA_BYTES = 5.8e9
@@ -90,12 +94,29 @@ MULTICUT_POINTS_BPS = (10e6, 1e6, 0.2e6)
 QUEUE_BW_BPS = 1e6
 QUEUE_TIGHT_KV_BYTES = 1.5e8
 # scale scenario: the event-engine acceptance run — 10k robots x 2000
-# ticks with the chaos schedule and an open-loop Poisson stream, under a
-# 60 s wall budget; smoke shrinks to 1k robots (the CI scale-smoke step
-# asserts its own wall budget against the emitted payload)
+# ticks with the chaos schedule and an open-loop Poisson stream (the
+# vectorized SoA engine lands this in single-digit seconds); smoke
+# shrinks to 1k robots (the CI scale-smoke step asserts its own wall
+# budget against the emitted payload)
 SCALE_ROBOTS, SCALE_TICKS, SCALE_REPLICAS = 10_000, 2_000, 6
 SCALE_SMOKE_ROBOTS, SCALE_SMOKE_TICKS = 1_000, 200
 SCALE_ARRIVAL_HZ = 50.0
+# scaling curve: the same chaos+arrivals scenario at increasing fleet
+# sizes, run ASCENDING so the peak-RSS high-water mark is per-size
+# meaningful; 100k x 2000 is the vectorized engine's acceptance point
+# (must land under the 120 s budget on CI hardware)
+SCALE_CURVE_SIZES = (1_000, 10_000, 100_000)
+SCALE_CURVE_SMOKE_SIZES = (200, 500, 1_000)
+SCALE_100K_BUDGET_S = 120.0
+# autoscale scenario: backlog-threshold sweep over a two-cohort regional
+# bandwidth mix (metro fiber vs rural LTE, per-cohort TraceConfig) — the
+# fleet starts with most replicas parked (tick-0 leaves) so the scaler's
+# watermark decides how much capacity the arrival load recruits
+AUTOSCALE_HIGH_S = (0.05, 0.25, 1.0)
+AUTOSCALE_COHORTS = (
+    ("metro", TraceConfig()),                             # 10 MB/s fiber
+    ("rural", TraceConfig(mean_bps=1.5e6, bad_bps=0.3e6)))  # LTE fringe
+AUTOSCALE_ARRIVAL_HZ = 25.0
 
 
 # ---------------------------------------------------------------- planner
@@ -324,11 +345,15 @@ def bench_queue(n_robots: int = 16, n_ticks: int = 200,
 def bench_scale(n_robots: int = SCALE_ROBOTS, n_ticks: int = SCALE_TICKS,
                 n_replicas: int = SCALE_REPLICAS, seed: int = 7):
     """Event-engine scale run (``runtime/events.py``): chaos schedule plus
-    an open-loop Poisson stream at 10k-robot scale — the regime where the
-    dense tick loop's every-robot-every-tick scan stops being viable and
-    the p99/p99.9 tail percentiles start meaning something.  Returns
-    ``(FleetReport, wall_s)``."""
-    from repro.runtime.fleet import ArrivalProcess
+    an open-loop Poisson stream — the regime where the dense tick loop's
+    every-robot-every-tick scan stops being viable and the p99/p99.9
+    tail percentiles start meaning something.  Returns
+    ``(FleetReport, wall_s, profile)`` where ``profile`` splits the wall
+    into setup vs event loop, the setup further into plan tables /
+    controllers / trace matrix (``FleetSimulator.profile``), and carries
+    the accumulated chaos-replan wall (``replan_s``) separately."""
+    from repro.runtime.events import EventEngine
+    from repro.runtime.fleet import ArrivalProcess, FleetSimulator
     cfg = FleetConfig(
         n_robots=n_robots, n_ticks=n_ticks, n_replicas=n_replicas,
         batch_size=16, seed=seed, engine="events",
@@ -336,8 +361,62 @@ def bench_scale(n_robots: int = SCALE_ROBOTS, n_ticks: int = SCALE_TICKS,
                                           rate_hz=SCALE_ARRIVAL_HZ),))
     cfg.replica_events = outage_schedule(cfg)
     t0 = time.perf_counter()
-    rep = run_fleet(cfg)
-    return rep, time.perf_counter() - t0
+    sim = FleetSimulator(cfg)
+    t1 = time.perf_counter()
+    rep = EventEngine(sim).run()
+    t2 = time.perf_counter()
+    prof = {"setup_s": t1 - t0, "loop_s": t2 - t1,
+            "replan_s": sim.replan_wall_s, **sim.profile}
+    return rep, t2 - t0, prof
+
+
+def bench_scaling_curve(sizes=SCALE_CURVE_SIZES, n_ticks: int = SCALE_TICKS,
+                        n_replicas: int = SCALE_REPLICAS, seed: int = 7):
+    """The scale scenario at each fleet size, ascending, with peak-RSS
+    sampled after each run (``ru_maxrss`` is a process high-water mark,
+    so ascending order keeps the column attributable and monotone —
+    ``tools/check_bench_schema.py`` asserts it).  Returns the
+    ``scaling_curve`` payload entries."""
+    import resource
+    rows = []
+    for n in sorted(sizes):
+        rep, wall, prof = bench_scale(n, n_ticks, n_replicas, seed)
+        rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+        rows.append({
+            "n_robots": int(n), "n_ticks": int(n_ticks),
+            "wall_s": wall, "peak_rss_bytes": int(rss),
+            "setup_s": prof["setup_s"], "loop_s": prof["loop_s"],
+            "replan_s": prof["replan_s"],
+            "n_requests": rep.n_requests,
+            "p999_s": rep.fleet_p999_s})
+    return rows
+
+
+def bench_autoscale(n_robots: int = 64, n_ticks: int = 600,
+                    n_replicas: int = 6, seed: int = 11,
+                    highs=AUTOSCALE_HIGH_S, cohorts=AUTOSCALE_COHORTS,
+                    rate_hz: float = AUTOSCALE_ARRIVAL_HZ):
+    """AutoScaler policy comparison: sweep the scale-up backlog watermark
+    over an arrival mix of two regional cohorts riding different
+    bandwidth regimes (per-process ``TraceConfig``).  All but two
+    replicas start parked (tick-0 leave events), so the watermark alone
+    decides how much capacity the load recruits; per-cohort outcomes
+    come back through the report's ``ProcessStats``.  Returns
+    ``[(high_s, FleetReport)]``."""
+    from repro.runtime.fleet import ArrivalProcess, ReplicaEvent
+    procs = tuple(ArrivalProcess(name, rate_hz=rate_hz, trace=tr)
+                  for name, tr in cohorts)
+    parked = tuple(ReplicaEvent(0, f"cloud{i}", "leave")
+                   for i in range(2, n_replicas))
+    rows = []
+    for high in highs:
+        cfg = FleetConfig(
+            n_robots=n_robots, n_ticks=n_ticks, n_replicas=n_replicas,
+            seed=seed, engine="events", arrival_processes=procs,
+            replica_events=parked, autoscale=True,
+            autoscale_high_s=high, autoscale_low_s=min(0.02, high / 4))
+        rows.append((high, run_fleet(cfg)))
+    return rows
 
 
 def print_report(rep: FleetReport) -> None:
@@ -367,7 +446,7 @@ def run_with_json(quiet: bool = False, n_robots: int = 24,
     payload: Dict = {"schema_version": BENCH_SCHEMA_VERSION,
                      "planner": {}, "fleet": {}, "codecs": {},
                      "multicut": {}, "streamed": {}, "queue": {},
-                     "scale": {},
+                     "scale": {}, "scaling_curve": [], "autoscale": {},
                      "config": {
                          "n_robots": n_robots, "n_ticks": n_ticks,
                          "n_replicas": n_replicas, "seed": seed,
@@ -462,7 +541,7 @@ def run_with_json(quiet: bool = False, n_robots: int = 24,
             "kv_high_watermark_bytes": qrep.kv_high_watermark_bytes}
     sc_robots = SCALE_SMOKE_ROBOTS if smoke else SCALE_ROBOTS
     sc_ticks = SCALE_SMOKE_TICKS if smoke else SCALE_TICKS
-    srep_scale, sc_wall = bench_scale(sc_robots, sc_ticks)
+    srep_scale, sc_wall, sc_prof = bench_scale(sc_robots, sc_ticks)
     payload["scale"] = {
         "engine": "events",
         "n_robots": sc_robots, "n_ticks": sc_ticks,
@@ -478,6 +557,35 @@ def run_with_json(quiet: bool = False, n_robots: int = 24,
         f"fleet_scale_p999,{srep_scale.fleet_p999_s * 1e6:.0f},"
         f"{srep_scale.n_requests}reqs",
     ]
+    curve_sizes = SCALE_CURVE_SMOKE_SIZES if smoke else SCALE_CURVE_SIZES
+    curve = bench_scaling_curve(curve_sizes,
+                                sc_ticks if smoke else SCALE_TICKS)
+    payload["scaling_curve"] = curve
+    for row in curve:
+        lines.append(f"fleet_curve_{row['n_robots']}_wall,"
+                     f"{row['wall_s'] * 1e6:.0f},"
+                     f"rss{row['peak_rss_bytes'] // (1 << 20)}MB")
+    if not smoke:
+        assert curve[-1]["wall_s"] <= SCALE_100K_BUDGET_S, (
+            f"100k run {curve[-1]['wall_s']:.1f}s blew the "
+            f"{SCALE_100K_BUDGET_S:.0f}s budget")
+    as_rows = bench_autoscale(n_robots=16 if smoke else 64,
+                              n_ticks=80 if smoke else 600,
+                              n_replicas=4 if smoke else 6)
+    for high, arep in as_rows:
+        tag = f"high_{high:g}"
+        payload["autoscale"][tag] = {
+            "high_s": high,
+            "n_autoscale_events": arep.n_autoscale_events,
+            "p50_s": arep.fleet_p50_s, "p95_s": arep.fleet_p95_s,
+            "cohorts": {ps.name: {
+                "p50_s": ps.p50_s, "p95_s": ps.p95_s,
+                "n_arrivals": ps.n_arrivals,
+                "n_rejected": ps.n_rejected}
+                for ps in arep.processes}}
+        lines.append(f"fleet_autoscale_{tag}_p95,"
+                     f"{arep.fleet_p95_s * 1e6:.0f},"
+                     f"{arep.n_autoscale_events}scale_events")
     if not quiet:
         print(f"planner: scalar {scalar_s * 1e3:.1f} ms vs vectorized "
               f"{vec_s * 1e3:.2f} ms over {cells} (model × bandwidth) cells "
@@ -541,6 +649,31 @@ def run_with_json(quiet: bool = False, n_robots: int = 24,
               f"p50 {srep_scale.fleet_p50_s * 1e3:.0f} ms, "
               f"p99 {srep_scale.fleet_p99_s * 1e3:.0f} ms, "
               f"p99.9 {srep_scale.fleet_p999_s * 1e3:.0f} ms")
+        print(f"  setup {sc_prof['setup_s']:.1f} s "
+              f"(plan {sc_prof['plan_s']:.1f} / ctl "
+              f"{sc_prof['controller_s']:.1f} / trace "
+              f"{sc_prof['trace_s']:.1f}), loop {sc_prof['loop_s']:.1f} s, "
+              f"replans {sc_prof['replan_s']:.2f} s")
+        print(f"\nscaling curve (vectorized events engine, chaos + "
+              f"arrivals):")
+        print(f"{'robots':>8s} {'wall s':>8s} {'setup s':>8s} "
+              f"{'loop s':>8s} {'replan s':>9s} {'rss MB':>8s}")
+        for row in curve:
+            print(f"{row['n_robots']:8d} {row['wall_s']:8.1f} "
+                  f"{row['setup_s']:8.1f} {row['loop_s']:8.1f} "
+                  f"{row['replan_s']:9.2f} "
+                  f"{row['peak_rss_bytes'] / (1 << 20):8.0f}")
+        print(f"\nautoscale watermark sweep ({AUTOSCALE_ARRIVAL_HZ:g} "
+              f"req/s per cohort, metro vs rural links):")
+        print(f"{'high_s':>7s} {'events':>7s} {'fleet p95':>10s} "
+              + "".join(f" {name + ' p95':>11s}"
+                        for name, _ in AUTOSCALE_COHORTS))
+        for high, arep in as_rows:
+            by_name = {ps.name: ps for ps in arep.processes}
+            print(f"{high:7.2f} {arep.n_autoscale_events:7d} "
+                  f"{arep.fleet_p95_s * 1e3:8.1f}ms "
+                  + "".join(f" {by_name[name].p95_s * 1e3:9.1f}ms"
+                            for name, _ in AUTOSCALE_COHORTS))
     return lines, payload
 
 
@@ -562,7 +695,20 @@ def main() -> None:
                     help="seconds-scale CI sizes")
     ap.add_argument("--csv", action="store_true",
                     help="emit only the CSV lines")
+    ap.add_argument("--profile", action="store_true",
+                    help="run only bench_scale and print its "
+                         "setup/loop/replan wall split")
     args = ap.parse_args()
+    if args.profile:
+        rep, wall, prof = bench_scale(
+            args.robots if args.robots != 24 else SCALE_ROBOTS,
+            args.ticks if args.ticks != 400 else SCALE_TICKS)
+        print(f"scale run: wall {wall:.2f} s "
+              f"({rep.n_requests} reqs, {rep.n_open_arrivals} arrivals)")
+        for k in ("setup_s", "plan_s", "controller_s", "trace_s",
+                  "loop_s", "replan_s"):
+            print(f"  {k:13s} {prof[k]:8.3f} s")
+        return
     lines = run(quiet=args.csv, n_robots=args.robots, n_ticks=args.ticks,
                 n_replicas=args.replicas, seed=args.seed, smoke=args.smoke)
     if args.csv:

@@ -160,6 +160,13 @@ class EventEngine:
         self.cfg = sim.cfg
         self.validate = validate
         self.heap = EventHeap(validate=validate)
+        # vectorized ROBOT phase: same-tick robot wake-ups collect into
+        # per-tick index buckets (one PH_ROBOT marker event per tick)
+        # and run as one ``_robot_step_batch``; ``vectorized=False``
+        # keeps the per-robot heap entries and the scalar ``_robot_step``
+        # as the parity oracle
+        self.vectorized = bool(self.cfg.vectorized)
+        self._wake_buckets: Dict[int, List[np.ndarray]] = {}
         # replica rank = position in the SORTED name list: the tick loop
         # services `for r in routable` where routable inherits the
         # ElasticPool's sorted order, so heap idx must rank the same way
@@ -182,8 +189,11 @@ class EventEngine:
         self._proc_rng = []
         for p, proc in enumerate(self.cfg.arrival_processes):
             from ..core.network import NetworkSim, generate_trace
+            # a process may carry its own regional bandwidth regime
+            # (ArrivalProcess.trace); None inherits the fleet-wide one
+            tr = proc.trace if proc.trace is not None else self.cfg.trace
             self._proc_nets.append(NetworkSim(
-                generate_trace(self.cfg.n_ticks + 1, self.cfg.trace,
+                generate_trace(self.cfg.n_ticks + 1, tr,
                                seed=(self.cfg.seed * 100_003
                                      + self.cfg.n_robots + p)),
                 tick_s=self.cfg.tick_s, rtt_s=self.cfg.rtt_s))
@@ -264,6 +274,18 @@ class EventEngine:
         during the current tick — make sure it gets a service pass."""
         self._push_service(self._cur_tick, replica)
 
+    def _bucket_add(self, tick: int, idx: np.ndarray) -> None:
+        """Collect woken robot indices into the tick's bucket; the FIRST
+        insert for a tick pushes one PH_ROBOT marker event (idx 0) that
+        triggers the whole batch.  Wake-ups always target strictly future
+        ticks, so a popped bucket's tick can never be re-entered."""
+        parts = self._wake_buckets.get(tick)
+        if parts is None:
+            self._wake_buckets[tick] = [idx]
+            self.heap.push(tick, PH_ROBOT, 0)
+        else:
+            parts.append(idx)
+
     def _wake_robot(self, i: int) -> None:
         """``FleetSimulator._complete`` hook: the robot's closed loop is
         released at ``next_free``; schedule its next control step at the
@@ -272,13 +294,51 @@ class EventEngine:
         t = max(self._cur_tick + 1,
                 self._tick_at_or_after(float(self.sim.next_free[i])))
         if t < self.cfg.n_ticks:
-            self.heap.push(t, PH_ROBOT, i)
+            if self.vectorized:
+                self._bucket_add(t, np.asarray([i], dtype=np.int64))
+            else:
+                self.heap.push(t, PH_ROBOT, i)
+
+    def _wake_robots(self, idx: np.ndarray) -> None:
+        """``FleetSimulator._complete_batch`` hook: vectorized
+        ``_wake_robot`` over a completion batch.  The wake tick replays
+        ``_tick_at_or_after``'s ceil-then-adjust float comparisons
+        elementwise, so no robot shifts across a tick edge relative to
+        the scalar path."""
+        ts = self.cfg.tick_s
+        nf = self.sim.next_free[idx]
+        t = np.ceil(nf / ts).astype(np.int64)
+        while True:
+            m = t.astype(np.float64) * ts < nf
+            if not m.any():
+                break
+            t[m] += 1
+        while True:
+            m = (t > 0) & ((t - 1).astype(np.float64) * ts >= nf)
+            if not m.any():
+                break
+            t[m] -= 1
+        t = np.maximum(t, self._cur_tick + 1)
+        keep = t < self.cfg.n_ticks
+        if not keep.all():
+            t, idx = t[keep], idx[keep]
+        if not len(t):
+            return
+        order = np.argsort(t, kind="stable")
+        t, idx = t[order], idx[order]
+        uniq, starts = np.unique(t, return_index=True)
+        bounds = list(starts[1:]) + [len(t)]
+        for k, tk in enumerate(uniq):
+            self._bucket_add(int(tk), idx[int(starts[k]):int(bounds[k])])
 
     def _schedule_initial(self) -> None:
         cfg, heap = self.cfg, self.heap
         self._push_pool(0)
-        for i in range(cfg.n_robots):
-            heap.push(0, PH_ROBOT, i)
+        if self.vectorized:
+            self._bucket_add(0, np.arange(cfg.n_robots, dtype=np.int64))
+        else:
+            for i in range(cfg.n_robots):
+                heap.push(0, PH_ROBOT, i)
         for pos, ev in enumerate(self._rev):
             t = max(0, ev.tick)      # the tick loop applies tick<=0 at 0
             if t < cfg.n_ticks:
@@ -450,6 +510,7 @@ class EventEngine:
         n_ticks = cfg.n_ticks
         tick_s = cfg.tick_s
         sim._wake = self._wake_robot
+        sim._wake_batch = self._wake_robots if self.vectorized else None
         sim._enq = self._note_enqueue
         try:
             self._schedule_initial()
@@ -458,6 +519,26 @@ class EventEngine:
                 self._cur_tick = tick
                 if phase == PH_ROBOT:
                     now = tick * tick_s
+                    if self.vectorized:
+                        parts = self._wake_buckets.pop(tick, None)
+                        if parts is None:
+                            continue    # marker raced an emptied bucket
+                        idxs = (parts[0] if len(parts) == 1
+                                else np.concatenate(parts))
+                        idxs = np.sort(idxs)
+                        free = now >= sim.next_free[idxs]
+                        if not free.all():
+                            if self.validate:
+                                raise AssertionError(
+                                    f"{int((~free).sum())} robots woken "
+                                    f"busy at tick {tick}")
+                            idxs = idxs[free]   # stale wake: skip
+                        if self.validate:
+                            assert len(np.unique(idxs)) == len(idxs)
+                        if len(idxs):
+                            sim._robot_step_batch(idxs, tick, now,
+                                                  self.routable)
+                        continue
                     if now < sim.next_free[idx]:
                         if self.validate:
                             raise AssertionError(
@@ -509,6 +590,7 @@ class EventEngine:
                     self._handle_scale(tick)
         finally:
             sim._wake = None
+            sim._wake_batch = None
             sim._enq = None
         sim._final_drain()
         if self.validate:

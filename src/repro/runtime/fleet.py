@@ -79,6 +79,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -87,7 +88,7 @@ from ..configs import get_config
 from ..core.codec import Codec, resolve_codecs
 from ..core.controller import RoboECC
 from ..core.hardware import A100, ORIN, DeviceSpec
-from ..core.network import NetworkSim, TraceConfig, generate_trace
+from ..core.network import NetworkSim, TraceConfig, generate_trace_matrix
 from ..core.pipeline import (DEFAULT_CHUNK_GRID, stream_applies,
                              stream_makespan_scalar)
 from ..core.segmentation import (GraphArrays, graph_arrays, sweep_multicut,
@@ -143,6 +144,10 @@ class ArrivalProcess:
     diurnal_amp: float = 0.5       # relative amplitude, kind="diurnal"
     diurnal_period_s: float = 30.0
     bw_bps: Optional[float] = None  # fixed link; None -> own seeded trace
+    # per-process bandwidth regime: a cohort of users behind a different
+    # network (e.g. metro fiber vs rural LTE) rides its own TraceConfig;
+    # None inherits the fleet-wide one.  Ignored when bw_bps is fixed.
+    trace: Optional[TraceConfig] = None
 
 
 @dataclasses.dataclass
@@ -229,6 +234,14 @@ class FleetConfig:
     # parity-matrix config (tests/test_engine_parity.py) and the only
     # engine that scales to 10k+ robots (busy robots cost nothing).
     engine: str = "ticks"
+    # vectorized ROBOT phase (events engine only): same-tick control
+    # steps run as ONE numpy pass over the struct-of-arrays robot state
+    # (``FleetSimulator._robot_step_batch``) instead of n per-robot
+    # Python calls.  The batch replays the scalar arithmetic in the
+    # scalar evaluation order, so reports are dataclass-equal either way
+    # (tests/test_engine_parity.py pins it); ``vectorized=False`` keeps
+    # the per-robot ``_robot_step`` as the parity oracle.
+    vectorized: bool = True
     # open-loop arrival traffic (events engine only; the tick loop
     # refuses it — it has no sub-tick arrival machinery)
     arrival_processes: Sequence[ArrivalProcess] = ()
@@ -363,6 +376,7 @@ class FleetSimulator:
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self._dead_cloud = cfg.cloud.with_eta(1e-12, 1e-12)
+        _t_init = time.perf_counter()
 
         # one graph + cost-array set per arch, shared by all its robots
         self.arch_of: List[str] = [cfg.archs[i % len(cfg.archs)]
@@ -415,23 +429,46 @@ class FleetSimulator:
         self.codec_of = np.asarray(
             [int(self.plan_codec[a][k0]) for a in self.arch_of],
             dtype=np.int64)
-        self.controllers: List[RoboECC] = [
-            RoboECC(get_config(a), cfg.edge, cfg.cloud,
-                    workload=cfg.workload,
-                    cloud_budget_bytes=cfg.cloud_budget_bytes,
-                    pool_overhead_target=cfg.pool_overhead_target,
-                    nominal_bw_bps=cfg.nominal_bw_bps,
-                    codec=self.codecs[self.codec_of[i]],
-                    graph=self.graphs[a],
-                    multicut=cfg.multicut,
-                    down_bw_factor=cfg.down_bw_factor,
-                    streamed=cfg.streamed,
-                    chunk_grid=cfg.chunk_grid,
-                    plan_rtt_s=cfg.rtt_s,
-                    queue_hz=self.plan_queue_hz,
-                    queue_cv2=cfg.queue_cv2,
-                    queue_service_scale=cfg.queue_service_scale)
-            for i, a in enumerate(self.arch_of)]
+        _t_plan = time.perf_counter()
+        # ONE controller per distinct arch, shared by every robot of that
+        # arch: construction and replan() are deterministic functions of
+        # (arch, devices, budget, codec, queue prior) — identical for all
+        # robots of an arch — so n_robots controller objects were
+        # n_robots recomputations of the same Alg. 1 sweep (the dominant
+        # setup cost at 10k+).  ``self.controllers`` stays a length-n
+        # list (robot i -> its arch's shared controller); controller
+        # state only changes inside ``_on_replicas`` replan waves, which
+        # replan each DISTINCT controller once.
+        uniq: Dict[str, RoboECC] = {
+            a: RoboECC(get_config(a), cfg.edge, cfg.cloud,
+                       workload=cfg.workload,
+                       cloud_budget_bytes=cfg.cloud_budget_bytes,
+                       pool_overhead_target=cfg.pool_overhead_target,
+                       nominal_bw_bps=cfg.nominal_bw_bps,
+                       codec=self.codecs[int(self.plan_codec[a][k0])],
+                       graph=self.graphs[a],
+                       multicut=cfg.multicut,
+                       down_bw_factor=cfg.down_bw_factor,
+                       streamed=cfg.streamed,
+                       chunk_grid=cfg.chunk_grid,
+                       plan_rtt_s=cfg.rtt_s,
+                       queue_hz=self.plan_queue_hz,
+                       queue_cv2=cfg.queue_cv2,
+                       queue_service_scale=cfg.queue_service_scale)
+            for a in archs}
+        self.controllers: List[RoboECC] = [uniq[a] for a in self.arch_of]
+        # replan memo: a chaos schedule replays the same two cloud
+        # conditions ("dead"/"alive") every wave, and replan() under a
+        # fixed condition is deterministic — so snapshot the post-replan
+        # controller state per (controller, condition) and restore it on
+        # repeat waves.  The "alive" snapshot is the construction state
+        # (replan with the original cloud + budget reproduces it
+        # bit-for-bit), so a full outage/rejoin cycle costs at most one
+        # dead-condition search per arch for the whole run.
+        self._replan_memo: Dict[tuple, dict] = {
+            (id(c), "alive"): self._ctl_snapshot(c) for c in uniq.values()}
+        self.replan_wall_s = 0.0
+        _t_ctl = time.perf_counter()
         # per-robot effective placement state (for n_cut_moves)
         self.place_s1 = np.asarray([int(self.plan[a][k0])
                                     for a in self.arch_of], dtype=np.int64)
@@ -446,12 +483,35 @@ class FleetSimulator:
         # of chasing controller attributes + np.clip
         self._pools1: List = [None] * cfg.n_robots
         self._pools2: List = [None] * cfg.n_robots
+        # struct-of-arrays mirror of the pool bounds, refreshed alongside
+        # the Pool cache: the vectorized ROBOT phase clamps with numpy
+        # min/max (bit-identical to Pool.clamp) instead of method calls
+        self._pool_lo1 = np.zeros(cfg.n_robots, dtype=np.int64)
+        self._pool_hi1 = np.zeros(cfg.n_robots, dtype=np.int64)
+        self._pool_lo2 = np.zeros(cfg.n_robots, dtype=np.int64)
+        self._pool_hi2 = np.zeros(cfg.n_robots, dtype=np.int64)
+        self._has_pool2 = np.zeros(cfg.n_robots, dtype=bool)
         self._refresh_pool_cache()
+        # one bulk (n_robots, n_ticks+1) bandwidth matrix — row i is
+        # bit-identical to the historical per-robot
+        # ``generate_trace(..., seed=seed*100_003 + i)`` — and the
+        # NetworkSim objects wrap the rows as views (no copies): the
+        # vectorized ROBOT phase reads ``trace_mat[idx, tick]`` directly,
+        # the scalar/streamed paths keep their per-robot cursor API
+        self.trace_mat = generate_trace_matrix(
+            cfg.n_ticks + 1, cfg.trace,
+            [cfg.seed * 100_003 + i for i in range(cfg.n_robots)])
         self.nets: List[NetworkSim] = [
-            NetworkSim(generate_trace(cfg.n_ticks + 1, cfg.trace,
-                                      seed=cfg.seed * 100_003 + i),
-                       tick_s=cfg.tick_s, rtt_s=cfg.rtt_s)
-            for i in range(cfg.n_robots)]
+            NetworkSim(row, tick_s=cfg.tick_s, rtt_s=cfg.rtt_s)
+            for row in self.trace_mat]
+        _t_trace = time.perf_counter()
+        # setup wall breakdown (``benchmarks/fleet_bench.py --profile``):
+        # plan tables (+ graphs), controller construction, trace matrix
+        self.profile = {"plan_s": _t_plan - _t_init,
+                        "controller_s": _t_ctl - _t_plan,
+                        "trace_s": _t_trace - _t_ctl}
+        # lazily-built stacked plan/cost tables for _robot_step_batch
+        self._bst: Optional[dict] = None
 
         self.replica_names = [f"cloud{i}" for i in range(cfg.n_replicas)]
         self.pool = ElasticPool(on_change=self._on_replicas,
@@ -485,8 +545,11 @@ class FleetSimulator:
         self.latencies: List[List[float]] = [[] for _ in range(cfg.n_robots)]
         # engine hooks (events engine only; None = tick loop, no-ops):
         # _wake(robot) fires after _complete releases a robot's closed
-        # loop, _enq(replica) after cloud work lands on a replica
+        # loop, _wake_batch(idx_array) is its vectorized counterpart
+        # (one call per completion batch), _enq(replica) after cloud
+        # work lands on a replica
         self._wake = None
+        self._wake_batch = None
         self._enq = None
         # open-loop arrival traffic state (events engine fills these)
         self.proc_latencies: List[List[float]] = [
@@ -557,6 +620,19 @@ class FleetSimulator:
                 {a: np.ones(len(self.bw_grid), dtype=int) for a in archs})
 
     def _estimate_arrival_hz(self) -> float:
+        """Per-replica cloud arrival rate for the queue-aware plan tables:
+        the open-loop estimate (``_open_arrival_hz``) capped by the
+        closed-network population bound (``_closed_loop_cap_hz``).  The
+        open estimate alone treats every robot as re-issuing at its
+        zero-wait cycle rate — on a fast cloud that over-counts badly
+        (the closed loop slows itself down as queues build), drives the
+        M/G/1 term to ρ ≥ 1 and makes the planner retreat to plan-harmful
+        edge-heavy splits (docs/EXPERIMENTS.md §Queue-aware)."""
+        lam = self._open_arrival_hz()
+        cap = self._closed_loop_cap_hz()
+        return min(lam, cap) if cap > 0.0 else lam
+
+    def _open_arrival_hz(self) -> float:
         """Per-replica cloud arrival rate implied by the queue-blind plan
         at the nominal bandwidth: every robot whose nominal-bin plan has a
         non-empty cloud window re-issues as fast as its planned closed
@@ -585,6 +661,40 @@ class FleetSimulator:
                 lam += 1.0 / total
         return lam / max(1, cfg.n_replicas)
 
+    def _closed_loop_cap_hz(self) -> float:
+        """Closed-network population bound on the per-replica arrival
+        rate.  The fleet is a CLOSED queueing network — each robot has at
+        most one request in flight — and a single server cycled by ``N_r``
+        customers can never be driven past utilization
+        ``ρ = N_r / (N_r + 1)`` (the asymptotic mean-value-analysis bound;
+        at ρ above it the customers would all have to be queued *and* in
+        service at once).  With ``S̄`` the mean planned cloud service time
+        of the robots that use the cloud, that bounds the sustainable
+        per-replica rate at ``λ ≤ ρ_max / S̄`` — equivalently
+        ``λ ≤ N_r / E[cycle time]`` with the cycle floored at its service
+        content.  The full M/M/1/K / exact-MVA prior (wait-aware cycle
+        times, per-class populations) stays on the roadmap; this cap is
+        the honest slice that stops the open estimator's ρ ≥ 1 retreat.
+        Returns 0.0 when no robot plans cloud work (no cap needed)."""
+        cfg = self.cfg
+        k0 = int(np.searchsorted(self._bw_mid, cfg.nominal_bw_bps))
+        services = []
+        for a in self.arch_of:
+            arrays = self.arrays[a]
+            s1 = int(self.plan[a][k0])
+            s2 = int(self.plan_s2[a][k0])
+            if s1 >= s2:
+                continue                       # no cloud work planned
+            services.append(float(arrays.cloud_s[s1] - arrays.cloud_s[s2]))
+        if not services:
+            return 0.0
+        n_r = len(services) / max(1, cfg.n_replicas)
+        s_bar = (sum(services) / len(services)) * cfg.queue_service_scale
+        if s_bar <= 0.0:
+            return 0.0
+        rho_max = n_r / (n_r + 1.0)
+        return rho_max / s_bar
+
     @property
     def place_of(self) -> List[tuple]:
         """Compatibility view of the per-robot placement state (the
@@ -592,34 +702,79 @@ class FleetSimulator:
         return list(zip(self.place_s1.tolist(), self.place_s2.tolist()))
 
     def _refresh_pool_cache(self) -> None:
-        """Re-snapshot every robot's parameter-sharing pools.  Pools move
-        only inside ``RoboECC.replan()``, so this runs at construction and
-        after each ``_on_replicas`` replan wave — the per-request clamp
-        then never touches the controller."""
+        """Re-snapshot every robot's parameter-sharing pools — the Pool
+        objects for the scalar clamp and the lo/hi bound arrays for the
+        vectorized one.  Pools move only inside ``RoboECC.replan()``, so
+        this runs at construction and after each ``_on_replicas`` replan
+        wave — the per-request clamp then never touches the controller."""
         for i, ctl in enumerate(self.controllers):
-            self._pools1[i] = ctl.pool
-            self._pools2[i] = getattr(ctl, "pool2", None)
+            p1 = ctl.pool
+            p2 = getattr(ctl, "pool2", None)
+            self._pools1[i] = p1
+            self._pools2[i] = p2
+            self._pool_lo1[i] = p1.start
+            self._pool_hi1[i] = p1.end
+            if p2 is not None:
+                self._pool_lo2[i] = p2.start
+                self._pool_hi2[i] = p2.end
+                self._has_pool2[i] = True
+            else:
+                self._pool_lo2[i] = 0
+                self._pool_hi2[i] = 0
+                self._has_pool2[i] = False
 
     # ----------------------------------------------------------- elasticity
-    def _on_replicas(self, live: List[str]) -> None:
-        """ElasticPool transition: full outage → every robot replans to
-        edge-only (split = n); first re-join → replan restores Alg. 1."""
+    # attributes ``RoboECC.replan`` reassigns — the replan memo snapshots
+    # exactly these (all are replaced wholesale, never mutated in place,
+    # so a shallow snapshot/restore is exact)
+    _REPLAN_ATTRS = ("edge_dev", "cloud_dev", "seg", "placement", "split",
+                     "pool", "pool2")
+
+    def _ctl_snapshot(self, ctl: RoboECC) -> dict:
+        return {a: getattr(ctl, a) for a in self._REPLAN_ATTRS}
+
+    def _replan_wave(self, condition: str) -> None:
+        """Replan every DISTINCT controller for a cloud condition
+        (``"dead"`` = full outage, ``"alive"`` = restored), restoring a
+        memoized snapshot when this controller has already been replanned
+        for the condition — ``replan()`` under a fixed condition is
+        deterministic, so the snapshot IS the replan result."""
         cfg = self.cfg
-        if not live and self._cloud_up:
-            self._cloud_up = False
-            for ctl in self.controllers:
+        t0 = time.perf_counter()
+        done: set = set()
+        for ctl in self.controllers:
+            if id(ctl) in done:
+                continue
+            done.add(id(ctl))
+            key = (id(ctl), condition)
+            snap = self._replan_memo.get(key)
+            if snap is not None:
+                for attr, val in snap.items():
+                    setattr(ctl, attr, val)
+                continue
+            if condition == "dead":
                 ctl.replan(cloud=self._dead_cloud,
                            nominal_bw_bps=cfg.nominal_bw_bps)
-                self.n_replans += 1
-            self._refresh_pool_cache()
-        elif live and not self._cloud_up:
-            self._cloud_up = True
-            for ctl in self.controllers:
+            else:
                 ctl.replan(cloud=cfg.cloud,
                            cloud_budget_bytes=cfg.cloud_budget_bytes,
                            nominal_bw_bps=cfg.nominal_bw_bps)
-                self.n_replans += 1
-            self._refresh_pool_cache()
+            self._replan_memo[key] = self._ctl_snapshot(ctl)
+        # accounting matches the historical one-replan-per-robot waves:
+        # sharing controllers dedups the WORK, not the event count
+        self.n_replans += cfg.n_robots
+        self._refresh_pool_cache()
+        self.replan_wall_s += time.perf_counter() - t0
+
+    def _on_replicas(self, live: List[str]) -> None:
+        """ElasticPool transition: full outage → every robot replans to
+        edge-only (split = n); first re-join → replan restores Alg. 1."""
+        if not live and self._cloud_up:
+            self._cloud_up = False
+            self._replan_wave("dead")
+        elif live and not self._cloud_up:
+            self._cloud_up = True
+            self._replan_wave("alive")
 
     # ------------------------------------------------------------- planning
     def _planned_placement(self, robot: int, bw_bps: float) -> tuple:
@@ -881,6 +1036,243 @@ class FleetSimulator:
             self._complete(i, now, e + t + down)
             if not self._cloud_up:
                 self.n_outage_completions += 1
+
+    # ------------------------------------------------- vectorized robot phase
+    # ``_robot_step_batch`` prices every robot that wakes on the same tick
+    # in one numpy pass over struct-of-arrays state.  Parity discipline:
+    # each array expression mirrors the scalar ``_robot_step`` arithmetic
+    # OPERATION FOR OPERATION (same association order, same branch
+    # structure via masks) — elementwise numpy ufuncs are bitwise
+    # identical to their scalar counterparts, so the batch is
+    # full-`FleetReport` dataclass-equal to the scalar loop
+    # (tests/test_engine_parity.py pins this on the vectorized axis).
+    # Order-sensitive side effects (RNG draws, work ids, batcher adds,
+    # streamed pricing, float accumulators) drop to scalar loops in
+    # ascending robot index — exactly the order the event heap pops
+    # same-tick ROBOT events.
+
+    def _ensure_batch_state(self) -> dict:
+        """Stacked per-arch plan/cost tables for the batched robot phase,
+        built lazily on first use (plan tables are frozen after
+        ``__init__``; pools/codecs live in their own refreshed arrays).
+        Arch tables are padded to the widest graph — padding lanes are
+        never indexed because every split is bounded by its own arch's
+        ``n``."""
+        if self._bst is not None:
+            return self._bst
+        cfg = self.cfg
+        archs = list(self.graphs)
+        aidx = {a: j for j, a in enumerate(archs)}
+        A, B = len(archs), len(self.bw_grid)
+        nmax = max(self.arrays[a].n for a in archs)
+        s1_t = np.zeros((A, B), dtype=np.int64)
+        s2_t = np.zeros((A, B), dtype=np.int64)
+        cd_t = np.zeros((A, B), dtype=np.int64)
+        kc_t = np.ones((A, B), dtype=np.int64)
+        E = np.zeros((A, nmax + 1))
+        C = np.zeros((A, nmax + 1))
+        W = np.zeros((A, nmax + 1))
+        DW = np.zeros((A, nmax + 1))
+        n_arr = np.zeros(A, dtype=np.int64)
+        has_down = np.zeros(A, dtype=bool)
+        edge_only = np.zeros(A)
+        for j, a in enumerate(archs):
+            s1_t[j] = np.asarray(self.plan[a], dtype=np.int64)
+            s2_t[j] = np.asarray(self.plan_s2[a], dtype=np.int64)
+            cd_t[j] = np.asarray(self.plan_codec[a], dtype=np.int64)
+            kc_t[j] = np.asarray(self.plan_chunks[a], dtype=np.int64)
+            ar = self.arrays[a]
+            n = ar.n
+            E[j, :n + 1] = ar.edge_s
+            C[j, :n + 1] = ar.cloud_s
+            W[j, :n + 1] = ar.wire_bytes
+            if ar.down_wire_bytes is not None:
+                DW[j, :n + 1] = ar.down_wire_bytes
+                has_down[j] = True
+            n_arr[j] = n
+            edge_only[j] = float(ar.edge_s[n])
+        cd = self.codecs
+        self._arch_idx = np.asarray([aidx[a] for a in self.arch_of],
+                                    dtype=np.int64)
+        self._bst = {
+            "s1": s1_t, "s2": s2_t, "codec": cd_t, "chunks": kc_t,
+            "E": E, "C": C, "W": W, "DW": DW, "n": n_arr,
+            "has_down": has_down, "edge_only": edge_only,
+            # codec cost tables (linear per raw byte — codec.py contract)
+            "wf": np.asarray([c.wire_factor for c in cd]),
+            "enc_up": np.asarray([c.encode_s_per_byte(cfg.edge)
+                                  for c in cd]),
+            "dec_up": np.asarray([c.decode_s_per_byte(cfg.cloud)
+                                  for c in cd]),
+            "enc_dn": np.asarray([c.encode_s_per_byte(cfg.cloud)
+                                  for c in cd]),
+            "dec_dn": np.asarray([c.decode_s_per_byte(cfg.edge)
+                                  for c in cd]),
+        }
+        return self._bst
+
+    def _net_time_vec(self, wire: np.ndarray, bw: np.ndarray,
+                      ci: np.ndarray, applicable: np.ndarray,
+                      enc_rates: np.ndarray, dec_rates: np.ndarray
+                      ) -> np.ndarray:
+        """Vector mirror of ``segmentation.net_time`` with a codec and
+        both devices bound: codec path = compressed wire + rtt + encode +
+        decode (the ``transport_s`` term order), non-applicable path =
+        raw wire + rtt, zero raw bytes free."""
+        bst = self._bst
+        rtt = self.cfg.rtt_s
+        tc = (wire * bst["wf"][ci]) / bw + rtt
+        tc = tc + wire * enc_rates[ci]
+        tc = tc + wire * dec_rates[ci]
+        tp = wire / bw + rtt
+        t = np.where(applicable, tc, tp)
+        return np.where(wire == 0.0, 0.0, t)
+
+    def _complete_batch(self, idx: np.ndarray, issued_s: float,
+                        lat: np.ndarray) -> None:
+        """Vector mirror of ``_complete`` over a batch of robots."""
+        self.next_free[idx] = issued_s + lat
+        lats = self.latencies
+        for j, i in enumerate(idx):
+            lats[i].append(float(lat[j]))
+        if self._wake_batch is not None:
+            self._wake_batch(idx)
+        elif self._wake is not None:
+            for i in idx:
+                self._wake(int(i))
+
+    def _robot_step_batch(self, idxs: np.ndarray, tick: int, now: float,
+                          routable: List[str]) -> None:
+        """All of one tick's free robots in a single vectorized pass:
+        plan-table lookup, codec/cut/chunk state advance, placement
+        pricing, then dispatch.  ``idxs`` must be ascending and unique;
+        every robot's ``NetworkSim`` conceptually sits at ``tick``
+        (bandwidth reads come straight from ``trace_mat``; only streamed
+        rows touch their cursor, via ``seek``)."""
+        cfg = self.cfg
+        bst = self._ensure_batch_state()
+        ai = self._arch_idx[idxs]
+        if not self._cloud_up:
+            # outage fast path: every robot executes edge-only (the
+            # scalar branch's ``e + 0.0 + 0.0`` is bitwise ``e``)
+            self._complete_batch(idxs, now, bst["edge_only"][ai])
+            self.n_outage_completions += len(idxs)
+            return
+
+        bw = self.trace_mat[idxs, tick]
+        k = np.searchsorted(self._bw_mid, bw)
+        n_v = bst["n"][ai]
+        s1p = bst["s1"][ai, k]
+        s2p = bst["s2"][ai, k]
+        # codec adoption — same gate as _planned_placement: only bins
+        # whose plan has a codec-applicable transport leg
+        cur = self.codec_of[idxs]
+        adopt = (s1p < s2p) & (((0 < s1p) & (s1p < n_v)) | (s2p < n_v))
+        ci = np.where(adopt, bst["codec"][ai, k], cur)
+        self.n_codec_switches += int(np.count_nonzero(ci != cur))
+        self.codec_of[idxs] = ci
+        # pool clamps (numpy min/max == Pool.clamp)
+        s1 = np.minimum(np.maximum(s1p, self._pool_lo1[idxs]),
+                        self._pool_hi1[idxs])
+        s2c = np.minimum(np.maximum(s2p, self._pool_lo2[idxs]),
+                         self._pool_hi2[idxs])
+        s2 = np.where(self._has_pool2[idxs], np.maximum(s1, s2c), n_v)
+        moved = ((s1 != self.place_s1[idxs])
+                 | (s2 != self.place_s2[idxs]))
+        self.n_cut_moves += int(np.count_nonzero(moved))
+        self.place_s1[idxs] = s1
+        self.place_s2[idxs] = s2
+        # chunk state — stream_applies gate, degenerate placements reset
+        wire_s1 = bst["W"][ai, s1]
+        if cfg.streamed:
+            kc = bst["chunks"][ai, k]
+            ok = (s1 < s2) & (0 < s1) & (s1 < n_v) & (wire_s1 > 0)
+            kc = np.where(ok, kc, 1)
+        else:
+            kc = np.ones(len(idxs), dtype=np.int64)
+        self.n_chunk_reconfigs += int(
+            np.count_nonzero(kc != self.chunks_of[idxs]))
+        self.chunks_of[idxs] = kc
+
+        # pricing — mirrors latency()/placement_latency() + the 2-cut
+        # head/tail shuffle in _robot_step, association order preserved
+        Es1 = bst["E"][ai, s1]
+        En = bst["E"][ai, n_v]
+        Es2 = bst["E"][ai, s2]
+        two = s2 < n_v
+        collab = s1 < s2
+        eh = (Es1 + En) - Es2
+        tail = En - Es2
+        c2 = bst["C"][ai, s1] - bst["C"][ai, s2]
+        tv = self._net_time_vec(wire_s1, bw, ci, (0 < s1) & (s1 < n_v),
+                                bst["enc_up"], bst["dec_up"])
+        # 2-cut with s1 >= s2 short-circuits before the transport terms
+        t = np.where(two & ~collab, 0.0, tv)
+        c = np.where(two, np.where(collab, c2, 0.0), bst["C"][ai, s1])
+        dn = np.zeros(len(idxs))
+        dmask = two & collab & bst["has_down"][ai]
+        if dmask.any():
+            dnv = self._net_time_vec(
+                bst["DW"][ai, s2], bw * cfg.down_bw_factor, ci,
+                (0 < s2) & (s2 < n_v), bst["enc_dn"], bst["dec_dn"])
+            dn = np.where(dmask, dnv, 0.0)
+        e = np.where(two, eh - tail, Es1)
+        down = np.where(two, dn + tail, 0.0)
+
+        # streamed uplinks price against the per-tick trace — inherently
+        # sequential per robot, so scalar in index order
+        if cfg.streamed:
+            for j in np.flatnonzero((kc > 1) & (c > 0.0)):
+                i = int(idxs[j])
+                self.nets[i].seek(tick)
+                t[j], bub = self._stream_uplink(
+                    i, self.arrays[self.arch_of[i]], int(s1[j]),
+                    self.codecs[int(ci[j])], float(e[j]), float(c[j]))
+                self.n_streamed_requests += 1
+                self._bubble_sum += bub
+
+        # dispatch: cloud work in ascending robot order (work ids, RNG
+        # draws and batcher adds replay the scalar sequence), local
+        # completions batched
+        cloudy = c > 0.0
+        if routable:
+            for j in np.flatnonzero(cloudy):
+                i = int(idxs[j])
+                ej, tj, cj = float(e[j]), float(t[j]), float(c[j])
+                wid = self._next_wid
+                self._next_wid += 1
+                work = _CloudWork(i, now, now + ej + tj, ej, tj, cj,
+                                  float(down[j]), bool(two[j]))
+                self._pending[wid] = work
+                self.next_free[i] = float("inf")
+                if cfg.continuous:
+                    slow = float(np.exp(self.rng.normal(
+                        0.0, cfg.straggler_sigma)))
+                    if self.rng.random() < cfg.tail_prob:
+                        slow *= cfg.tail_scale
+                    kvc = self.kv_cumsum[self.arch_of[i]]
+                    replica = min(routable, key=lambda r:
+                                  self.cbatchers[r].backlog_s)
+                    self.cbatchers[replica].add(
+                        Request(wid, now + ej + tj, 0), cj * slow,
+                        float(kvc[int(s1[j])] - kvc[int(s2[j])]))
+                else:
+                    replica = self.mitigator.pick_primary(routable)
+                    self.batchers[replica].add(
+                        Request(wid, now + ej + tj, 0))
+                if self._enq is not None:
+                    self._enq(replica)
+        else:
+            for j in np.flatnonzero(cloudy):
+                i = int(idxs[j])
+                ej, tj = float(e[j]), float(t[j])
+                self._fallback_one(_CloudWork(
+                    i, now, now + ej + tj, ej, tj, float(c[j]),
+                    float(down[j]), bool(two[j])))
+        loc = np.flatnonzero(~cloudy)
+        if len(loc):
+            self._complete_batch(idxs[loc], now,
+                                 (e[loc] + t[loc]) + down[loc])
 
     def _drain_dead(self, now: float, routable: List[str]) -> None:
         """Replicas that died with queued work: re-route or fall back."""

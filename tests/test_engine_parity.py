@@ -4,11 +4,18 @@ dataclass-equal, every float bit-identical — across the feature matrix
 {micro, continuous} x {plain, streamed} x {single-cut, multi-cut}, outage
 schedules included.
 
-This is the contract that lets the 10k-robot scale runs trust the sparse
+This is the contract that lets the 100k-robot scale runs trust the sparse
 engine: both engines call the same phase bodies in ``runtime/fleet.py``
 (``_robot_step`` / ``_drain_dead`` / ``_service_replica`` /
 ``_final_drain``), so any divergence means the heap replayed them in a
 different order or at a different simulated time — a bug, not noise.
+
+The event engine additionally carries a ``vectorized`` axis: the batched
+robot phase (``_robot_step_batch``, the default) against the scalar
+per-robot oracle (``vectorized=False``, the PR-6 path).  The matrix
+tests run vectorized events against ticks; the dedicated axis tests pin
+vectorized == scalar-events == ticks three ways, including under open
+arrivals + autoscaling where the tick engine cannot follow.
 """
 import dataclasses
 import itertools
@@ -110,6 +117,40 @@ def test_parity_same_tick_leave_join_order():
             ReplicaEvent(t, "cloud1", k) for k, t in order))
         r_ticks, r_events = _both(cfg)
         _assert_equal(r_ticks, r_events)
+
+
+@pytest.mark.parametrize("continuous,chaos",
+                         itertools.product([False, True], repeat=2))
+def test_parity_vectorized_axis(continuous, chaos):
+    """vectorized x {micro, continuous} x {calm, chaos}: the batched robot
+    phase, the scalar event oracle and the dense tick loop must agree
+    three ways on the busiest feature set (streamed + multicut, so codec
+    switching, chunk reconfig and two-cut pricing all run through the
+    batched kernels)."""
+    cfg = _cfg(continuous=continuous, streamed=True, multicut=True,
+               chaos=chaos)
+    r_ticks = run_fleet(dataclasses.replace(cfg, engine="ticks"))
+    r_scalar = run_fleet(dataclasses.replace(
+        cfg, engine="events", vectorized=False))
+    r_vec = run_fleet(dataclasses.replace(
+        cfg, engine="events", vectorized=True))
+    _assert_equal(r_ticks, r_scalar)
+    _assert_equal(r_scalar, r_vec)
+
+
+def test_parity_vectorized_arrivals_autoscale():
+    """Events-only features (open arrivals, SLO hedging, autoscaling)
+    where the tick engine cannot serve as oracle: the scalar event path
+    is the reference and the batched path must match it exactly."""
+    cfg = dataclasses.replace(
+        _cfg(continuous=True, streamed=True, multicut=True),
+        engine="events", n_replicas=3,
+        arrival_processes=(ArrivalProcess("users", rate_hz=12.0),),
+        slo_s=2.0, autoscale=True)
+    r_scalar = run_fleet(dataclasses.replace(cfg, vectorized=False))
+    r_vec = run_fleet(dataclasses.replace(cfg, vectorized=True))
+    _assert_equal(r_scalar, r_vec)
+    assert r_vec.n_open_arrivals > 0
 
 
 def test_events_engine_seed_determinism():

@@ -199,6 +199,52 @@ def test_fleet_queue_aware_auto_estimates_positive_rate():
     assert all(c.queue_hz == sim.plan_queue_hz for c in sim.controllers)
 
 
+def test_lambda_estimator_closed_network_cap_inactive_when_loose():
+    """At the PR-5 acceptance operating point (degraded 1 MB/s link) the
+    closed-network population bound sits well above the open-loop
+    estimate: the cap must not engage, the auto estimate equals the open
+    rate, and the queue-aware run is bit-identical to passing that rate
+    explicitly — the cap is a guard rail, not a behavior change."""
+    sim = FleetSimulator(_fleet_cfg(queue_aware=True))
+    lam, cap = sim._open_arrival_hz(), sim._closed_loop_cap_hz()
+    assert 0.0 < lam < cap
+    assert sim._estimate_arrival_hz() == lam == sim.plan_queue_hz
+    auto = run_fleet(_fleet_cfg(queue_aware=True))
+    explicit = run_fleet(_fleet_cfg(queue_aware=True, queue_hz=lam))
+    assert auto == explicit
+
+
+def test_lambda_cap_prevents_edge_retreat_on_fast_cloud():
+    """Regression for the plan-harmful over-count: on a fast default link
+    the open estimator credits every robot its zero-wait cycle rate (~47
+    Hz per replica at 32 robots) — far past what the closed loop can
+    actually sustain — which drives the M/G/1 term toward ρ ≥ 1 and
+    makes the planner retreat to edge-heavy splits.  The closed-network
+    cap (~20 Hz here) keeps the collaborative split, and the capped
+    queue-aware fleet beats both the uncapped-estimate plan and the
+    queue-blind baseline on p95 (all three runs are deterministic)."""
+    fast = FleetConfig(n_robots=32, n_ticks=120, n_replicas=2,
+                       archs=("openvla-7b",), seed=3, queue_aware=True)
+    # the estimate feeding the rebuild is computed on the queue-BLIND
+    # tables (a queue-aware sim's estimator re-reads its rebuilt tables,
+    # so measure on a blind twin)
+    blind = FleetSimulator(dataclasses.replace(fast, queue_aware=False))
+    lam, cap = blind._open_arrival_hz(), blind._closed_loop_cap_hz()
+    assert 0.0 < cap < lam
+    sim = FleetSimulator(fast)
+    assert sim.plan_queue_hz == cap
+    k0 = int(np.searchsorted(sim._bw_mid, fast.nominal_bw_bps))
+    uncapped = FleetSimulator(dataclasses.replace(fast, queue_hz=lam))
+    s1_cap = int(sim.plan["openvla-7b"][k0])
+    s1_unc = int(uncapped.plan["openvla-7b"][k0])
+    assert s1_cap < s1_unc            # cap keeps more layers on the cloud
+    r_cap = run_fleet(fast)
+    r_unc = run_fleet(dataclasses.replace(fast, queue_hz=lam))
+    r_blind = run_fleet(dataclasses.replace(fast, queue_aware=False))
+    assert r_cap.fleet_p95_s < r_unc.fleet_p95_s - 0.1
+    assert r_cap.fleet_p95_s < r_blind.fleet_p95_s - 0.1
+
+
 def test_fleet_continuous_seed_determinism():
     """Satellite acceptance: two runs of the full continuous + queue-aware
     configuration produce identical FleetReports; a different seed does

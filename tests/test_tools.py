@@ -50,7 +50,28 @@ def _valid_payload() -> dict:
                   "wall_s": 3.2, "p50_s": 0.1, "p95_s": 0.2,
                   "p99_s": 0.3, "p999_s": 0.4, "n_requests": 5000,
                   "n_open_arrivals": 500, "throughput_rps": 25.0},
+        "scaling_curve": [
+            {"n_robots": 1000, "n_ticks": 200, "wall_s": 0.4,
+             "peak_rss_bytes": 2 * 10**8, "setup_s": 0.1, "loop_s": 0.25,
+             "replan_s": 0.01, "n_requests": 5000, "p999_s": 0.4},
+            {"n_robots": 10_000, "n_ticks": 200, "wall_s": 1.8,
+             "peak_rss_bytes": 5 * 10**8, "setup_s": 0.9, "loop_s": 0.8,
+             "replan_s": 0.02, "n_requests": 50_000, "p999_s": 0.4},
+            {"n_robots": 100_000, "n_ticks": 200, "wall_s": 16.0,
+             "peak_rss_bytes": 2 * 10**9, "setup_s": 11.0, "loop_s": 4.5,
+             "replan_s": 0.05, "n_requests": 500_000, "p999_s": 0.4},
+        ],
+        "autoscale": {
+            f"high_{h:g}": {"high_s": h, "n_autoscale_events": 2,
+                            "p50_s": 0.1, "p95_s": 0.2,
+                            "cohorts": {"metro": _cohort(),
+                                        "rural": _cohort()}}
+            for h in (0.05, 0.25)},
     }
+
+
+def _cohort() -> dict:
+    return {"p50_s": 0.1, "p95_s": 0.2, "n_arrivals": 50, "n_rejected": 0}
 
 
 def test_schema_valid_payload_passes():
@@ -73,6 +94,28 @@ def test_schema_valid_payload_passes():
     (lambda p: p["scale"].update(n_robots=-1), "non-negative int"),
     (lambda p: p["scale"].update(p99_s=0.05), "nondecreasing"),
     (lambda p: p["scale"].pop("p999_s"), "scale missing 'p999_s'"),
+    (lambda p: p.update(scaling_curve=[]), "non-empty list"),
+    (lambda p: p["scaling_curve"][1].pop("peak_rss_bytes"),
+     "scaling_curve[1] missing 'peak_rss_bytes'"),
+    (lambda p: p["scaling_curve"][2].update(wall_s=-1.0),
+     "scaling_curve[2].wall_s"),
+    (lambda p: p["scaling_curve"][1].update(n_robots=1000),
+     "strictly increasing"),
+    (lambda p: p["scaling_curve"][0].update(peak_rss_bytes=9 * 10**9),
+     "peak_rss_bytes must be nondecreasing"),
+    (lambda p: p["scaling_curve"][0].update(wall_s=30.0),
+     "timing-noise allowance"),
+    (lambda p: p["scaling_curve"][1].update(replan_s=-0.1),
+     "scaling_curve[1].replan_s"),
+    (lambda p: p.update(autoscale={}), "non-empty object"),
+    (lambda p: p["autoscale"]["high_0.25"].pop("cohorts"),
+     "autoscale['high_0.25'] missing 'cohorts'"),
+    (lambda p: p["autoscale"]["high_0.05"].update(n_autoscale_events=-1),
+     "n_autoscale_events"),
+    (lambda p: p["autoscale"]["high_0.05"]["cohorts"]["rural"].pop(
+        "n_rejected"), "cohorts['rural'] missing 'n_rejected'"),
+    (lambda p: p["autoscale"]["high_0.05"]["cohorts"]["metro"].update(
+        n_arrivals=-5), "cohorts['metro'].n_arrivals"),
 ])
 def test_schema_violations_are_reported(mutate, needle):
     payload = _valid_payload()

@@ -4,8 +4,10 @@ drifts from what downstream consumers (perf-trajectory tooling, the
 EXPERIMENTS.md tables, cross-PR diffs) expect.
 
 The schema is versioned: ``benchmarks/fleet_bench.py`` stamps
-``schema_version`` (currently 4 — the version that added the ``scale``
-section: the event-engine 10k-robot run with p99/p99.9 tails) and this
+``schema_version`` (currently 5 — the version that added the
+``scaling_curve`` section: per-fleet-size wall / peak-RSS /
+setup-loop-replan rows from the vectorized engine, plus the
+``autoscale`` watermark-sweep section with per-cohort stats) and this
 checker validates
 
 * the top-level sections and their per-entry keys,
@@ -14,7 +16,11 @@ checker validates
   fractions in [0, 1)),
 * the planner section's parity wall-times,
 * the scale section's engine tag and wall time (the CI scale-smoke step
-  additionally asserts its wall budget against this payload).
+  additionally asserts its wall budget against this payload),
+* the scaling curve's monotonicity: sizes strictly increasing, peak RSS
+  nondecreasing (it is a process high-water mark sampled in ascending
+  size order), wall time nondecreasing up to a 20 % timing-noise
+  allowance.
 
 Run next to ``tools/check_doc_links.py`` in the workflow, after the
 fleet smoke emits the file:
@@ -29,10 +35,11 @@ import math
 import sys
 from typing import List
 
-EXPECTED_SCHEMA_VERSION = 4
+EXPECTED_SCHEMA_VERSION = 5
 
 TOP_SECTIONS = ("schema_version", "config", "planner", "fleet", "codecs",
-                "multicut", "streamed", "queue", "scale")
+                "multicut", "streamed", "queue", "scale", "scaling_curve",
+                "autoscale")
 CONFIG_KEYS = ("n_robots", "n_ticks", "n_replicas", "seed", "smoke")
 PLANNER_KEYS = ("scalar_s", "vec_s", "cells", "codec_scalar_s",
                 "codec_vec_s", "codec_cells", "multicut_scalar_s",
@@ -50,6 +57,14 @@ QUEUE_REQUIRED_TAGS = ("micro_blind", "cont_blind", "cont_aware")
 SCALE_KEYS = ("engine", "n_robots", "n_ticks", "wall_s", "p50_s", "p95_s",
               "p99_s", "p999_s", "n_requests", "n_open_arrivals",
               "throughput_rps")
+CURVE_KEYS = ("n_robots", "n_ticks", "wall_s", "peak_rss_bytes",
+              "setup_s", "loop_s", "replan_s", "n_requests", "p999_s")
+# wall time must grow with fleet size; small sizes finish in fractions
+# of a second where scheduler noise is real, so allow a 20% dip
+CURVE_WALL_TOLERANCE = 0.8
+AUTOSCALE_ENTRY_KEYS = ("high_s", "n_autoscale_events", "p50_s", "p95_s",
+                        "cohorts")
+AUTOSCALE_COHORT_KEYS = ("p50_s", "p95_s", "n_arrivals", "n_rejected")
 
 
 def _finite_pos(x) -> bool:
@@ -155,6 +170,78 @@ def check(payload: dict) -> List[str]:
             need(all(a <= b + 1e-12 for a, b in zip(ladder, ladder[1:])),
                  "scale percentile ladder must be nondecreasing "
                  "(p50 <= p95 <= p99 <= p99.9)")
+
+    curve = payload["scaling_curve"]
+    need(isinstance(curve, list) and curve,
+         "section 'scaling_curve' must be a non-empty list")
+    if isinstance(curve, list) and curve:
+        for i, row in enumerate(curve):
+            for k in CURVE_KEYS:
+                need(k in row, f"scaling_curve[{i}] missing {k!r}")
+            for k in ("wall_s", "peak_rss_bytes"):
+                if k in row:
+                    need(_finite_pos(row[k]),
+                         f"scaling_curve[{i}].{k} must be finite positive")
+            for k in ("setup_s", "loop_s", "replan_s"):
+                v = row.get(k)
+                if v is not None:
+                    need(isinstance(v, (int, float)) and math.isfinite(v)
+                         and v >= 0,
+                         f"scaling_curve[{i}].{k} must be non-negative "
+                         f"finite")
+            for k in ("n_robots", "n_ticks", "n_requests"):
+                v = row.get(k)
+                if v is not None:
+                    need(isinstance(v, int) and v > 0,
+                         f"scaling_curve[{i}].{k} must be a positive int")
+        sizes = [r.get("n_robots") for r in curve]
+        if all(isinstance(v, int) for v in sizes):
+            need(all(a < b for a, b in zip(sizes, sizes[1:])),
+                 "scaling_curve n_robots must be strictly increasing")
+        rss = [r.get("peak_rss_bytes") for r in curve]
+        if all(isinstance(v, (int, float)) for v in rss):
+            need(all(a <= b for a, b in zip(rss, rss[1:])),
+                 "scaling_curve peak_rss_bytes must be nondecreasing "
+                 "(process high-water mark, sampled in ascending size "
+                 "order)")
+        walls = [r.get("wall_s") for r in curve]
+        if all(isinstance(v, (int, float)) for v in walls):
+            need(all(b >= a * CURVE_WALL_TOLERANCE
+                     for a, b in zip(walls, walls[1:])),
+                 "scaling_curve wall_s must be nondecreasing (within the "
+                 f"{CURVE_WALL_TOLERANCE:.0%} timing-noise allowance)")
+
+    asc = payload["autoscale"]
+    need(isinstance(asc, dict) and asc,
+         "section 'autoscale' must be a non-empty object")
+    if isinstance(asc, dict):
+        for tag, entry in asc.items():
+            for k in AUTOSCALE_ENTRY_KEYS:
+                need(k in entry, f"autoscale[{tag!r}] missing {k!r}")
+            v = entry.get("n_autoscale_events")
+            if v is not None:
+                need(isinstance(v, int) and v >= 0,
+                     f"autoscale[{tag!r}].n_autoscale_events must be a "
+                     f"non-negative int")
+            hs = entry.get("high_s")
+            if hs is not None:
+                need(_finite_pos(hs),
+                     f"autoscale[{tag!r}].high_s must be finite positive")
+            coh = entry.get("cohorts")
+            need(isinstance(coh, dict) and coh,
+                 f"autoscale[{tag!r}].cohorts must be a non-empty object")
+            if isinstance(coh, dict):
+                for cname, centry in coh.items():
+                    for k in AUTOSCALE_COHORT_KEYS:
+                        need(k in centry,
+                             f"autoscale[{tag!r}].cohorts[{cname!r}] "
+                             f"missing {k!r}")
+                    for k in ("n_arrivals", "n_rejected"):
+                        v = centry.get(k)
+                        if v is not None:
+                            need(isinstance(v, int) and v >= 0,
+                                 f"autoscale[{tag!r}].cohorts[{cname!r}]"
+                                 f".{k} must be a non-negative int")
     return errs
 
 
@@ -177,7 +264,10 @@ def main() -> int:
           f"({len(payload['streamed'])} streamed, "
           f"{len(payload['queue'])} queue entries, scale "
           f"{payload['scale']['n_robots']} robots in "
-          f"{payload['scale']['wall_s']:.1f}s)")
+          f"{payload['scale']['wall_s']:.1f}s, curve "
+          f"{len(payload['scaling_curve'])} sizes up to "
+          f"{payload['scaling_curve'][-1]['n_robots']}, "
+          f"{len(payload['autoscale'])} autoscale points)")
     return 0
 
 

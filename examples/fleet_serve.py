@@ -26,6 +26,10 @@ cfg = FleetConfig(
     n_replicas=3,
     codecs=("identity", "int8", "int4"),
     seed=0,
+    # flight recorder (core/telemetry.py): "sampled" records ~1/64 of
+    # requests — stage spans, metric sketches and the planner-drift
+    # audit land in rep.metrics without perturbing the simulation
+    telemetry="sampled",
 )
 cfg.replica_events = outage_schedule(cfg)
 for ev in cfg.replica_events:
@@ -41,6 +45,15 @@ for r in rep.robots:
 
 print(f"\n{rep.summary()}")
 print(f"outage-window completions (edge-only): {rep.n_outage_completions}")
+
+drift = rep.metrics["drift"]
+print(f"telemetry: {rep.metrics['n_recorded']} requests recorded, "
+      f"{rep.metrics['spans']['kept']} span groups kept; planner drift "
+      f"over {drift['n_joined']} joins, worst stage-sum mismatch "
+      f"{drift['reconcile_max_abs_s']:.1e} s")
+for stage, st in drift["stages"].items():
+    print(f"  {stage:12s} mean err {st['mean_err']:+10.2e}  "
+          f"p95 err {st['p95_err']:+10.2e}")
 
 assert rep.throughput_rps > 0 and rep.fleet_p95_s >= rep.fleet_p50_s > 0
 assert rep.n_replans > 0, "outage schedule should have triggered replans"

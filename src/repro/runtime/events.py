@@ -420,7 +420,20 @@ class EventEngine:
         arrays = sim.arrays[proc.arch]
         n = arrays.n
         edge_only = float(arrays.edge_s[n])
+        # telemetry sampling key: arrival sequence index offset past the
+        # robot id space — engine-order-independent like the robot keys
+        rec = sim.recorder
+        lane = f"proc:{proc.name}"
+        want = (rec is not None
+                and rec.want((cfg.n_robots + 1 + p) * 1_000_003 + k))
         if not sim._cloud_up or not self.routable:
+            if want:
+                rec.record_request(
+                    req=-1, lane=lane, t0_s=t_arr, edge_s=edge_only,
+                    uplink_s=0.0, queue_s=0.0, service_s=0.0, down_s=0.0,
+                    total_s=edge_only,
+                    pred=sim._tele_pred_edge(lane, edge_only),
+                    outcome="outage", wire_bytes=0.0)
             sim.proc_latencies[p].append(edge_only)
             return
         net = self._proc_nets[p]
@@ -429,7 +442,8 @@ class EventEngine:
         kidx = bisect.bisect_left(sim._bw_mid_list, bw)
         s1 = int(sim.plan[proc.arch][kidx])
         s2 = int(sim.plan_s2[proc.arch][kidx])
-        cdc = sim.codecs[int(sim.plan_codec[proc.arch][kidx])]
+        ci = int(sim.plan_codec[proc.arch][kidx])
+        cdc = sim.codecs[ci]
         down_s, two_cut = 0.0, False
         if s2 < n:
             eh, c, t, dn = arrays.placement_latency(
@@ -441,19 +455,41 @@ class EventEngine:
             two_cut = True
         else:
             e, c, t = arrays.latency(s1, bw, cfg.rtt_s, codec=cdc)
+        tele = None
+        if want:
+            tele = sim._tele_pred(lane, proc.arch, bw, s1, s2, 1, ci,
+                                  e, c, t, down_s)
         if c <= 0.0:
-            sim.proc_latencies[p].append(e + t + down_s)
+            lat = e + t + down_s
+            if want:
+                rec.record_request(
+                    req=-1, lane=lane, t0_s=t_arr, edge_s=e, uplink_s=t,
+                    queue_s=0.0, service_s=0.0, down_s=down_s,
+                    total_s=lat, enc_s=tele["_enc_s"],
+                    dec_s=tele["_dec_s"], pred=tele, outcome="local",
+                    wire_bytes=tele["_wire_bytes"])
+            sim.proc_latencies[p].append(lat)
             return
         if cfg.slo_s is not None and self._est_wait_s(t_arr) > cfg.slo_s:
             # SLO admission: the cloud cannot meet the deadline — serve
             # the whole model on the edge instead of joining the queue
             sim.proc_rejections[p] += 1
+            if want:
+                # measured = the edge-only fallback; predicted = the
+                # split the planner wanted — the drift IS the rejection
+                rec.record_request(
+                    req=-1, lane=lane, t0_s=t_arr, edge_s=edge_only,
+                    uplink_s=0.0, queue_s=0.0, service_s=0.0, down_s=0.0,
+                    total_s=edge_only, pred=tele, outcome="slo_reject",
+                    wire_bytes=0.0)
             sim.proc_latencies[p].append(edge_only)
             return
         wid = sim._next_wid
         sim._next_wid += 1
         sim._pending[wid] = _CloudWork(-1, t_arr, t_arr + e + t, e, t, c,
-                                       down_s, two_cut, proc=p)
+                                       down_s, two_cut, proc=p, pred=tele)
+        if tele is not None and cfg.continuous:
+            rec.cont_open(wid)
         if cfg.continuous:
             rng = self._proc_rng[p]
             slow = float(np.exp(rng.normal(0.0, cfg.straggler_sigma)))

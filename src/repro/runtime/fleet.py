@@ -79,6 +79,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -91,9 +92,10 @@ from ..core.hardware import A100, ORIN, DeviceSpec
 from ..core.network import NetworkSim, TraceConfig, generate_trace_matrix
 from ..core.pipeline import (DEFAULT_CHUNK_GRID, stream_applies,
                              stream_makespan_scalar)
-from ..core.segmentation import (GraphArrays, graph_arrays, sweep_multicut,
-                                 sweep_search)
+from ..core.segmentation import (GraphArrays, graph_arrays, queue_delay_s,
+                                 sweep_multicut, sweep_search)
 from ..core.structure import LayerCost, Workload, build_graph
+from ..core.telemetry import _HASH_KNUTH, ContObserver, FlightRecorder
 from .scheduler import (ContinuousBatcher, ElasticPool, MicroBatcher,
                         Request, StragglerMitigator)
 
@@ -262,6 +264,21 @@ class FleetConfig:
     autoscale_max: Optional[int] = None    # None -> n_replicas
     autoscale_high_s: float = 0.25
     autoscale_low_s: float = 0.02
+    # flight-recorder telemetry (core/telemetry.py): "off" keeps the
+    # recorder out of every hot path (a single ``is None`` check per
+    # request — runs are bit-identical to a build without telemetry,
+    # pinned by tests/test_engine_parity.py); "sampled" records a
+    # deterministic ~1/telemetry_sample_every subset of requests chosen
+    # by hashing (robot, issue tick) — never the simulation RNG — and
+    # "full" records every request.  Span groups are reservoir-bounded
+    # at telemetry_cap (runtime/trace_export.py renders them as Chrome
+    # trace-event JSON); metrics/drift sketches are O(1) memory always.
+    # Sampled cost is ~full/sample_every (the keep/drop hash itself is
+    # negligible): 1/64 keeps the 10k-robot fleet inside the <3 %
+    # overhead budget benchmarks/fleet_bench.py bench_overhead gates.
+    telemetry: str = "off"
+    telemetry_cap: int = 65536
+    telemetry_sample_every: int = 64
 
 
 def outage_schedule(cfg: FleetConfig) -> List[ReplicaEvent]:
@@ -340,17 +357,33 @@ class FleetReport:
     n_open_arrivals: int = 0          # arrivals generated across processes
     n_slo_rejections: int = 0         # arrivals rejected by SLO admission
     n_autoscale_events: int = 0       # replicas joined/left by the scaler
+    # flight-recorder snapshot (core/telemetry.py) when the run had
+    # telemetry on: counters/gauges/quantile sketches + drift summary.
+    # None when telemetry="off", so historical reports compare equal.
+    metrics: Optional[dict] = None
 
     def summary(self) -> str:
-        return (f"{len(self.robots)} robots, {self.n_requests} requests: "
-                f"fleet p50 {self.fleet_p50_s * 1e3:.1f} ms, "
-                f"p95 {self.fleet_p95_s * 1e3:.1f} ms, "
-                f"{self.throughput_rps:.1f} req/s, "
-                f"{self.n_hedged} hedges, {self.n_replans} replans, "
-                f"{self.n_codec_switches} codec switches, "
-                f"{self.n_cut_moves} cut moves, "
-                f"{self.n_chunk_reconfigs} chunk reconfigs, "
-                f"{self.n_preemptions} preemptions")
+        lines = [
+            f"{len(self.robots)} robots, {self.n_requests} requests: "
+            f"fleet p50 {self.fleet_p50_s * 1e3:.1f} ms, "
+            f"p95 {self.fleet_p95_s * 1e3:.1f} ms, "
+            f"p99 {self.fleet_p99_s * 1e3:.1f} ms, "
+            f"p99.9 {self.fleet_p999_s * 1e3:.1f} ms, "
+            f"{self.throughput_rps:.1f} req/s",
+            f"  {self.n_hedged} hedges, {self.n_replans} replans, "
+            f"{self.n_codec_switches} codec switches, "
+            f"{self.n_cut_moves} cut moves, "
+            f"{self.n_chunk_reconfigs} chunk reconfigs",
+            f"  queue: mean delay {self.mean_queue_delay_s * 1e3:.1f} ms, "
+            f"{self.n_preemptions} preemptions, "
+            f"KV high-water {self.kv_high_watermark_bytes / 1e6:.1f} MB",
+        ]
+        if self.n_open_arrivals or self.processes:
+            lines.append(
+                f"  open loop: {self.n_open_arrivals} arrivals, "
+                f"{self.n_slo_rejections} SLO rejections, "
+                f"{self.n_autoscale_events} autoscale events")
+        return "\n".join(lines)
 
 
 @dataclasses.dataclass
@@ -364,6 +397,11 @@ class _CloudWork:
     down_s: float = 0.0          # downlink leg + edge tail (multi-cut only)
     two_cut: bool = False        # issued on a real (S2 < n) placement
     proc: int = -1               # arrival-process index; -1 = robot traffic
+    # issue-time telemetry payload (recorder-on sampled requests only):
+    # the planner's predicted stage decomposition plus span context,
+    # joined against the measured stages at completion.  None when the
+    # recorder is off or the request was not sampled.
+    pred: Optional[dict] = None
 
 
 # --------------------------------------------------------------- simulator
@@ -566,6 +604,16 @@ class FleetSimulator:
         self.n_chunk_reconfigs = 0
         self.n_streamed_requests = 0
         self._bubble_sum = 0.0
+        # flight recorder (core/telemetry.py): None = off.  Every hot-path
+        # hook below guards on ``self.recorder is not None``, so the off
+        # path costs one attribute check per request.
+        self.recorder: Optional[FlightRecorder] = None
+        if cfg.telemetry != "off":
+            self.recorder = FlightRecorder(
+                mode=cfg.telemetry, cap=cfg.telemetry_cap,
+                sample_every=cfg.telemetry_sample_every, seed=cfg.seed)
+            for r, cb in self.cbatchers.items():
+                cb.observer = ContObserver(self.recorder, r)
 
     # ---------------------------------------------------------- plan tables
     def _build_plans(self, queue_hz: float):
@@ -860,6 +908,104 @@ class FleetSimulator:
         bubble = (m - peak) / m if m > 0 else 0.0
         return m - cloud_s, bubble
 
+    # ------------------------------------------------------------ telemetry
+    # Issue-time prediction capture for the drift audit.  Only sampled
+    # requests pay for these (the recorder's ``want()`` gate comes
+    # first), and nothing here touches ``self.rng`` or any other
+    # simulation state — the recorder-off run is bit-identical.
+
+    def _tele_key(self, i: int, now: float) -> int:
+        """Engine-order-independent request identity for sampling: robot
+        (or arrival) index × issue tick.  Both engines and both robot
+        phases (scalar/vectorized) derive the same key for the same
+        request, so the sampled subset never depends on replay order."""
+        return i * 1_000_003 + int(round(now / self.cfg.tick_s))
+
+    def _tele_want_js(self, idxs: np.ndarray, now: float) -> np.ndarray:
+        """Vectorized ``FlightRecorder.want`` over one batch of robot
+        indices: the same ``_tele_key`` → Knuth-hash keep/drop decision
+        as the scalar gate, in one numpy pass — sampled mode must not
+        pay a Python loop over every unsampled robot.  uint64 wraps mod
+        2**64, a multiple of the gate's 2**32 mask, so the masked hash
+        is bitwise the scalar one.  Returns positions into ``idxs``
+        whose request is recorded (all of them in full mode)."""
+        rec = self.recorder
+        if rec.mode == "full":
+            return np.arange(len(idxs))
+        tickk = int(round(now / self.cfg.tick_s))
+        keys = idxs.astype(np.uint64) * np.uint64(1_000_003) \
+            + np.uint64(tickk)
+        h = (keys * np.uint64(_HASH_KNUTH)) & np.uint64(0xFFFFFFFF)
+        return np.flatnonzero(h % np.uint64(rec.sample_every) == 0)
+
+    def _tele_pred_edge(self, lane: str, e: float) -> dict:
+        """Edge-only prediction (outage / no-cloud-work placements)."""
+        return {"edge_s": e, "uplink_s": 0.0, "queue_s": 0.0,
+                "service_s": 0.0, "down_s": 0.0, "total_s": e,
+                "wire_bytes": 0.0, "_lane": lane, "_enc_s": 0.0,
+                "_dec_s": 0.0, "_wire_bytes": 0.0, "_bubble": None}
+
+    def _tele_pred(self, lane: str, arch: str, bw: float, s1: int, s2: int,
+                   kc: int, ci: int, e: float, c: float, t: float,
+                   down: float) -> dict:
+        """The planner's predicted stage decomposition at issue time —
+        the ``evaluate_placement`` legs as priced (edge head, uplink,
+        cloud window, downlink + tail), the M/G/1 wait prior the
+        queue-aware tables optimized (``queue_delay_s`` at the plan's
+        arrival rate; 0 when queue-blind, clamped to 0 with a counter
+        when the prior saturates), and for streamed placements the
+        FROZEN-bandwidth 3-stage makespan (uniform chunk wire times at
+        the issue-time rate) in place of the trace-integrated uplink the
+        runtime will actually pay.  Private ``_``-keys carry span
+        context (lane, codec costs, measured wire bytes) to completion."""
+        cfg = self.cfg
+        rec = self.recorder
+        arrays = self.arrays[arch]
+        cdc = self.codecs[ci]
+        n = arrays.n
+        wire_raw = float(arrays.wire_bytes[s1])
+        applicable = (0 < s1 < n) and wire_raw > 0.0
+        wire_meas = cdc.wire_bytes(wire_raw) if applicable else wire_raw
+        # predicted wire bytes come from the PLAN BIN (unclamped split,
+        # bin codec); the measured bytes from the clamped split + sticky
+        # codec state — their gap is the pool-clamp / codec-gate drift
+        k = bisect.bisect_left(self._bw_mid_list, bw)
+        s1p = int(self.plan[arch][k])
+        cp = self.codecs[int(self.plan_codec[arch][k])]
+        wire_rawp = float(arrays.wire_bytes[s1p]) if s1p <= n else 0.0
+        wire_pred = (cp.wire_bytes(wire_rawp)
+                     if (0 < s1p < n) and wire_rawp > 0.0 else wire_rawp)
+        up_pred, bub_pred = t, 0.0
+        enc_s = dec_s = 0.0
+        if applicable:
+            enc_s = cdc.encode_s(wire_raw, cfg.edge)
+            dec_s = cdc.decode_s(wire_raw, cfg.cloud)
+        if kc > 1 and c > 0.0:
+            # frozen-bandwidth streamed makespan: what the plan table's
+            # pipeline model promised before the trace moved under it
+            wires = np.full(kc, wire_meas / kc / bw)
+            m = stream_makespan_scalar(enc_s, wires, dec_s + c, kc,
+                                       cfg.rtt_s)
+            peak = max(enc_s, float(wires.sum()) + kc * cfg.rtt_s,
+                       dec_s + c)
+            bub_pred = (m - peak) / m if m > 0 else 0.0
+            up_pred = m - c
+            enc_s = dec_s = 0.0      # chunked: no single encode/wire split
+        q_pred = 0.0
+        if c > 0.0 and self.plan_queue_hz > 0.0:
+            q_pred = queue_delay_s(c, self.plan_queue_hz,
+                                   cv2=cfg.queue_cv2,
+                                   service_scale=cfg.queue_service_scale)
+            if not math.isfinite(q_pred):
+                rec.drift.n_pred_saturated += 1
+                q_pred = 0.0
+        return {"edge_s": e, "uplink_s": up_pred, "queue_s": q_pred,
+                "service_s": c, "down_s": down,
+                "total_s": e + up_pred + q_pred + c + down,
+                "wire_bytes": wire_pred, "bubble_frac": bub_pred,
+                "_lane": lane, "_enc_s": enc_s, "_dec_s": dec_s,
+                "_wire_bytes": wire_meas, "_bubble": None}
+
     # ------------------------------------------------------------ execution
     def _complete(self, robot: int, issued_s: float, latency_s: float) -> None:
         """Fold a finished request into the robot's series and release the
@@ -902,17 +1048,34 @@ class FleetSimulator:
         out = self.mitigator.run(list(live), exec_fn)
         if out.hedged:
             self.n_hedged += 1
+        rec = self.recorder
+        # winner's pre-update busy wait: the queue share of out.latency_s
+        wait_w = (max(0.0, self.busy_until[out.winner] - ready)
+                  if rec is not None else 0.0)
         self.busy_until[out.winner] = ready + out.latency_s
-        for it in items:
+        for rq, it in zip(requests, items):
             # down_s = downlink transport + edge-tail compute of a 2-cut
             # placement (0 for single-cut), paid after the cloud batch.
             # Only requests that actually complete the 2-cut path count —
             # outage fallbacks re-execute edge-only and don't.
             if it.two_cut:
                 self.n_multicut_requests += 1
-            self._deliver(it, it.edge_s + it.net_s
-                          + (ready - it.ready_s) + out.latency_s
-                          + it.down_s)
+            lat = (it.edge_s + it.net_s
+                   + (ready - it.ready_s) + out.latency_s
+                   + it.down_s)
+            if rec is not None and it.pred is not None:
+                p = it.pred
+                rec.record_request(
+                    req=rq.rid, lane=p["_lane"], t0_s=it.issued_s,
+                    edge_s=it.edge_s, uplink_s=it.net_s,
+                    queue_s=(ready - it.ready_s) + wait_w,
+                    service_s=out.latency_s - wait_w, down_s=it.down_s,
+                    total_s=lat, replica=out.winner,
+                    enc_s=p["_enc_s"], dec_s=p["_dec_s"], pred=p,
+                    outcome="hedged" if out.hedged else "ok",
+                    wire_bytes=p["_wire_bytes"],
+                    bubble_frac=p["_bubble"])
+            self._deliver(it, lat)
 
     def _finish_cont(self, req: Request, fin_s: float) -> None:
         """Fold one continuous-tier completion: the robot pays its edge +
@@ -921,8 +1084,26 @@ class FleetSimulator:
         it = self._pending.pop(req.rid)
         if it.two_cut:
             self.n_multicut_requests += 1
-        self._deliver(it, it.edge_s + it.net_s + (fin_s - it.ready_s)
-                      + it.down_s)
+        lat = (it.edge_s + it.net_s + (fin_s - it.ready_s)
+               + it.down_s)
+        rec = self.recorder
+        if rec is not None and it.pred is not None:
+            # the ContObserver accumulated this request's admission
+            # waits; service = sojourn minus queue (batched execution
+            # including any preempt/recompute cycles)
+            st = rec.pop_cont(req.rid) or {}
+            p = it.pred
+            q = st.get("queue_s", 0.0)
+            rec.record_request(
+                req=req.rid, lane=p["_lane"], t0_s=it.issued_s,
+                edge_s=it.edge_s, uplink_s=it.net_s, queue_s=q,
+                service_s=(fin_s - it.ready_s) - q, down_s=it.down_s,
+                total_s=lat, replica=st.get("replica"),
+                enc_s=p["_enc_s"], dec_s=p["_dec_s"], pred=p,
+                extra_spans=st.get("spans", ()),
+                outcome="preempted" if st.get("preempts") else "ok",
+                wire_bytes=p["_wire_bytes"], bubble_frac=p["_bubble"])
+        self._deliver(it, lat)
 
     def _drain_dead_cont(self, routable: List[str]) -> None:
         """Continuous tier: a dead replica's slots and queue are evicted
@@ -937,6 +1118,8 @@ class FleetSimulator:
                                   self.cbatchers[x].backlog_s)
                         self.cbatchers[tgt].add(req, svc, kv)
                     else:
+                        if self.recorder is not None:
+                            self.recorder.pop_cont(req.rid)
                         self._fallback_one(self._pending.pop(req.rid))
 
     def _fallback_one(self, it: _CloudWork) -> None:
@@ -947,7 +1130,20 @@ class FleetSimulator:
                 else self.cfg.arrival_processes[it.proc].arch)
         arrays = self.arrays[arch]
         edge_only = float(arrays.edge_s[arrays.n])
-        self._deliver(it, it.edge_s + it.net_s + edge_only)
+        lat = it.edge_s + it.net_s + edge_only
+        rec = self.recorder
+        if rec is not None and it.pred is not None:
+            # sunk edge+uplink cost plus the edge re-execution; the
+            # planned cloud window/downlink never ran — their drift is
+            # the full prediction, which is exactly the outage story
+            p = it.pred
+            rec.record_request(
+                req=-1, lane=p["_lane"], t0_s=it.issued_s,
+                edge_s=it.edge_s, uplink_s=it.net_s, queue_s=0.0,
+                service_s=edge_only, down_s=0.0, total_s=lat,
+                enc_s=p["_enc_s"], dec_s=p["_dec_s"], pred=p,
+                outcome="fallback", wire_bytes=p["_wire_bytes"])
+        self._deliver(it, lat)
         self.n_outage_completions += 1
 
     def _fallback(self, requests: Sequence[Request]) -> None:
@@ -970,6 +1166,8 @@ class FleetSimulator:
         bw = net.now_bps
         arrays = self.arrays[self.arch_of[i]]
         down, two_cut = 0.0, False
+        s1 = s2 = arrays.n
+        kc, bub = 1, None
         if self._cloud_up:
             s1, s2, kc = self._planned_placement(i, bw)
             cdc = self.codecs[self.codec_of[i]]
@@ -997,12 +1195,26 @@ class FleetSimulator:
         else:
             e, c, t = float(arrays.edge_s[arrays.n]), 0.0, 0.0
         net.step()                      # link evolves every tick
+        rec = self.recorder
+        tele = None
+        if rec is not None and rec.want(self._tele_key(i, now)):
+            lane = f"robot:{self.arch_of[i]}"
+            if self._cloud_up:
+                tele = self._tele_pred(lane, self.arch_of[i], bw, s1, s2,
+                                       int(kc), int(self.codec_of[i]),
+                                       e, c, t, down)
+                tele["_bubble"] = bub
+            else:
+                tele = self._tele_pred_edge(lane, e)
         if c > 0.0 and routable:
             wid = self._next_wid
             self._next_wid += 1
-            work = _CloudWork(i, now, now + e + t, e, t, c, down, two_cut)
+            work = _CloudWork(i, now, now + e + t, e, t, c, down, two_cut,
+                              pred=tele)
             self._pending[wid] = work
             self.next_free[i] = float("inf")   # until completion
+            if tele is not None and cfg.continuous:
+                rec.cont_open(wid)
             if cfg.continuous:
                 # continuous tier: the straggler multiplier is drawn per
                 # request at enqueue (batching efficiency lives in the
@@ -1028,12 +1240,22 @@ class FleetSimulator:
             # planned a collaborative split but no replica accepts work
             # (undetected outage window): edge re-execution
             self._fallback_one(_CloudWork(i, now, now + e + t,
-                                          e, t, c, down, two_cut))
+                                          e, t, c, down, two_cut,
+                                          pred=tele))
         else:
             # no cloud work: complete locally.  ``down`` is normally 0
             # here, but a clamped placement degenerating to an empty
             # cloud window still owes its edge-tail compute
-            self._complete(i, now, e + t + down)
+            lat = e + t + down
+            if tele is not None:
+                rec.record_request(
+                    req=-1, lane=tele["_lane"], t0_s=now, edge_s=e,
+                    uplink_s=t, queue_s=0.0, service_s=0.0, down_s=down,
+                    total_s=lat, enc_s=tele["_enc_s"],
+                    dec_s=tele["_dec_s"], pred=tele,
+                    outcome="local" if self._cloud_up else "outage",
+                    wire_bytes=tele["_wire_bytes"])
+            self._complete(i, now, lat)
             if not self._cloud_up:
                 self.n_outage_completions += 1
 
@@ -1155,7 +1377,20 @@ class FleetSimulator:
         if not self._cloud_up:
             # outage fast path: every robot executes edge-only (the
             # scalar branch's ``e + 0.0 + 0.0`` is bitwise ``e``)
-            self._complete_batch(idxs, now, bst["edge_only"][ai])
+            eo = bst["edge_only"][ai]
+            rec = self.recorder
+            if rec is not None:
+                for j in self._tele_want_js(idxs, now):
+                    i = int(idxs[j])
+                    ev = float(eo[j])
+                    tele = self._tele_pred_edge(
+                        f"robot:{self.arch_of[i]}", ev)
+                    rec.record_request(
+                        req=-1, lane=tele["_lane"], t0_s=now,
+                        edge_s=ev, uplink_s=0.0, queue_s=0.0,
+                        service_s=0.0, down_s=0.0, total_s=ev,
+                        pred=tele, outcome="outage", wire_bytes=0.0)
+            self._complete_batch(idxs, now, eo)
             self.n_outage_completions += len(idxs)
             return
 
@@ -1221,6 +1456,8 @@ class FleetSimulator:
 
         # streamed uplinks price against the per-tick trace — inherently
         # sequential per robot, so scalar in index order
+        rec = self.recorder
+        bub_of: dict = {}
         if cfg.streamed:
             for j in np.flatnonzero((kc > 1) & (c > 0.0)):
                 i = int(idxs[j])
@@ -1230,6 +1467,23 @@ class FleetSimulator:
                     self.codecs[int(ci[j])], float(e[j]), float(c[j]))
                 self.n_streamed_requests += 1
                 self._bubble_sum += bub
+                if rec is not None:
+                    bub_of[int(j)] = bub
+
+        # issue-time telemetry capture (recorder on): the same pred the
+        # scalar path builds, from the batch lanes' scalarized values
+        tele_of: dict = {}
+        if rec is not None:
+            for j in self._tele_want_js(idxs, now):
+                j = int(j)
+                i = int(idxs[j])
+                tele = self._tele_pred(
+                    f"robot:{self.arch_of[i]}", self.arch_of[i],
+                    float(bw[j]), int(s1[j]), int(s2[j]), int(kc[j]),
+                    int(ci[j]), float(e[j]), float(c[j]), float(t[j]),
+                    float(down[j]))
+                tele["_bubble"] = bub_of.get(j)
+                tele_of[j] = tele
 
         # dispatch: cloud work in ascending robot order (work ids, RNG
         # draws and batcher adds replay the scalar sequence), local
@@ -1241,10 +1495,14 @@ class FleetSimulator:
                 ej, tj, cj = float(e[j]), float(t[j]), float(c[j])
                 wid = self._next_wid
                 self._next_wid += 1
+                tele = tele_of.get(int(j))
                 work = _CloudWork(i, now, now + ej + tj, ej, tj, cj,
-                                  float(down[j]), bool(two[j]))
+                                  float(down[j]), bool(two[j]),
+                                  pred=tele)
                 self._pending[wid] = work
                 self.next_free[i] = float("inf")
+                if tele is not None and cfg.continuous:
+                    rec.cont_open(wid)
                 if cfg.continuous:
                     slow = float(np.exp(self.rng.normal(
                         0.0, cfg.straggler_sigma)))
@@ -1268,11 +1526,25 @@ class FleetSimulator:
                 ej, tj = float(e[j]), float(t[j])
                 self._fallback_one(_CloudWork(
                     i, now, now + ej + tj, ej, tj, float(c[j]),
-                    float(down[j]), bool(two[j])))
+                    float(down[j]), bool(two[j]),
+                    pred=tele_of.get(int(j))))
         loc = np.flatnonzero(~cloudy)
         if len(loc):
-            self._complete_batch(idxs[loc], now,
-                                 (e[loc] + t[loc]) + down[loc])
+            lat = (e[loc] + t[loc]) + down[loc]
+            if rec is not None and tele_of:
+                for jj, j in enumerate(loc.tolist()):
+                    tele = tele_of.get(j)
+                    if tele is not None:
+                        rec.record_request(
+                            req=-1, lane=tele["_lane"], t0_s=now,
+                            edge_s=float(e[j]), uplink_s=float(t[j]),
+                            queue_s=0.0, service_s=0.0,
+                            down_s=float(down[j]),
+                            total_s=float(lat[jj]),
+                            enc_s=tele["_enc_s"], dec_s=tele["_dec_s"],
+                            pred=tele, outcome="local",
+                            wire_bytes=tele["_wire_bytes"])
+            self._complete_batch(idxs[loc], now, lat)
 
     def _drain_dead(self, now: float, routable: List[str]) -> None:
         """Replicas that died with queued work: re-route or fall back."""
@@ -1416,6 +1688,19 @@ class FleetSimulator:
                 p95_s=float(np.percentile(ys, 95)),
                 p99_s=float(np.percentile(ys, 99)),
                 p999_s=float(np.percentile(ys, 99.9))))
+        metrics = None
+        if self.recorder is not None:
+            # mirror the report-level counters into gauges so a metrics
+            # consumer never needs the dataclass, then snapshot
+            m = self.recorder.metrics
+            m.set_gauge("fleet/p95_s", float(np.percentile(allx, 95)))
+            m.set_gauge("fleet/n_hedged", self.n_hedged)
+            m.set_gauge("fleet/n_replans", self.n_replans)
+            m.set_gauge("fleet/n_preemptions",
+                        sum(cb.n_preempted for cb in cbs))
+            m.set_gauge("fleet/kv_high_watermark_bytes", max(
+                (cb.kv_high_watermark_bytes for cb in cbs), default=0.0))
+            metrics = self.recorder.snapshot()
         return FleetReport(
             robots=robots, n_requests=int(sum(r.n_requests for r in robots)),
             fleet_p50_s=float(np.percentile(allx, 50)),
@@ -1440,7 +1725,8 @@ class FleetSimulator:
             processes=tuple(procs),
             n_open_arrivals=int(sum(self.proc_arrivals)),
             n_slo_rejections=int(sum(self.proc_rejections)),
-            n_autoscale_events=self.n_autoscale)
+            n_autoscale_events=self.n_autoscale,
+            metrics=metrics)
 
 
 def run_fleet(cfg: FleetConfig) -> FleetReport:

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -51,6 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.pipeline import chunk_sizes
+from ..core.telemetry import Span
 from ..kernels.activation_codec import ops as codec
 from ..models import transformer as T
 from ..models import vla as V
@@ -58,6 +60,17 @@ from ..models.layers import embed, rmsnorm, unembed
 from ..models.transformer import block_forward, block_decode, _layer_slice
 
 Tree = Any
+
+
+def _record_exec_spans(recorder, t0: float, t1: float, t2: float) -> None:
+    """Two wall-clock spans — edge forward, then cloud forward (+ edge
+    tail for two-pool plans) — on the ``executor:*`` lanes.  Host
+    ``perf_counter`` time, so the trace mixes with the simulator's model
+    time only by lane, never by clock."""
+    recorder.record_span(Span(name="edge_fwd", cat="executor", t0_s=t0,
+                              dur_s=t1 - t0, lane="executor:edge"))
+    recorder.record_span(Span(name="cloud_fwd", cat="executor", t0_s=t1,
+                              dur_s=t2 - t1, lane="executor:cloud"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -338,20 +351,33 @@ class LMSplitExecutor:
 
     # -- public API
     def run(self, params, tokens, split: int,
-            split2: Optional[int] = None):
+            split2: Optional[int] = None, recorder=None):
         """One co-inference.  Single-pool plans return
         ``(logits, uplink_payload)``; two-pool plans take the second cut
         ``split2`` and return ``(logits, {"up": ..., "down": ...})`` — the
-        logits computed on the edge tail."""
+        logits computed on the edge tail.  With a ``FlightRecorder``
+        passed as ``recorder``, emits wall-clock edge/cloud spans (forces
+        device sync at the cut, so only pass one when tracing)."""
         split = jnp.int32(self.plan.clamp(split))
+        t0 = time.perf_counter() if recorder is not None else 0.0
         payload = self._edge(params, tokens, split)
+        t1 = 0.0
+        if recorder is not None:
+            jax.block_until_ready(payload)
+            t1 = time.perf_counter()
         if not self.plan.two_pool:
             logits = self._cloud(params, payload, split)
+            if recorder is not None:
+                jax.block_until_ready(logits)
+                _record_exec_spans(recorder, t0, t1, time.perf_counter())
             return logits, payload
         split2 = jnp.int32(self.plan.clamp2(
             split2 if split2 is not None else self.plan.pool2_end))
         down = self._cloud_mid(params, payload, split, split2)
         logits = self._tail(params, down, split2)
+        if recorder is not None:
+            jax.block_until_ready(logits)
+            _record_exec_spans(recorder, t0, t1, time.perf_counter())
         return logits, {"up": payload, "down": down}
 
     def run_streamed(self, params, tokens, split: int, n_chunks: int,
@@ -514,21 +540,33 @@ class VLASplitExecutor:
 
     def run(self, params, patches, tokens, split: int,
             key: Optional[jax.Array] = None,
-            split2: Optional[int] = None):
+            split2: Optional[int] = None, recorder=None):
         """One co-inference.  Single-pool plans return
         ``(action, uplink_payload)``; two-pool plans take the second cut
         ``split2`` and return ``(action, {"up": ..., "down": ...})`` with
-        the action decoded on the edge tail."""
+        the action decoded on the edge tail.  ``recorder`` as in
+        ``LMSplitExecutor.run``."""
         split = jnp.int32(self.plan.clamp(split))
+        t0 = time.perf_counter() if recorder is not None else 0.0
         payload = self._edge(params, patches, tokens, split)
+        t1 = 0.0
+        if recorder is not None:
+            jax.block_until_ready(payload)
+            t1 = time.perf_counter()
         key = key if key is not None else jax.random.PRNGKey(0)
         if not self.plan.two_pool:
             action = self._cloud(params, payload, split, key)
+            if recorder is not None:
+                jax.block_until_ready(action)
+                _record_exec_spans(recorder, t0, t1, time.perf_counter())
             return action, payload
         split2 = jnp.int32(self.plan.clamp2(
             split2 if split2 is not None else self.plan.pool2_end))
         down = self._cloud_mid(params, payload, split, split2)
         action = self._tail(params, down, split2, key)
+        if recorder is not None:
+            jax.block_until_ready(action)
+            _record_exec_spans(recorder, t0, t1, time.perf_counter())
         return action, {"up": payload, "down": down}
 
     def run_streamed(self, params, patches, tokens, split: int,

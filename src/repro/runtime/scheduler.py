@@ -194,6 +194,12 @@ class ContinuousBatcher:
         self.n_preempted = 0
         self.kv_high_watermark_bytes = 0.0
         self.queue_delay_sum_s = 0.0
+        # optional telemetry observer (core/telemetry.ContObserver):
+        # on_admit(rid, wait_s, now_s, kv_reserved) / on_preempt(rid,
+        # now_s) fire on admission and KV-budget eviction.  None (the
+        # default) costs one attribute check per event and changes no
+        # scheduling behavior.
+        self.observer = None
 
     # ------------------------------------------------------------- model
     def _eff(self, k: int) -> float:
@@ -242,6 +248,10 @@ class ContinuousBatcher:
                                         res))
             self.n_admitted += 1
             self.queue_delay_sum_s += self.now_s - head.wait_from
+            if self.observer is not None:
+                self.observer.on_admit(head.req.rid,
+                                       self.now_s - head.wait_from,
+                                       self.now_s, res)
 
     # -------------------------------------------------------------- loop
     def step(self, until_s: Optional[float] = None
@@ -308,6 +318,9 @@ class ContinuousBatcher:
                 victim.item.wait_from = self.now_s
                 self.queue.appendleft(victim.item)
                 self.n_preempted += 1
+                if self.observer is not None:
+                    self.observer.on_preempt(victim.item.req.rid,
+                                             self.now_s)
                 continue
             self._admit()                    # arrival event
         return done

@@ -67,7 +67,23 @@ def _valid_payload() -> dict:
                             "cohorts": {"metro": _cohort(),
                                         "rural": _cohort()}}
             for h in (0.05, 0.25)},
+        "overhead": {"n_robots": 500, "n_ticks": 200,
+                     "off_wall_s": 0.5, "sampled_wall_s": 0.51,
+                     "full_wall_s": 0.6, "sampled_ratio": 1.02,
+                     "full_ratio": 1.2, "budget_ratio": 1.03,
+                     "smoke": True, "n_recorded_sampled": 120,
+                     "n_recorded_full": 2000},
+        "drift": {"n_joined": 2000, "n_pred_saturated": 0,
+                  "reconcile_max_abs_s": 2.3e-16,
+                  "stages": {k: _drift_stage()
+                             for k in ("edge_s", "uplink_s", "queue_s",
+                                       "service_s", "down_s", "total_s",
+                                       "wire_bytes")}},
     }
+
+
+def _drift_stage() -> dict:
+    return {"n": 2000, "mean_err": 1e-3, "p50_err": 5e-4, "p95_err": 4e-3}
 
 
 def _cohort() -> dict:
@@ -116,6 +132,34 @@ def test_schema_valid_payload_passes():
         "n_rejected"), "cohorts['rural'] missing 'n_rejected'"),
     (lambda p: p["autoscale"]["high_0.05"]["cohorts"]["metro"].update(
         n_arrivals=-5), "cohorts['metro'].n_arrivals"),
+    (lambda p: p.pop("overhead"), "missing top-level section 'overhead'"),
+    (lambda p: p.update(overhead={}), "'overhead' must be a non-empty"),
+    (lambda p: p["overhead"].pop("budget_ratio"),
+     "overhead missing 'budget_ratio'"),
+    (lambda p: p["overhead"].update(off_wall_s=0.0),
+     "overhead.off_wall_s"),
+    (lambda p: p["overhead"].update(sampled_ratio=0.97),
+     "must be >= 1 (noise-floored ratio)"),
+    (lambda p: p["overhead"].update(sampled_ratio=1.9),
+     "exceeds its budget_ratio"),
+    (lambda p: p["overhead"].update(n_recorded_sampled=0),
+     "overhead.n_recorded_sampled"),
+    (lambda p: p["overhead"].update(n_recorded_sampled=5000),
+     "recorded more requests than full"),
+    (lambda p: p.pop("drift"), "missing top-level section 'drift'"),
+    (lambda p: p["drift"].update(n_joined=0), "drift.n_joined"),
+    (lambda p: p["drift"].update(n_pred_saturated=-1),
+     "drift.n_pred_saturated"),
+    (lambda p: p["drift"].update(reconcile_max_abs_s=1e-3),
+     "stage sums diverge from measured latency"),
+    (lambda p: p["drift"].update(stages={}),
+     "drift.stages must be a non-empty object"),
+    (lambda p: p["drift"]["stages"]["queue_s"].pop("p95_err"),
+     "drift.stages['queue_s'] missing 'p95_err'"),
+    (lambda p: p["drift"]["stages"]["uplink_s"].update(
+        mean_err=float("nan")), "drift.stages['uplink_s'].mean_err"),
+    (lambda p: p["drift"]["stages"]["edge_s"].update(n=0),
+     "drift.stages['edge_s'].n"),
 ])
 def test_schema_violations_are_reported(mutate, needle):
     payload = _valid_payload()

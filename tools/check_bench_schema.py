@@ -4,11 +4,11 @@ drifts from what downstream consumers (perf-trajectory tooling, the
 EXPERIMENTS.md tables, cross-PR diffs) expect.
 
 The schema is versioned: ``benchmarks/fleet_bench.py`` stamps
-``schema_version`` (currently 5 — the version that added the
-``scaling_curve`` section: per-fleet-size wall / peak-RSS /
-setup-loop-replan rows from the vectorized engine, plus the
-``autoscale`` watermark-sweep section with per-cohort stats) and this
-checker validates
+``schema_version`` (currently 6 — the version that added the
+``overhead`` section: flight-recorder off/sampled/full wall-clock
+ratios with the sampled budget gate, plus the ``drift`` section:
+planner-predicted vs measured per-stage error distributions from
+``core/telemetry.DriftAudit``) and this checker validates
 
 * the top-level sections and their per-entry keys,
 * value sanity (latencies positive and finite, percentile ladders
@@ -20,7 +20,12 @@ checker validates
 * the scaling curve's monotonicity: sizes strictly increasing, peak RSS
   nondecreasing (it is a process high-water mark sampled in ascending
   size order), wall time nondecreasing up to a 20 % timing-noise
-  allowance.
+  allowance,
+* the overhead section's ratios (>= 1 after the noise floor, sampled
+  ratio inside its recorded budget) and walls,
+* the drift section's join counts, per-stage error stats (finite), and
+  the stage-sum reconciliation bound (< 1e-6 s — the recorder's
+  decomposition must re-sum to the reported latency).
 
 Run next to ``tools/check_doc_links.py`` in the workflow, after the
 fleet smoke emits the file:
@@ -35,11 +40,11 @@ import math
 import sys
 from typing import List
 
-EXPECTED_SCHEMA_VERSION = 5
+EXPECTED_SCHEMA_VERSION = 6
 
 TOP_SECTIONS = ("schema_version", "config", "planner", "fleet", "codecs",
                 "multicut", "streamed", "queue", "scale", "scaling_curve",
-                "autoscale")
+                "autoscale", "overhead", "drift")
 CONFIG_KEYS = ("n_robots", "n_ticks", "n_replicas", "seed", "smoke")
 PLANNER_KEYS = ("scalar_s", "vec_s", "cells", "codec_scalar_s",
                 "codec_vec_s", "codec_cells", "multicut_scalar_s",
@@ -65,6 +70,16 @@ CURVE_WALL_TOLERANCE = 0.8
 AUTOSCALE_ENTRY_KEYS = ("high_s", "n_autoscale_events", "p50_s", "p95_s",
                         "cohorts")
 AUTOSCALE_COHORT_KEYS = ("p50_s", "p95_s", "n_arrivals", "n_rejected")
+OVERHEAD_KEYS = ("n_robots", "n_ticks", "off_wall_s", "sampled_wall_s",
+                 "full_wall_s", "sampled_ratio", "full_ratio",
+                 "budget_ratio", "smoke", "n_recorded_sampled",
+                 "n_recorded_full")
+DRIFT_KEYS = ("n_joined", "n_pred_saturated", "reconcile_max_abs_s",
+              "stages")
+DRIFT_STAGE_KEYS = ("n", "mean_err", "p50_err", "p95_err")
+# the decomposition the recorder emits must re-sum to the latency it
+# reports; anything past accumulated float rounding is a threading bug
+DRIFT_RECONCILE_BOUND_S = 1e-6
 
 
 def _finite_pos(x) -> bool:
@@ -242,6 +257,85 @@ def check(payload: dict) -> List[str]:
                             need(isinstance(v, int) and v >= 0,
                                  f"autoscale[{tag!r}].cohorts[{cname!r}]"
                                  f".{k} must be a non-negative int")
+
+    ov = payload["overhead"]
+    need(isinstance(ov, dict) and ov,
+         "section 'overhead' must be a non-empty object")
+    if isinstance(ov, dict) and ov:
+        for k in OVERHEAD_KEYS:
+            need(k in ov, f"overhead missing {k!r}")
+        for k in ("off_wall_s", "sampled_wall_s", "full_wall_s"):
+            if k in ov:
+                need(_finite_pos(ov[k]),
+                     f"overhead.{k} must be finite positive")
+        for k in ("sampled_ratio", "full_ratio"):
+            v = ov.get(k)
+            if v is not None:
+                need(isinstance(v, (int, float)) and math.isfinite(v)
+                     and v >= 1.0,
+                     f"overhead.{k} must be >= 1 (noise-floored ratio)")
+        br = ov.get("budget_ratio")
+        if br is not None:
+            need(_finite_pos(br) and br > 1.0,
+                 "overhead.budget_ratio must be > 1")
+            sr = ov.get("sampled_ratio")
+            if isinstance(sr, (int, float)):
+                need(sr <= br,
+                     f"overhead.sampled_ratio {sr!r} exceeds its "
+                     f"budget_ratio {br!r}")
+        for k in ("n_recorded_sampled", "n_recorded_full"):
+            v = ov.get(k)
+            if v is not None:
+                need(isinstance(v, int) and v > 0,
+                     f"overhead.{k} must be a positive int")
+        ns, nf = ov.get("n_recorded_sampled"), ov.get("n_recorded_full")
+        if isinstance(ns, int) and isinstance(nf, int):
+            need(ns <= nf, "overhead sampled mode recorded more "
+                 "requests than full mode")
+
+    dr = payload["drift"]
+    need(isinstance(dr, dict) and dr,
+         "section 'drift' must be a non-empty object")
+    if isinstance(dr, dict) and dr:
+        for k in DRIFT_KEYS:
+            need(k in dr, f"drift missing {k!r}")
+        for k in ("n_joined", "n_pred_saturated"):
+            v = dr.get(k)
+            if v is not None:
+                need(isinstance(v, int) and v >= 0,
+                     f"drift.{k} must be a non-negative int")
+        need(isinstance(dr.get("n_joined"), int)
+             and dr.get("n_joined", 0) > 0,
+             "drift.n_joined must be positive (no requests were joined)")
+        rc = dr.get("reconcile_max_abs_s")
+        if rc is not None:
+            need(isinstance(rc, (int, float)) and math.isfinite(rc)
+                 and rc >= 0,
+                 "drift.reconcile_max_abs_s must be non-negative finite")
+            if isinstance(rc, (int, float)):
+                need(rc < DRIFT_RECONCILE_BOUND_S,
+                     f"drift stage sums diverge from measured latency by "
+                     f"{rc!r} s (>= {DRIFT_RECONCILE_BOUND_S:g})")
+        st = dr.get("stages")
+        need(isinstance(st, dict) and st,
+             "drift.stages must be a non-empty object")
+        if isinstance(st, dict):
+            for sname, sentry in st.items():
+                for k in DRIFT_STAGE_KEYS:
+                    need(k in sentry,
+                         f"drift.stages[{sname!r}] missing {k!r}")
+                v = sentry.get("n")
+                if v is not None:
+                    need(isinstance(v, int) and v > 0,
+                         f"drift.stages[{sname!r}].n must be a "
+                         f"positive int")
+                for k in ("mean_err", "p50_err", "p95_err"):
+                    v = sentry.get(k)
+                    if v is not None:
+                        need(isinstance(v, (int, float))
+                             and math.isfinite(v),
+                             f"drift.stages[{sname!r}].{k} must be "
+                             f"finite")
     return errs
 
 
@@ -267,7 +361,9 @@ def main() -> int:
           f"{payload['scale']['wall_s']:.1f}s, curve "
           f"{len(payload['scaling_curve'])} sizes up to "
           f"{payload['scaling_curve'][-1]['n_robots']}, "
-          f"{len(payload['autoscale'])} autoscale points)")
+          f"{len(payload['autoscale'])} autoscale points, telemetry "
+          f"x{payload['overhead']['sampled_ratio']:.3f} sampled, "
+          f"drift over {payload['drift']['n_joined']} requests)")
     return 0
 
 

@@ -92,8 +92,12 @@ CODEC_AXIS = ("identity", "int8", "int4")
 # regional bandwidth mix; v6: added the "overhead" section — flight
 # recorder off/sampled/full wall-clock ratios at the 10k-robot scale
 # point — and the "drift" section — planner-predicted vs measured
-# per-stage signed error distributions from the recorder's audit)
-BENCH_SCHEMA_VERSION = 6
+# per-stage signed error distributions from the recorder's audit;
+# v7: added the "delta" section — temporal-delta transport bytes per
+# step by scene class (static/slow/dynamic) vs int4, key-frame rates,
+# and the wire-bytes drift row auditing the planner's cycle-average
+# pricing against the measured per-frame bytes)
+BENCH_SCHEMA_VERSION = 7
 # multi-cut scenario: per-robot cloud quota (a shared cloud cannot host
 # every robot's full tail) + asymmetric WAN (downlink 8x the uplink)
 MULTICUT_QUOTA_BYTES = 5.8e9
@@ -139,6 +143,19 @@ OVERHEAD_SMOKE_ROBOTS, OVERHEAD_SMOKE_TICKS = 500, 200
 OVERHEAD_BUDGET_RATIO = 1.03
 OVERHEAD_SMOKE_BUDGET_RATIO = 2.0
 TRACE_EXPORT_PATH = "BENCH_fleet.trace.json"
+# temporal-delta scenario: the delta codec priced for each scene class's
+# mean change fraction, vs plain int4, on the same constrained link.
+# The static-scene acceptance gate (measured wire bytes ≥5x below int4)
+# runs at full size only — smoke fleets are keyframe-dominated by their
+# short horizon.  The drift row compares the planner's cycle-average
+# wire bytes against the measured per-frame bytes via the flight
+# recorder's audit; |mean signed error| must stay within
+# DELTA_DRIFT_REL_TOL of the mean measured bytes (the residual is the
+# keyframe-phase beat the cycle average can't see).
+DELTA_SCENES = ("static", "slow", "dynamic")
+DELTA_RESYNC = 16
+DELTA_STATIC_GATE_RATIO = 5.0
+DELTA_DRIFT_REL_TOL = 0.5
 
 
 # ---------------------------------------------------------------- planner
@@ -364,6 +381,36 @@ def bench_queue(n_robots: int = 16, n_ticks: int = 200,
     ]
 
 
+def bench_delta(n_robots: int = 16, n_ticks: int = 200,
+                n_replicas: int = 3, seed: int = 0,
+                arch: str = "openvla-7b", bw: float = QUEUE_BW_BPS,
+                scenes=DELTA_SCENES):
+    """Temporal-delta transport by scene class: the delta codec (priced
+    for each scene's mean change fraction, ``DELTA_RESYNC`` key-frame
+    cadence) vs plain int4 on the same constrained link.  Wire bytes
+    are the fleet's MEASURED uplink bytes (``total_wire_bytes``), so
+    the comparison captures content-dependence: static scenes ship
+    mask-plus-few-rows deltas, dynamic scenes degrade to key frames.
+    The delta rows run with the flight recorder on so the wire-bytes
+    drift stage audits predicted (cycle-average) vs measured per-frame
+    bytes.  Returns ``[(scene, label, FleetReport)]``."""
+    from repro.core.codec import make_delta_codec
+    from repro.core.scene import SCENES
+    trace = TraceConfig(mean_bps=bw, bad_bps=max(bw / 4, 0.2e6))
+    rows = []
+    for scene in scenes:
+        d = make_delta_codec(change_frac=SCENES[scene].mean_frac,
+                             resync_every=DELTA_RESYNC, name="delta")
+        for label, axis in (("delta", (d,)), ("int4", ("int4",))):
+            cfg = FleetConfig(
+                n_robots=n_robots, archs=(arch,), n_ticks=n_ticks,
+                n_replicas=n_replicas, seed=seed, codecs=axis,
+                trace=trace, nominal_bw_bps=bw, scene=scene,
+                telemetry="full" if label == "delta" else "off")
+            rows.append((scene, label, run_fleet(cfg)))
+    return rows
+
+
 def bench_scale(n_robots: int = SCALE_ROBOTS, n_ticks: int = SCALE_TICKS,
                 n_replicas: int = SCALE_REPLICAS, seed: int = 7):
     """Event-engine scale run (``runtime/events.py``): chaos schedule plus
@@ -536,6 +583,7 @@ def run_with_json(quiet: bool = False, n_robots: int = 24,
     payload: Dict = {"schema_version": BENCH_SCHEMA_VERSION,
                      "planner": {}, "fleet": {}, "codecs": {},
                      "multicut": {}, "streamed": {}, "queue": {},
+                     "delta": {},
                      "scale": {}, "scaling_curve": [], "autoscale": {},
                      "overhead": {}, "drift": {},
                      "config": {
@@ -630,6 +678,48 @@ def run_with_json(quiet: bool = False, n_robots: int = 24,
             "n_preemptions": qrep.n_preemptions,
             "mean_queue_delay_s": qrep.mean_queue_delay_s,
             "kv_high_watermark_bytes": qrep.kv_high_watermark_bytes}
+    d_rows = bench_delta(n_robots=8 if smoke else 16,
+                         n_ticks=60 if smoke else 200,
+                         n_replicas=n_replicas, seed=seed)
+    d_by_scene: Dict[str, Dict[str, FleetReport]] = {}
+    for scene, label, drep in d_rows:
+        d_by_scene.setdefault(scene, {})[label] = drep
+    payload["delta"] = {"resync_every": DELTA_RESYNC,
+                        "static_gate_ratio": DELTA_STATIC_GATE_RATIO,
+                        "scenes": {}, "drift": {}}
+    for scene, modes in d_by_scene.items():
+        dr, i4 = modes["delta"], modes["int4"]
+        dbps = dr.total_wire_bytes / max(1, dr.n_requests)
+        ibps = i4.total_wire_bytes / max(1, i4.n_requests)
+        frames = dr.n_keyframes + dr.n_delta_frames
+        payload["delta"]["scenes"][scene] = {
+            "delta_bytes_per_step": dbps,
+            "int4_bytes_per_step": ibps,
+            "ratio_vs_int4": ibps / dbps if dbps else 0.0,
+            "keyframe_rate": dr.n_keyframes / max(1, frames),
+            "n_keyframes": dr.n_keyframes,
+            "n_delta_frames": dr.n_delta_frames}
+        lines.append(f"fleet_delta_{scene}_bytes,{dbps:.0f},"
+                     f"x{ibps / dbps if dbps else 0.0:.1f}_vs_int4")
+    # wire-bytes drift row: the planner's cycle-average pricing vs the
+    # measured per-frame bytes, from the static delta run's audit
+    d_static = d_by_scene["static"]["delta"]
+    wdrift = d_static.metrics["drift"]["stages"]["wire_bytes"]
+    d_meas = d_static.total_wire_bytes / max(1, d_static.n_requests)
+    d_rel = abs(wdrift["mean_err"]) / d_meas if d_meas else 0.0
+    payload["delta"]["drift"] = {
+        "n": wdrift["n"], "mean_err_bytes": wdrift["mean_err"],
+        "p95_err_bytes": wdrift["p95_err"],
+        "meas_mean_bytes": d_meas, "rel_err": d_rel,
+        "rel_tol": DELTA_DRIFT_REL_TOL}
+    assert d_rel <= DELTA_DRIFT_REL_TOL, (
+        f"delta wire-bytes drift {d_rel:.3f} outside the "
+        f"{DELTA_DRIFT_REL_TOL:g} tolerance")
+    if not smoke:
+        got = payload["delta"]["scenes"]["static"]["ratio_vs_int4"]
+        assert got >= DELTA_STATIC_GATE_RATIO, (
+            f"static-scene delta ratio x{got:.1f} under the "
+            f"x{DELTA_STATIC_GATE_RATIO:g} gate")
     sc_robots = SCALE_SMOKE_ROBOTS if smoke else SCALE_ROBOTS
     sc_ticks = SCALE_SMOKE_TICKS if smoke else SCALE_TICKS
     srep_scale, sc_wall, sc_prof = bench_scale(sc_robots, sc_ticks)
@@ -761,6 +851,22 @@ def run_with_json(quiet: bool = False, n_robots: int = 24,
                   f"{qrep.n_preemptions:8d} "
                   f"{qrep.mean_queue_delay_s * 1e3:10.2f} "
                   f"{qrep.kv_high_watermark_bytes / 1e6:9.1f}")
+        print(f"\ntemporal-delta transport by scene class (openvla-7b at "
+              f"{QUEUE_BW_BPS / 1e6:g} MB/s, resync every "
+              f"{DELTA_RESYNC} frames):")
+        print(f"{'scene':9s} {'delta B/step':>13s} {'int4 B/step':>12s} "
+              f"{'ratio':>6s} {'kf rate':>8s}")
+        for scene in DELTA_SCENES:
+            sc = payload["delta"]["scenes"][scene]
+            print(f"{scene:9s} {sc['delta_bytes_per_step']:13.0f} "
+                  f"{sc['int4_bytes_per_step']:12.0f} "
+                  f"x{sc['ratio_vs_int4']:5.1f} "
+                  f"{sc['keyframe_rate']:8.3f}")
+        dd = payload["delta"]["drift"]
+        print(f"  wire-bytes drift: {dd['n']} joined, mean err "
+              f"{dd['mean_err_bytes']:.0f} B vs {dd['meas_mean_bytes']:.0f} "
+              f"B/step measured (rel {dd['rel_err']:.3f}, "
+              f"tol {dd['rel_tol']:g})")
         print(f"\nevent-engine scale run ({sc_robots} robots x "
               f"{sc_ticks} ticks, chaos + {SCALE_ARRIVAL_HZ:g} req/s "
               f"open-loop): wall {sc_wall:.1f} s, "

@@ -16,6 +16,8 @@
                     ``adjust_placement`` moves either cut of a multi-cut
                     placement)
 * network.py      — bandwidth trace simulator
+* scene.py        — scene-dynamics trace simulator (per-step token
+                    change fractions for the temporal-delta codec)
 * pipeline.py     — streamed chunk-transport makespan model (3-stage
                     encode → uplink → decode+prefill pipeline; the
                     chunk-count axis of the streamed planner)
@@ -23,13 +25,15 @@
 """
 from .adjustment import (AdjustmentDecision, PlacementDecision, Thresholds,
                          adjust, adjust_placement, calibrate_thresholds)
-from .codec import (CODECS, Codec, get_codec, make_codecs, resolve_codecs,
-                    transport_s)
+from .codec import (CODECS, Codec, DeltaCodec, get_codec, make_codecs,
+                    make_delta_codec, resolve_codecs, transport_s)
 from .controller import RoboECC, TickResult
 from .hardware import (A100, DEVICES, ORIN, THOR, TPU_V5E, DeviceSpec,
                        RooflineTerms, fit_eta, layer_latency, roofline,
                        stack_latency)
 from .network import NetworkSim, TraceConfig, generate_trace
+from .scene import (SCENES, SceneConfig, generate_scene_matrix,
+                    generate_scene_trace, scene_config)
 from .pipeline import (DEFAULT_CHUNK_GRID, chunk_sizes, stream_applies,
                        stream_bubble_fraction, stream_makespan,
                        stream_makespan_scalar)
@@ -53,12 +57,14 @@ from .structure import LayerCost, Workload, build_graph, total_flops, \
 __all__ = [
     "AdjustmentDecision", "PlacementDecision", "Thresholds", "adjust",
     "adjust_placement", "calibrate_thresholds",
-    "CODECS", "Codec", "get_codec", "make_codecs", "resolve_codecs",
-    "transport_s",
+    "CODECS", "Codec", "DeltaCodec", "get_codec", "make_codecs",
+    "make_delta_codec", "resolve_codecs", "transport_s",
     "RoboECC", "TickResult",
     "A100", "DEVICES", "ORIN", "THOR", "TPU_V5E", "DeviceSpec",
     "RooflineTerms", "fit_eta", "layer_latency", "roofline", "stack_latency",
     "NetworkSim", "TraceConfig", "generate_trace",
+    "SCENES", "SceneConfig", "generate_scene_matrix", "generate_scene_trace",
+    "scene_config",
     "DEFAULT_CHUNK_GRID", "chunk_sizes", "stream_applies",
     "stream_bubble_fraction", "stream_makespan", "stream_makespan_scalar",
     "PlacementPlan",

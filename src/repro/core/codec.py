@@ -34,6 +34,25 @@ is what lets the vectorized planner fold codecs into one numpy pass
 (``encode_s(raw) == raw * encode_s_per_byte``).  Identity is exactly free
 (factor 1.0, zero compute) so enabling the codec axis with only
 ``identity`` reproduces codec-free plans bit-for-bit.
+
+**Temporal deltas** (``DeltaCodec`` / ``make_delta_codec``): a VLA control
+loop sees near-identical consecutive camera frames, so the cloud caches
+the previous step's cut activation and the edge ships only the
+changed-token rows plus a 1-bit-per-row change mask, resyncing with a full
+key frame every ``resync_every`` steps (RAPID's redundancy-awareness as a
+planner axis; ROADMAP item 2).  The planner-facing fields are the
+CYCLE-AVERAGED expected costs over one key-frame period parameterized by
+the expected change fraction — still linear per raw byte, so every
+existing search/sweep/adjust path consumes a ``DeltaCodec`` unchanged.
+``err_bound`` grows with the worst-case steps-since-keyframe
+(``base + (R-1)*threshold``), so the ``max_err`` gate forces honest
+resync cadences.  Degenerate parameters (``resync_every=1``, or a change
+fraction at which deltas stop paying) collapse every field to the base
+codec's exactly — bit-for-bit the non-delta path.  The matching stateful
+data plane (reference cache, mask packing, eviction→resync) lives in
+``runtime/partition.py``; the measured-vs-planned change fraction drives
+``RoboECC.observe_change_frac`` and the fleet's drift replans
+(``runtime/fleet.py``), with scene-dynamics traces from ``core/scene.py``.
 """
 from __future__ import annotations
 
@@ -117,6 +136,113 @@ def transport_s(raw_bytes: float, bandwidth_bps: float, codec: "Codec",
     return t
 
 
+@dataclasses.dataclass(frozen=True)
+class DeltaCodec(Codec):
+    """Cross-step temporal-delta transport priced as a plain ``Codec``.
+
+    The inherited cost fields are the CYCLE-AVERAGED expected costs of one
+    key-frame period (see ``make_delta_codec`` — they stay linear per raw
+    byte, so planners need no special casing); the extra fields record the
+    parameters the data plane (``runtime/partition.py``) and the fleet's
+    measured pricing (``runtime/fleet.py``) execute with:
+
+    * ``base``        — name of the per-frame payload codec (key frames
+      ship the full base-encoded activation; delta frames the changed
+      rows, base-encoded);
+    * ``change_frac`` — expected fraction of token rows changed per step
+      (the scene-dependent parameter plans carry; measured drift beyond
+      tolerance triggers ``RoboECC.observe_change_frac`` replans);
+    * ``resync_every``— key-frame cadence R (a key frame every R steps
+      bounds worst-case staleness);
+    * ``threshold``   — per-row relative change threshold τ: rows moving
+      less than τ x the activation scale are not shipped, so each
+      unshipped step adds at most τ relative error — hence
+      ``err_bound = base_err + (R-1) * τ``;
+    * ``row_elems``   — elements per token row (hidden dim) the 1-bit
+      row mask is amortized over.
+    """
+    base: str = "int8"
+    change_frac: float = 0.15
+    resync_every: int = 8
+    threshold: float = 0.02
+    row_elems: int = 4096
+
+
+def make_delta_codec(base: Union[str, Codec] = "int8",
+                     change_frac: float = 0.15,
+                     resync_every: int = 8,
+                     threshold: float = 0.02,
+                     row_elems: int = 4096,
+                     raw_bytes_per_elem: float = 2.0,
+                     name: str = "delta") -> DeltaCodec:
+    """Build a temporal-delta codec whose planner-facing fields are the
+    expected per-element costs averaged over one key-frame period.
+
+    With base per-element wire cost ``b``, change fraction ``p``, mask
+    cost ``m = 1/(8*row_elems)`` and cadence ``R = resync_every``:
+
+    * a key frame costs exactly the base codec (full re-encode, the cloud
+      reference is rewritten — bit-exact reconstruction of the non-delta
+      path, checked by the data-plane tests);
+    * a delta frame costs ``p*b + m`` wire plus a compare pass on every
+      row (the edge must diff against its reference mirror) and the base
+      encode/decode of only the changed rows;
+    * the cycle average weighs 1 key frame and ``R-1`` delta frames.
+
+    Degenerate settings — ``resync_every <= 1``, or ``p*b + m >= b`` (true
+    at ``change_frac = 1.0``: deltas cannot pay, every frame is a key
+    frame) — return a ``DeltaCodec`` whose every cost field EQUALS the
+    base codec's, so plans and prices reproduce the non-delta codec
+    bit-for-bit (the encoder then ships only key frames and skips the
+    compare pass).
+
+    ``err_bound = base_err + (R-1)*threshold``: between key frames an
+    unshipped row may drift by up to τ per step relative to the reference,
+    so the planner's ``max_err`` gate forces small R honestly."""
+    if isinstance(base, Codec):
+        b = base
+    else:
+        b = make_codecs(raw_bytes_per_elem)[base]
+    r = b.raw_bytes_per_elem
+    p = min(max(float(change_frac), 0.0), 1.0)
+    R = int(resync_every)
+    mask_bpe = 1.0 / (8.0 * row_elems)
+    delta_bpe = p * b.bytes_per_elem + mask_bpe
+    common = dict(name=name, raw_bytes_per_elem=r, base=b.name,
+                  change_frac=p, resync_every=R, threshold=float(threshold),
+                  row_elems=int(row_elems))
+    if R <= 1 or delta_bpe >= b.bytes_per_elem:
+        # degenerate: every frame is a key frame — all fields equal the
+        # base codec exactly (bit-for-bit the non-delta path)
+        return DeltaCodec(bytes_per_elem=b.bytes_per_elem,
+                          enc_flops_per_elem=b.enc_flops_per_elem,
+                          enc_move_bytes_per_elem=b.enc_move_bytes_per_elem,
+                          dec_flops_per_elem=b.dec_flops_per_elem,
+                          dec_move_bytes_per_elem=b.dec_move_bytes_per_elem,
+                          err_bound=b.err_bound, **common)
+    share = (R - 1.0) / R       # delta-frame weight in the cycle average
+    key = 1.0 / R
+    return DeltaCodec(
+        bytes_per_elem=key * b.bytes_per_elem + share * delta_bpe,
+        # delta frames pay a 2-FLOP/elem compare pass (diff + row-max
+        # reduce) over the full activation plus the base encode of the
+        # changed fraction; key frames the plain base encode
+        enc_flops_per_elem=key * b.enc_flops_per_elem
+        + share * (2.0 + p * b.enc_flops_per_elem),
+        # compare reads current + reference mirror (2r); changed rows
+        # then move through the base encoder
+        enc_move_bytes_per_elem=key * b.enc_move_bytes_per_elem
+        + share * (2.0 * r + p * b.enc_move_bytes_per_elem),
+        # cloud: key frames base-decode + rewrite the reference (+r);
+        # delta frames read the reference and scatter the decoded rows
+        dec_flops_per_elem=key * b.dec_flops_per_elem
+        + share * (1.0 + p * b.dec_flops_per_elem),
+        dec_move_bytes_per_elem=key * (b.dec_move_bytes_per_elem + r)
+        + share * (r + p * b.dec_move_bytes_per_elem),
+        err_bound=b.err_bound + (R - 1) * float(threshold),
+        **common)
+
+
 # ------------------------------------------------------------------ zoo
 def make_codecs(raw_bytes_per_elem: float = 2.0, block: int = BLOCK,
                 topk_frac: float = 0.25) -> Dict[str, Codec]:
@@ -137,10 +263,15 @@ def make_codecs(raw_bytes_per_elem: float = 2.0, block: int = BLOCK,
       kept elements ship fp16 value + 1-byte in-block index
       (3 B × frac per elem); selection ≈ 16 FLOPs/elem encode, scatter
       ≈ 2 decode; ``err_bound`` is the dropped-coefficient L2 proxy.
+    * ``delta``    — cross-step temporal deltas over an int8 base
+      (``make_delta_codec`` defaults: expected change fraction 0.15,
+      key frame every 8 steps, row threshold 0.02): cycle-averaged wire
+      ≈ 0.27 B/elem, err grows with steps-since-keyframe.  Scene-specific
+      variants come from ``make_delta_codec`` directly.
     """
     r = raw_bytes_per_elem
     scale_b = 4.0 / block
-    return {
+    out = {
         "identity": Codec("identity", bytes_per_elem=r,
                           raw_bytes_per_elem=r),
         "fp16": Codec("fp16", bytes_per_elem=2.0, raw_bytes_per_elem=r,
@@ -171,6 +302,11 @@ def make_codecs(raw_bytes_per_elem: float = 2.0, block: int = BLOCK,
                       dec_move_bytes_per_elem=3.0 * topk_frac + r,
                       err_bound=0.45),
     }
+    # registered AFTER the bases so the default delta can reference the
+    # int8 instance of THIS registry (same raw element size)
+    out["delta"] = make_delta_codec(base=out["int8"],
+                                    raw_bytes_per_elem=r)
+    return out
 
 
 CODECS: Dict[str, Codec] = make_codecs()

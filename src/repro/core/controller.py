@@ -24,7 +24,8 @@ import numpy as np
 from ..configs.base import ModelConfig
 from .adjustment import (AdjustmentDecision, PlacementDecision, Thresholds,
                          adjust, adjust_placement)
-from .codec import Codec, CodecLike, get_codec, resolve_codecs
+from .codec import (Codec, CodecLike, DeltaCodec, get_codec,
+                    make_delta_codec, resolve_codecs)
 from .hardware import DeviceSpec, layer_latency
 from .network import NetworkSim
 from .placement import PlacementPlan
@@ -292,6 +293,49 @@ class RoboECC:
                           placement=self.placement,
                           n_chunks=self.placement.primary_chunks(
                               len(self.graph)))
+
+    # --------------------------------------------------------- scene drift
+    def observe_change_frac(self, measured_frac: float, *,
+                            tol: float = 0.25,
+                            nominal_bw_bps: float = 10e6,
+                            cloud_budget_bytes: Optional[float] = None
+                            ) -> bool:
+        """Re-plan when the *measured* token change fraction drifts from
+        the one the delta codec was priced with.
+
+        A ``DeltaCodec``'s wire bytes are a bet on scene content: plans
+        priced for a static tabletop (``change_frac`` ≈ 0.02) are badly
+        wrong once the robot starts driving.  When the relative drift
+        ``|measured - planned| / planned`` exceeds ``tol``, rebuild the
+        delta codec around the measured fraction (same base, cadence,
+        threshold) and re-run the full planner with it.  Returns whether
+        a re-plan happened; a no-op (non-delta codec, or drift within
+        tolerance) costs one comparison.
+
+        ``nominal_bw_bps`` / ``cloud_budget_bytes`` follow ``replan``'s
+        convention: they describe the deployment conditions to re-plan
+        under and do not default to construction values."""
+        if not isinstance(self.codec, DeltaCodec):
+            return False
+        planned = self.codec.change_frac
+        measured = min(max(float(measured_frac), 0.0), 1.0)
+        if planned > 0.0 and abs(measured - planned) / planned <= tol:
+            return False
+        old_name = self.codec.name
+        self.codec = make_delta_codec(
+            base=self.codec.base, change_frac=measured,
+            resync_every=self.codec.resync_every,
+            threshold=self.codec.threshold,
+            row_elems=self.codec.row_elems,
+            raw_bytes_per_elem=self.codec.raw_bytes_per_elem,
+            name=old_name)
+        if self.adjust_codecs is not None:
+            self.adjust_codecs = [
+                self.codec if c.name == old_name else c
+                for c in self.adjust_codecs]
+        self.replan(cloud_budget_bytes=cloud_budget_bytes,
+                    nominal_bw_bps=nominal_bw_bps)
+        return True
 
     # ------------------------------------------------------------ elasticity
     def replan(self, *, edge: Optional[DeviceSpec] = None,

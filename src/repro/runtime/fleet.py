@@ -86,10 +86,12 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from ..configs import get_config
-from ..core.codec import Codec, resolve_codecs
+from ..core.codec import (Codec, DeltaCodec, make_codecs, make_delta_codec,
+                          resolve_codecs)
 from ..core.controller import RoboECC
 from ..core.hardware import A100, ORIN, DeviceSpec
 from ..core.network import NetworkSim, TraceConfig, generate_trace_matrix
+from ..core.scene import SceneConfig, generate_scene_matrix, scene_config
 from ..core.pipeline import (DEFAULT_CHUNK_GRID, stream_applies,
                              stream_makespan_scalar)
 from ..core.segmentation import (GraphArrays, graph_arrays, queue_delay_s,
@@ -279,6 +281,43 @@ class FleetConfig:
     telemetry: str = "off"
     telemetry_cap: int = 65536
     telemetry_sample_every: int = 64
+    # scene-dynamics axis for the temporal-delta codec (core/scene.py):
+    # a scene name ("static"/"slow"/"dynamic") or a SceneConfig gives
+    # every robot a seeded per-tick token change-fraction trace (its own
+    # stream, disjoint from the bandwidth traces).  With a "delta" codec
+    # in ``codecs``, each uplink is then priced at its MEASURED frame
+    # cost — key frames at the base codec's bytes, delta frames at
+    # ``frac x base + mask`` — instead of the plan table's cycle
+    # average, per-robot wire bytes are accounted
+    # (``FleetReport.total_wire_bytes``), and the resync cadence /
+    # reference-cache state is tracked per robot.  Delta state applies
+    # to closed-loop uplinks only: open-loop arrivals are stateless
+    # one-shots with no reference to delta against, and the downlink
+    # leg keeps cycle-average pricing (the reference cache is
+    # cloud-side).  ``None`` (default) skips every delta branch — runs
+    # are bit-identical to builds without the axis.
+    scene: Optional[object] = None          # str | core.scene.SceneConfig
+    # cloud-side reference-cache byte budget shared across the fleet's
+    # delta references (accounted by runtime/kvcache.ReferenceLedger,
+    # the same memory pool the KV budget draws from).  Overflow evicts
+    # the stalest robots' references (FIFO-by-refresh), forcing their
+    # next frame back to a key frame (``n_ref_evictions``).  None =
+    # unbounded (and keeps the batched robot phase fully vectorized —
+    # a budget makes eviction order-sensitive, so budgeted runs walk
+    # delta state per-robot in ascending index).
+    delta_ref_budget_bytes: Optional[float] = None
+    # measured-vs-planned change-fraction drift replans: every
+    # ``delta_drift_every`` ticks the fleet-mean measured change
+    # fraction over the window is compared against the delta codec's
+    # planned ``change_frac``; relative drift beyond
+    # ``delta_drift_tol`` rebuilds the delta codec around the measured
+    # fraction and re-runs the plan tables (``n_delta_replans``).  The
+    # schedule is precomputed from the scene matrix at construction —
+    # a pure function of the tick, never of robot processing order —
+    # which is what keeps the tick/event/vectorized engines
+    # bit-identical.  0 disables.
+    delta_drift_tol: float = 0.25
+    delta_drift_every: int = 0
 
 
 def outage_schedule(cfg: FleetConfig) -> List[ReplicaEvent]:
@@ -361,6 +400,17 @@ class FleetReport:
     # telemetry on: counters/gauges/quantile sketches + drift summary.
     # None when telemetry="off", so historical reports compare equal.
     metrics: Optional[dict] = None
+    # temporal-delta transport (FleetConfig.scene; all zero when the
+    # scene axis is off, so historical reports compare equal).
+    # ``total_wire_bytes`` sums every applicable closed-loop uplink's
+    # MEASURED wire bytes (any codec, not just delta — the comparison
+    # baseline needs the same accounting); the frame counters and
+    # eviction/replan counts are delta-codec specific.
+    total_wire_bytes: float = 0.0
+    n_keyframes: int = 0
+    n_delta_frames: int = 0
+    n_ref_evictions: int = 0
+    n_delta_replans: int = 0
 
     def summary(self) -> str:
         lines = [
@@ -383,6 +433,12 @@ class FleetReport:
                 f"  open loop: {self.n_open_arrivals} arrivals, "
                 f"{self.n_slo_rejections} SLO rejections, "
                 f"{self.n_autoscale_events} autoscale events")
+        if self.total_wire_bytes or self.n_keyframes or self.n_delta_frames:
+            lines.append(
+                f"  delta: {self.total_wire_bytes / 1e6:.1f} MB wire, "
+                f"{self.n_keyframes} key / {self.n_delta_frames} delta "
+                f"frames, {self.n_ref_evictions} evictions, "
+                f"{self.n_delta_replans} drift replans")
         return "\n".join(lines)
 
 
@@ -550,6 +606,41 @@ class FleetSimulator:
                         "trace_s": _t_trace - _t_ctl}
         # lazily-built stacked plan/cost tables for _robot_step_batch
         self._bst: Optional[dict] = None
+
+        # ---- temporal-delta scene axis (None = every branch below is
+        # skipped; the run is bit-identical to a scene-free build)
+        self.scene_cfg: Optional[SceneConfig] = None
+        self.scene_mat: Optional[np.ndarray] = None
+        self._delta_ledger = None
+        self.wire_bytes_of = np.zeros(cfg.n_robots, dtype=np.float64)
+        self.n_keyframes = 0
+        self.n_delta_frames = 0
+        self.n_ref_evictions = 0
+        self.n_delta_replans = 0
+        self._delta_replan_at: Dict[int, float] = {}
+        self._delta_replan_ticks: List[int] = []
+        self._delta_replan_ptr = 0
+        if cfg.scene is not None:
+            self.scene_cfg = scene_config(cfg.scene)
+            # per-robot change-fraction traces on a seed stream disjoint
+            # from the bandwidth traces (rows i use seed*100_003 + i; the
+            # +59_999_999 offset keeps the streams apart for any fleet
+            # under ~59M robots)
+            self.scene_mat = generate_scene_matrix(
+                cfg.n_ticks + 1, self.scene_cfg,
+                [cfg.seed * 100_003 + i + 59_999_999
+                 for i in range(cfg.n_robots)])
+            self.delta_ssk = np.zeros(cfg.n_robots, dtype=np.int64)
+            self.delta_has_ref = np.zeros(cfg.n_robots, dtype=bool)
+            if cfg.delta_ref_budget_bytes is not None:
+                # lazy: kvcache pulls in jax for its buffer helpers; the
+                # ledger itself is pure Python
+                from .kvcache import ReferenceLedger
+                self._delta_ledger = ReferenceLedger(
+                    cfg.delta_ref_budget_bytes)
+            self._refresh_delta_tables()
+            if cfg.delta_drift_every > 0 and bool(self._delta_is.any()):
+                self._schedule_delta_replans()
 
         self.replica_names = [f"cloud{i}" for i in range(cfg.n_replicas)]
         self.pool = ElasticPool(on_change=self._on_replicas,
@@ -875,10 +966,176 @@ class FleetSimulator:
         """Single-cut view of ``_planned_placement`` (legacy helper)."""
         return self._planned_placement(robot, bw_bps)[0]
 
+    # -------------------------------------------------------- temporal delta
+    def _refresh_delta_tables(self) -> None:
+        """Per-codec-index delta parameter arrays for the measured
+        pricing: which codecs are delta, the base codec's wire factor
+        (key-frame cost), the change-mask wire factor (one bit per
+        ``row_elems`` raw elements) and the resync cadence.  Rebuilt
+        whenever ``self.codecs`` is swapped by a drift replan."""
+        cd = self.codecs
+        self._delta_is = np.asarray(
+            [isinstance(c, DeltaCodec) for c in cd], dtype=bool)
+        base_wf = np.zeros(len(cd))
+        mask_wf = np.zeros(len(cd))
+        R = np.ones(len(cd), dtype=np.int64)
+        for j, c in enumerate(cd):
+            if isinstance(c, DeltaCodec):
+                b = make_codecs(c.raw_bytes_per_elem)[c.base]
+                base_wf[j] = b.wire_factor
+                mask_wf[j] = (1.0 / (8.0 * c.row_elems)) \
+                    / c.raw_bytes_per_elem
+                R[j] = c.resync_every
+        self._delta_base_wf = base_wf
+        self._delta_mask_wf = mask_wf
+        self._delta_R = R
+
+    def _schedule_delta_replans(self) -> None:
+        """Precompute the drift-replan schedule from the scene matrix:
+        every ``delta_drift_every`` ticks, compare the fleet-mean
+        measured change fraction over the window against the current
+        planned ``change_frac``; relative drift beyond
+        ``delta_drift_tol`` schedules a replan at that tick.  Purely a
+        function of (seed, scene, tick) — robot processing order never
+        enters — so the tick, scalar-event and vectorized-event engines
+        apply identical replans at identical points."""
+        cfg = self.cfg
+        fm = self.scene_mat.mean(axis=0)
+        planned = float(next(c.change_frac for c in self.codecs
+                             if isinstance(c, DeltaCodec)))
+        w = int(cfg.delta_drift_every)
+        for t0 in range(w, cfg.n_ticks + 1, w):
+            m = float(fm[t0 - w:t0].mean())
+            if planned > 0.0 and abs(m - planned) / planned \
+                    > cfg.delta_drift_tol:
+                self._delta_replan_at[t0] = m
+                planned = m
+        self._delta_replan_ticks = sorted(self._delta_replan_at)
+
+    def _maybe_delta_replan(self, tick: int) -> None:
+        """Apply every scheduled drift replan with trigger tick ≤ this
+        tick.  Called at the top of both robot-phase bodies, before any
+        robot of the tick is priced; the fast path (no pending replan)
+        is one comparison."""
+        ptr = self._delta_replan_ptr
+        ts = self._delta_replan_ticks
+        while ptr < len(ts) and ts[ptr] <= tick:
+            self._apply_delta_replan(self._delta_replan_at[ts[ptr]])
+            ptr += 1
+        self._delta_replan_ptr = ptr
+
+    def _apply_delta_replan(self, measured_frac: float) -> None:
+        """Rebuild every delta codec around the measured change fraction
+        (same base / cadence / threshold, same NAME — codec indices in
+        ``codec_of`` and the plan tables stay valid) and re-run the plan
+        tables with it.  Controllers keep their construction-time codec:
+        fleet drift replans move the shared plan tables, not the
+        per-arch ``RoboECC`` state — controller-grade adaptation is the
+        separately-tested ``RoboECC.observe_change_frac``."""
+        self.codecs = [
+            make_delta_codec(base=c.base, change_frac=measured_frac,
+                             resync_every=c.resync_every,
+                             threshold=c.threshold, row_elems=c.row_elems,
+                             raw_bytes_per_elem=c.raw_bytes_per_elem,
+                             name=c.name)
+            if isinstance(c, DeltaCodec) else c for c in self.codecs]
+        (self.plan, self.plan_s2, self.plan_codec,
+         self.plan_chunks) = self._build_plans(self.plan_queue_hz)
+        self._bst = None
+        self._refresh_delta_tables()
+        self.n_delta_replans += 1
+
+    def _delta_frame(self, i: int, ci: int, frac: float, wire_raw: float
+                     ) -> float:
+        """One robot's delta-frame decision: key frame when the robot
+        has no live reference, the resync cadence fires, or the delta
+        at this frame's change fraction would not beat a key frame
+        (fully dynamic scenes degrade to every-frame key frames — the
+        honest negative).  Updates the per-robot cadence state, the
+        frame counters and — with a budget — the reference ledger
+        (reference bytes = the raw activation at the cut; evicted
+        robots lose their reference and key-frame next time).  Returns
+        the measured wire factor for this frame."""
+        base_wf = float(self._delta_base_wf[ci])
+        dwf = frac * base_wf + float(self._delta_mask_wf[ci])
+        key = ((not self.delta_has_ref[i])
+               or self.delta_ssk[i] >= self._delta_R[ci] - 1
+               or dwf >= base_wf)
+        self.delta_ssk[i] = 0 if key else self.delta_ssk[i] + 1
+        self.delta_has_ref[i] = True
+        if key:
+            self.n_keyframes += 1
+        else:
+            self.n_delta_frames += 1
+        if self._delta_ledger is not None:
+            for k in self._delta_ledger.put(int(i), wire_raw):
+                self.delta_has_ref[k] = False
+                self.n_ref_evictions += 1
+        return base_wf if key else dwf
+
+    def _delta_uplink(self, i: int, tick: int, s1: int, s2: int, n: int,
+                      wire_raw: float, cdc: Codec) -> Optional[float]:
+        """Scalar measured-wire hook for one robot step: ``None`` when
+        the placement has no codec-applicable uplink leg; otherwise the
+        measured wire factor (the codec's own factor for non-delta
+        codecs — the byte accounting must cover the comparison
+        baselines too), with the robot's wire bytes accumulated."""
+        if not (s1 < s2 and 0 < s1 < n and wire_raw > 0.0):
+            return None
+        if self._delta_is[cdc_i := int(self.codec_of[i])]:
+            wf = self._delta_frame(i, cdc_i, float(self.scene_mat[i, tick]),
+                                   wire_raw)
+        else:
+            wf = cdc.wire_factor
+        self.wire_bytes_of[i] += wf * wire_raw
+        return wf
+
+    def _delta_uplink_batch(self, idxs: np.ndarray, tick: int,
+                            s1: np.ndarray, s2: np.ndarray,
+                            n_v: np.ndarray, wire_s1: np.ndarray,
+                            ci: np.ndarray) -> tuple:
+        """Vector mirror of ``_delta_uplink`` over one tick's batch:
+        identical expressions elementwise, per-robot state updates
+        vectorized (independent across robots), byte accumulation
+        per-robot (order-independent — ``idxs`` are unique).  With a
+        reference budget the delta walk drops to a scalar loop in
+        ascending index: ledger eviction is order-sensitive, and the
+        scalar engine processes robots in exactly that order.  Returns
+        ``(wire factors, applicable mask)``."""
+        bst = self._bst
+        app = (s1 < s2) & (0 < s1) & (s1 < n_v) & (wire_s1 > 0.0)
+        wf = np.array(bst["wf"][ci])
+        d = app & self._delta_is[ci]
+        if self._delta_ledger is None:
+            if d.any():
+                frac = self.scene_mat[idxs, tick]
+                base_wf = self._delta_base_wf[ci]
+                dwf = frac * base_wf + self._delta_mask_wf[ci]
+                ssk = self.delta_ssk[idxs]
+                key = d & (~self.delta_has_ref[idxs]
+                           | (ssk >= self._delta_R[ci] - 1)
+                           | (dwf >= base_wf))
+                wf = np.where(d, np.where(key, base_wf, dwf), wf)
+                self.delta_ssk[idxs] = np.where(
+                    d, np.where(key, 0, ssk + 1), ssk)
+                self.delta_has_ref[idxs] |= d
+                self.n_keyframes += int(np.count_nonzero(key))
+                self.n_delta_frames += int(np.count_nonzero(d & ~key))
+        else:
+            for j in np.flatnonzero(d):
+                wf[j] = self._delta_frame(
+                    int(idxs[j]), int(ci[j]),
+                    float(self.scene_mat[int(idxs[j]), tick]),
+                    float(wire_s1[j]))
+        aw = np.flatnonzero(app)
+        if len(aw):
+            self.wire_bytes_of[idxs[aw]] += wf[aw] * wire_s1[aw]
+        return wf, app
+
     # ------------------------------------------------------------- streaming
     def _stream_uplink(self, robot: int, arrays: GraphArrays, s1: int,
-                       cdc: Codec, edge_head_s: float, cloud_s: float
-                       ) -> tuple:
+                       cdc: Codec, edge_head_s: float, cloud_s: float,
+                       wire_factor: Optional[float] = None) -> tuple:
         """Price the robot's chunked uplink against its ACTUAL trace: the
         transfer starts once the edge head finishes and chunk 1 is
         encoded, chunks ship back-to-back consuming each tick's bandwidth
@@ -888,13 +1145,22 @@ class FleetSimulator:
         transport-exposed uplink seconds (``makespan − cloud_s`` — the
         replica still executes the full window inside its batch, so the
         batched-execution machinery composes unchanged) and the pipeline's
-        fill/drain bubble fraction."""
+        fill/drain bubble fraction.
+
+        ``wire_factor`` overrides the codec's cycle-average wire factor
+        with this frame's MEASURED one (temporal delta: key frames ship
+        the full base payload, delta frames only the changed rows).
+        Encode/decode stay at the codec's cycle-average rates — the
+        per-frame codec work variation is second-order next to the wire
+        term it scales, and keeping it fixed keeps the planner's
+        compute-side pricing exact."""
         net = self.nets[robot]
         K = self.chunks_of[robot]
         wire_raw = float(arrays.wire_bytes[s1])
         enc = cdc.encode_s(wire_raw, self.cfg.edge)
         dec = cdc.decode_s(wire_raw, self.cfg.cloud)
-        wire_c = cdc.wire_bytes(wire_raw)
+        wire_c = (wire_raw * wire_factor if wire_factor is not None
+                  else cdc.wire_bytes(wire_raw))
         per_chunk = wire_c / K
         off = edge_head_s + enc / K
         wire_times = []
@@ -947,7 +1213,8 @@ class FleetSimulator:
 
     def _tele_pred(self, lane: str, arch: str, bw: float, s1: int, s2: int,
                    kc: int, ci: int, e: float, c: float, t: float,
-                   down: float) -> dict:
+                   down: float, wire_meas_over: Optional[float] = None
+                   ) -> dict:
         """The planner's predicted stage decomposition at issue time —
         the ``evaluate_placement`` legs as priced (edge head, uplink,
         cloud window, downlink + tail), the M/G/1 wait prior the
@@ -957,7 +1224,13 @@ class FleetSimulator:
         FROZEN-bandwidth 3-stage makespan (uniform chunk wire times at
         the issue-time rate) in place of the trace-integrated uplink the
         runtime will actually pay.  Private ``_``-keys carry span
-        context (lane, codec costs, measured wire bytes) to completion."""
+        context (lane, codec costs, measured wire bytes) to completion.
+
+        ``wire_meas_over`` overrides the measured wire bytes with this
+        frame's actual shipped bytes (temporal delta); the predicted
+        bytes stay at the plan bin's cycle average, so the existing
+        ``wire_bytes`` drift stage directly audits how far the planned
+        change fraction sat from the scene's reality."""
         cfg = self.cfg
         rec = self.recorder
         arrays = self.arrays[arch]
@@ -966,6 +1239,8 @@ class FleetSimulator:
         wire_raw = float(arrays.wire_bytes[s1])
         applicable = (0 < s1 < n) and wire_raw > 0.0
         wire_meas = cdc.wire_bytes(wire_raw) if applicable else wire_raw
+        if wire_meas_over is not None:
+            wire_meas = wire_meas_over
         # predicted wire bytes come from the PLAN BIN (unclamped split,
         # bin codec); the measured bytes from the clamped split + sticky
         # codec state — their gap is the pool-clamp / codec-gate drift
@@ -1162,12 +1437,17 @@ class FleetSimulator:
         enqueue cloud work (or complete locally).  The caller guarantees
         ``now >= next_free[i]`` and that ``nets[i]`` sits at this tick."""
         cfg = self.cfg
+        if self.scene_mat is not None:
+            # drift replans fire on a precomputed tick schedule, before
+            # any robot of the tick is priced (both engines identical)
+            self._maybe_delta_replan(int(round(now / cfg.tick_s)))
         net = self.nets[i]
         bw = net.now_bps
         arrays = self.arrays[self.arch_of[i]]
         down, two_cut = 0.0, False
         s1 = s2 = arrays.n
         kc, bub = 1, None
+        wf_eff = None                  # measured wire factor (scene axis)
         if self._cloud_up:
             s1, s2, kc = self._planned_placement(i, bw)
             cdc = self.codecs[self.codec_of[i]]
@@ -1184,14 +1464,26 @@ class FleetSimulator:
                 two_cut = True
             else:
                 e, c, t = arrays.latency(s1, bw, cfg.rtt_s, codec=cdc)
+            if self.scene_mat is not None:
+                wf_eff = self._delta_uplink(
+                    i, int(round(now / cfg.tick_s)), s1, s2, arrays.n,
+                    float(arrays.wire_bytes[s1]), cdc)
             if kc > 1 and c > 0.0:
                 # streamed uplink: chunk transfers drawn from the
                 # PER-TICK trace (not one frozen bandwidth) while the
                 # cloud window prefills arrived chunks; the exposed
                 # transport time replaces the sequential uplink leg
-                t, bub = self._stream_uplink(i, arrays, s1, cdc, e, c)
+                t, bub = self._stream_uplink(i, arrays, s1, cdc, e, c,
+                                             wire_factor=wf_eff)
                 self.n_streamed_requests += 1
                 self._bubble_sum += bub
+            elif wf_eff is not None:
+                # exact wire-term correction: this frame's measured
+                # bytes replace the plan's cycle average in the uplink
+                # (identically ``+0.0`` for non-delta codecs, whose
+                # measured factor IS the cycle average)
+                t = t + (wf_eff - cdc.wire_factor) \
+                    * float(arrays.wire_bytes[s1]) / bw
         else:
             e, c, t = float(arrays.edge_s[arrays.n]), 0.0, 0.0
         net.step()                      # link evolves every tick
@@ -1200,9 +1492,12 @@ class FleetSimulator:
         if rec is not None and rec.want(self._tele_key(i, now)):
             lane = f"robot:{self.arch_of[i]}"
             if self._cloud_up:
-                tele = self._tele_pred(lane, self.arch_of[i], bw, s1, s2,
-                                       int(kc), int(self.codec_of[i]),
-                                       e, c, t, down)
+                tele = self._tele_pred(
+                    lane, self.arch_of[i], bw, s1, s2, int(kc),
+                    int(self.codec_of[i]), e, c, t, down,
+                    wire_meas_over=(
+                        wf_eff * float(arrays.wire_bytes[s1])
+                        if wf_eff is not None else None))
                 tele["_bubble"] = bub
             else:
                 tele = self._tele_pred_edge(lane, e)
@@ -1372,6 +1667,11 @@ class FleetSimulator:
         (bandwidth reads come straight from ``trace_mat``; only streamed
         rows touch their cursor, via ``seek``)."""
         cfg = self.cfg
+        if self.scene_mat is not None:
+            # before _ensure_batch_state: a due drift replan swaps the
+            # plan tables this very batch prices against (the scalar
+            # engine replans before pricing the tick's first robot)
+            self._maybe_delta_replan(tick)
         bst = self._ensure_batch_state()
         ai = self._arch_idx[idxs]
         if not self._cloud_up:
@@ -1454,6 +1754,17 @@ class FleetSimulator:
         e = np.where(two, eh - tail, Es1)
         down = np.where(two, dn + tail, 0.0)
 
+        # measured delta wire factors: the scalar path's exact wire-term
+        # correction, vectorized (``+0.0`` on non-delta rows).  Streamed
+        # rows are corrected here then overwritten below — value-equal
+        # to the scalar if/elif.
+        wf_meas = app = None
+        if self.scene_mat is not None:
+            wf_meas, app = self._delta_uplink_batch(
+                idxs, tick, s1, s2, n_v, wire_s1, ci)
+            t = t + np.where(app, (wf_meas - bst["wf"][ci]) * wire_s1
+                             / bw, 0.0)
+
         # streamed uplinks price against the per-tick trace — inherently
         # sequential per robot, so scalar in index order
         rec = self.recorder
@@ -1464,7 +1775,10 @@ class FleetSimulator:
                 self.nets[i].seek(tick)
                 t[j], bub = self._stream_uplink(
                     i, self.arrays[self.arch_of[i]], int(s1[j]),
-                    self.codecs[int(ci[j])], float(e[j]), float(c[j]))
+                    self.codecs[int(ci[j])], float(e[j]), float(c[j]),
+                    wire_factor=(float(wf_meas[j])
+                                 if wf_meas is not None and app[j]
+                                 else None))
                 self.n_streamed_requests += 1
                 self._bubble_sum += bub
                 if rec is not None:
@@ -1481,7 +1795,10 @@ class FleetSimulator:
                     f"robot:{self.arch_of[i]}", self.arch_of[i],
                     float(bw[j]), int(s1[j]), int(s2[j]), int(kc[j]),
                     int(ci[j]), float(e[j]), float(c[j]), float(t[j]),
-                    float(down[j]))
+                    float(down[j]),
+                    wire_meas_over=(
+                        float(wf_meas[j] * wire_s1[j])
+                        if wf_meas is not None and app[j] else None))
                 tele["_bubble"] = bub_of.get(j)
                 tele_of[j] = tele
 
@@ -1726,7 +2043,12 @@ class FleetSimulator:
             n_open_arrivals=int(sum(self.proc_arrivals)),
             n_slo_rejections=int(sum(self.proc_rejections)),
             n_autoscale_events=self.n_autoscale,
-            metrics=metrics)
+            metrics=metrics,
+            total_wire_bytes=float(self.wire_bytes_of.sum()),
+            n_keyframes=self.n_keyframes,
+            n_delta_frames=self.n_delta_frames,
+            n_ref_evictions=self.n_ref_evictions,
+            n_delta_replans=self.n_delta_replans)
 
 
 def run_fleet(cfg: FleetConfig) -> FleetReport:

@@ -8,7 +8,7 @@ allocating real jax buffers.
 """
 from __future__ import annotations
 
-from typing import Any, List
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -54,6 +54,58 @@ def graph_kv_cumsum(graph: List, cfg, workload) -> np.ndarray:
     out = np.zeros(len(graph) + 1)
     out[:-1] = per_layer * has_kv[::-1].cumsum()[::-1]
     return out
+
+
+class ReferenceLedger:
+    """Byte accounting for the cloud-side temporal-delta reference cache.
+
+    The delta codec keeps one reference activation per robot on the
+    cloud so later frames can ship only changed token rows.  Those
+    references live in the same accelerator memory as the KV cache, so
+    they compete with it: this ledger tracks bytes per key (robot id)
+    against an optional budget and evicts deterministically when a
+    ``put`` overflows it.
+
+    Eviction is FIFO-by-refresh: keys are held in dict insertion order,
+    a ``put`` of an existing key moves it to the back (its reference
+    was just refreshed), and overflow evicts from the front — the
+    robots whose references are stalest.  The evicted keys are returned
+    so the caller can force those robots onto a key frame next step.
+    Determinism (no clocks, no hashing randomness) is what keeps the
+    tick and event engines bit-identical when a budget is set.
+    """
+
+    def __init__(self, budget_bytes: Optional[float] = None):
+        self.budget_bytes = budget_bytes
+        self._bytes: Dict[int, float] = {}
+        self.total_bytes = 0.0
+
+    def put(self, key: int, n_bytes: float) -> List[int]:
+        """Record ``key``'s reference at ``n_bytes``, refreshing its
+        eviction position; returns the (possibly empty) list of keys
+        evicted to fit the budget.  The new key itself is never evicted
+        even when ``n_bytes`` alone exceeds the budget — a reference
+        that can never be held would force key frames forever without
+        ever reporting an eviction."""
+        old = self._bytes.pop(key, 0.0)
+        self.total_bytes -= old
+        self._bytes[key] = float(n_bytes)
+        self.total_bytes += float(n_bytes)
+        evicted: List[int] = []
+        if self.budget_bytes is not None:
+            for k in list(self._bytes):
+                if self.total_bytes <= self.budget_bytes or k == key:
+                    break
+                self.total_bytes -= self._bytes.pop(k)
+                evicted.append(k)
+        return evicted
+
+    def drop(self, key: int) -> None:
+        """Forget ``key``'s reference (robot left, or its cache was
+        invalidated out-of-band).  Missing keys are a no-op."""
+        old = self._bytes.pop(key, None)
+        if old is not None:
+            self.total_bytes -= old
 
 
 def alloc_cache(model, batch: int, max_len: int, **kw) -> Tree:

@@ -39,6 +39,17 @@ every jitted function: the traced edge/cloud forwards never see the
 chunk count, so changing ``n_chunks`` between requests recompiles
 nothing (one trace per function across all chunk counts — the same
 invariant the dynamic cut indices already have).
+
+Temporal-delta transport (``core/codec.DeltaCodec``): ``delta_encode``
+ships only the token rows whose activation changed since the previous
+step against a cloud-side *reference* copy, plus a packed one-bit
+change mask; every R-th frame is a full key frame (byte-identical to
+the plain ``encode_activation`` payload) that resyncs the reference.
+``DeltaTransport`` keeps the per-robot reference cache, with bytes
+accounted against an optional budget via
+``runtime.kvcache.ReferenceLedger`` — an evicted robot's next frame is
+forced back to a key frame.  These run host-side (the change mask is
+data-dependent shape logic), outside every jitted forward.
 """
 from __future__ import annotations
 
@@ -50,6 +61,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.pipeline import chunk_sizes
 from ..core.telemetry import Span
@@ -225,6 +237,138 @@ def merge_chunks(chunks: List[Dict]) -> Dict:
         raise ValueError("merge_chunks needs at least one chunk")
     return {k: jnp.concatenate([c[k] for c in chunks], axis=1)
             for k in chunks[0]}
+
+
+# ------------------------------------------------- temporal-delta transport
+def delta_encode(x: jax.Array, base_codec: str,
+                 ref: Optional[jax.Array] = None, *,
+                 threshold: float = 0.02, resync_every: int = 8,
+                 steps_since_key: int = 0
+                 ) -> Tuple[Dict, jax.Array, bool]:
+    """Encode ``x`` against the reference ``ref`` from the previous step.
+
+    Returns ``(payload, new_ref, is_keyframe)``.  Key frames (``ref`` is
+    ``None``, ``resync_every <= 1``, the resync cadence fires, or the
+    delta would be at least as large as a full frame) produce a payload
+    **byte-identical** to ``encode_activation(x, base_codec)`` — the
+    non-delta path — and reset the reference.  Delta frames ship a
+    packed one-bit change mask over the token rows (axis 1) plus the
+    base-codec encoding of just the changed rows; a row counts as
+    changed when ``max|x - ref|`` over that row exceeds
+    ``threshold * max|x|``.  ``new_ref`` is the cloud-side
+    reconstruction (``delta_decode`` of the payload) — both tiers
+    update their reference from the *shipped* bytes, so they stay
+    bit-identical without a second channel.
+
+    Unsent rows satisfy ``|x - ref| <= threshold * max|x|`` at *this*
+    step by construction; the planner's per-cycle bound
+    ``base_err + (R-1) * threshold`` (``DeltaCodec.err_bound``) is the
+    conservative envelope of that over a key-frame cycle.
+
+    Host-side only: the change mask drives data-dependent shapes, so
+    this cannot run under ``jit`` (same contract as ``chunk_payload`` —
+    pure transport logic outside the traced forwards).  Unknown codec
+    names are rejected by ``encode_activation`` exactly as on the
+    non-delta path."""
+    is_key = (ref is None or int(resync_every) <= 1
+              or int(steps_since_key) + 1 >= int(resync_every))
+    if not is_key:
+        absmax = float(jnp.max(jnp.abs(x)))
+        rowdiff = jnp.max(jnp.abs(x - ref.astype(x.dtype)), axis=(0, 2))
+        changed = np.asarray(rowdiff > threshold * absmax)
+        idx = np.flatnonzero(changed)
+        S = x.shape[1]
+        body = encode_activation(x[:, idx, :], base_codec)
+        mask = np.packbits(changed)
+        # encoded bytes are linear in the token count (per-row block
+        # scales, no cross-token state), so the full-frame size follows
+        # from the changed-rows size without encoding twice
+        if idx.size and mask.nbytes + payload_bytes(body) \
+                >= payload_bytes(body) * (S / idx.size):
+            is_key = True       # delta no smaller than a key frame
+        else:
+            payload = {"mask": mask, **body}
+            new_ref = delta_decode(payload, ref, x.dtype)
+            return payload, new_ref, False
+    payload = encode_activation(x, base_codec)
+    return payload, decode_activation(payload, x.dtype), True
+
+
+def delta_decode(payload: Dict, ref: Optional[jax.Array] = None,
+                 dtype=jnp.bfloat16) -> jax.Array:
+    """Reconstruct the full cut activation from a ``delta_encode``
+    payload.  Key-frame payloads (no ``"mask"`` key) decode standalone;
+    delta payloads scatter the decoded changed rows into a copy of
+    ``ref``."""
+    if "mask" not in payload:
+        return decode_activation(payload, dtype)
+    if ref is None:
+        raise ValueError("delta payload needs the reference activation "
+                         "(reference evicted? force a key frame)")
+    S = ref.shape[1]
+    changed = np.unpackbits(np.asarray(payload["mask"]),
+                            count=S).astype(bool)
+    idx = np.flatnonzero(changed)
+    out = jnp.asarray(ref, dtype=jnp.dtype(dtype))
+    if idx.size:
+        body = {k: v for k, v in payload.items() if k != "mask"}
+        out = out.at[:, idx, :].set(decode_activation(body, dtype))
+    return out
+
+
+class DeltaTransport:
+    """Per-robot temporal-delta transport state.
+
+    One instance simulates both tiers of the delta channel for a fleet:
+    the per-robot reference activation (cloud-side copy the edge
+    mirrors bit-exactly, since both update from the shipped bytes), the
+    steps-since-keyframe counter that drives the resync cadence, and
+    the ``ReferenceLedger`` byte accounting that makes references
+    compete with the KV budget.  When a ``put`` overflows the budget
+    the stalest robots' references are evicted and their next ``step``
+    is forced onto a key frame."""
+
+    def __init__(self, base_codec: str = "int8", *,
+                 threshold: float = 0.02, resync_every: int = 8,
+                 budget_bytes: Optional[float] = None):
+        from .kvcache import ReferenceLedger
+        self.base_codec = base_codec
+        self.threshold = threshold
+        self.resync_every = int(resync_every)
+        self.ledger = ReferenceLedger(budget_bytes)
+        self._ref: Dict[int, jax.Array] = {}
+        self._ssk: Dict[int, int] = {}
+        self.n_keyframes = 0
+        self.n_delta_frames = 0
+        self.n_evictions = 0
+
+    def step(self, robot_id: int, x: jax.Array
+             ) -> Tuple[Dict, jax.Array, bool]:
+        """Encode ``x`` for ``robot_id`` and return
+        ``(payload, reconstruction, is_keyframe)`` — the reconstruction
+        is what the cloud decodes (and the next step's reference)."""
+        payload, new_ref, is_key = delta_encode(
+            x, self.base_codec, self._ref.get(robot_id),
+            threshold=self.threshold, resync_every=self.resync_every,
+            steps_since_key=self._ssk.get(robot_id, 0))
+        self._ref[robot_id] = new_ref
+        self._ssk[robot_id] = 0 if is_key else self._ssk[robot_id] + 1
+        if is_key:
+            self.n_keyframes += 1
+        else:
+            self.n_delta_frames += 1
+        for k in self.ledger.put(robot_id,
+                                 new_ref.size * new_ref.dtype.itemsize):
+            self.evict(k)
+            self.n_evictions += 1
+        return payload, new_ref, is_key
+
+    def evict(self, robot_id: int) -> None:
+        """Drop ``robot_id``'s reference; its next frame is a forced
+        key frame."""
+        self._ref.pop(robot_id, None)
+        self._ssk.pop(robot_id, None)
+        self.ledger.drop(robot_id)
 
 
 # ================================================================ LM executor

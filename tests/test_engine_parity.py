@@ -167,6 +167,46 @@ def test_events_engine_seed_determinism():
     assert r1 != r3
 
 
+@pytest.mark.parametrize("budget,drift", [(None, 0), (1.2e6, 15)])
+def test_parity_scene_delta_axis(budget, drift):
+    """Temporal-delta scene axis three ways: per-robot delta cadence
+    state, measured wire pricing, drift replans and (budgeted) reference
+    ledger evictions must replay identically in the dense tick loop, the
+    scalar event path and the batched event path.  The delta codec is
+    deliberately planned for a static scene while the fleet runs a
+    dynamic one, so the drift schedule actually fires."""
+    from repro.core.codec import make_delta_codec
+    d = make_delta_codec(change_frac=0.02, name="delta")
+    cfg = dataclasses.replace(
+        _cfg(continuous=True, streamed=True, multicut=True),
+        codecs=("identity", d, "int8"), scene="dynamic",
+        delta_drift_every=drift, delta_ref_budget_bytes=budget)
+    r_ticks = run_fleet(dataclasses.replace(cfg, engine="ticks"))
+    r_scalar = run_fleet(dataclasses.replace(
+        cfg, engine="events", vectorized=False))
+    r_vec = run_fleet(dataclasses.replace(
+        cfg, engine="events", vectorized=True))
+    _assert_equal(r_ticks, r_scalar)
+    _assert_equal(r_scalar, r_vec)
+    assert r_ticks.n_keyframes > 0 and r_ticks.total_wire_bytes > 0
+    if budget is not None:
+        assert r_ticks.n_ref_evictions > 0
+    if drift:
+        assert r_ticks.n_delta_replans > 0
+
+
+def test_scene_off_runs_unchanged():
+    """scene=None must leave the report's delta fields at their zero
+    defaults and stay bit-identical to a run that never had the axis
+    (same RNG streams — the scene matrix draws from a disjoint stream
+    only when a scene is configured)."""
+    cfg = _cfg(continuous=True, streamed=True, multicut=True)
+    a, b = _both(cfg)
+    _assert_equal(a, b)
+    assert a.total_wire_bytes == 0.0 and a.n_keyframes == 0
+    assert a.n_delta_frames == 0 and a.n_ref_evictions == 0
+
+
 def test_tick_engine_refuses_events_only_features():
     with pytest.raises(ValueError):
         run_fleet(dataclasses.replace(

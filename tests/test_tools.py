@@ -2,9 +2,11 @@
 only by actually running them in the workflow: the BENCH_fleet.json
 schema checker (``tools/check_bench_schema.py`` — valid payloads pass,
 each class of violation is reported with a pointed message, ``main``
-exit codes are correct) and the docs-link checker
+exit codes are correct), the docs-link checker
 (``tools/check_doc_links.py`` — resolvable references in docstrings and
-markdown pass, dangling ones fail with file:line).
+markdown pass, dangling ones fail with file:line) and the doc-coverage
+checker (``tools/check_doc_coverage.py`` — every public FleetConfig
+field and registered codec must be mentioned in docs/ or README.md).
 """
 import json
 import os
@@ -16,6 +18,7 @@ import pytest
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
 
 import check_bench_schema as cbs          # noqa: E402
+import check_doc_coverage as cdc          # noqa: E402
 import check_doc_links as cdl             # noqa: E402
 
 
@@ -79,11 +82,24 @@ def _valid_payload() -> dict:
                              for k in ("edge_s", "uplink_s", "queue_s",
                                        "service_s", "down_s", "total_s",
                                        "wire_bytes")}},
+        "delta": {"resync_every": 16, "static_gate_ratio": 5.0,
+                  "scenes": {s: _delta_scene()
+                             for s in cbs.DELTA_REQUIRED_SCENES},
+                  "drift": {"n": 900, "mean_err_bytes": 30.0,
+                            "p95_err_bytes": 120.0,
+                            "meas_mean_bytes": 5e4,
+                            "rel_err": 0.02, "rel_tol": 0.5}},
     }
 
 
 def _drift_stage() -> dict:
     return {"n": 2000, "mean_err": 1e-3, "p50_err": 5e-4, "p95_err": 4e-3}
+
+
+def _delta_scene() -> dict:
+    return {"delta_bytes_per_step": 2e4, "int4_bytes_per_step": 1e5,
+            "ratio_vs_int4": 5.0, "keyframe_rate": 0.07,
+            "n_keyframes": 60, "n_delta_frames": 840}
 
 
 def _cohort() -> dict:
@@ -160,6 +176,21 @@ def test_schema_valid_payload_passes():
         mean_err=float("nan")), "drift.stages['uplink_s'].mean_err"),
     (lambda p: p["drift"]["stages"]["edge_s"].update(n=0),
      "drift.stages['edge_s'].n"),
+    (lambda p: p.pop("delta"), "missing top-level section 'delta'"),
+    (lambda p: p.update(delta={}), "'delta' must be a non-empty object"),
+    (lambda p: p["delta"].update(resync_every=0), "delta.resync_every"),
+    (lambda p: p["delta"]["scenes"].pop("dynamic"),
+     "delta.scenes missing 'dynamic'"),
+    (lambda p: p["delta"]["scenes"]["static"].update(ratio_vs_int4=0.0),
+     "delta.scenes['static'].ratio_vs_int4"),
+    (lambda p: p["delta"]["scenes"]["slow"].update(keyframe_rate=1.5),
+     "keyframe_rate out of [0, 1]"),
+    (lambda p: p["delta"]["scenes"]["dynamic"].update(n_keyframes=-1),
+     "delta.scenes['dynamic'].n_keyframes"),
+    (lambda p: p["delta"]["drift"].pop("rel_err"),
+     "delta.drift missing 'rel_err'"),
+    (lambda p: p["delta"]["drift"].update(rel_err=0.9),
+     "exceeds its recorded tolerance"),
 ])
 def test_schema_violations_are_reported(mutate, needle):
     payload = _valid_payload()
@@ -260,3 +291,90 @@ def test_doc_links_checker_passes_on_this_repo():
     """The real repo must stay clean — the same invocation CI runs."""
     root = os.path.join(os.path.dirname(__file__), "..")
     assert cdl.check(os.path.abspath(root)) == []
+
+
+# ---------------------------------------------------------- doc coverage
+def _cov_repo(tmp_path, doc="n_robots tick_s identity int8 delta"):
+    """Minimal source tree the pure-ast extractor understands: a
+    FleetConfig dataclass (one private field, which must be ignored) and
+    a make_codecs registry (dict literal + subscript registration)."""
+    (tmp_path / "src" / "repro" / "runtime").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "core").mkdir(parents=True)
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "src" / "repro" / "runtime" / "fleet.py").write_text(
+        textwrap.dedent("""\
+            from dataclasses import dataclass
+
+
+            @dataclass(frozen=True)
+            class FleetConfig:
+                n_robots: int = 8
+                tick_s: float = 0.05
+                _cache: object = None
+        """))
+    (tmp_path / "src" / "repro" / "core" / "codec.py").write_text(
+        textwrap.dedent("""\
+            def make_codecs():
+                out = {"identity": 1, "int8": 2}
+                out["delta"] = 3
+                return out
+        """))
+    (tmp_path / "docs" / "DESIGN.md").write_text(doc + "\n")
+    (tmp_path / "README.md").write_text("overview\n")
+    return tmp_path
+
+
+def test_doc_coverage_clean_repo_passes(tmp_path):
+    assert cdc.check(str(_cov_repo(tmp_path))) == []
+
+
+@pytest.mark.parametrize("doc,needle", [
+    ("n_robots identity int8 delta", "FleetConfig.tick_s"),
+    ("n_robots tick_s identity int8", "codec 'delta'"),
+    ("n_robots tick_s int8 delta", "codec 'identity'"),
+    # substring hits must not count as mentions (word-boundary match)
+    ("n_robots_per_cell tick_s identity int8 delta",
+     "FleetConfig.n_robots"),
+])
+def test_doc_coverage_undocumented_name_fails(tmp_path, doc, needle):
+    errors = cdc.check(str(_cov_repo(tmp_path, doc=doc)))
+    assert len(errors) == 1, errors
+    assert needle in errors[0]
+
+
+def test_doc_coverage_private_fields_ignored(tmp_path):
+    """``_cache`` is never required — and never satisfied either."""
+    errors = cdc.check(str(_cov_repo(tmp_path)))
+    assert not any("_cache" in e for e in errors)
+
+
+def test_doc_coverage_readme_mentions_count(tmp_path):
+    root = _cov_repo(tmp_path, doc="identity int8 delta tick_s")
+    (root / "README.md").write_text("the n_robots knob\n")
+    assert cdc.check(str(root)) == []
+
+
+def test_doc_coverage_missing_sources_reported(tmp_path):
+    root = _cov_repo(tmp_path)
+    (root / "src" / "repro" / "runtime" / "fleet.py").write_text(
+        "class SomethingElse:\n    pass\n")
+    errors = cdc.check(str(root))
+    assert any("'FleetConfig' not found" in e for e in errors)
+
+
+def test_doc_coverage_main_exit_codes(tmp_path, monkeypatch, capsys):
+    root = _cov_repo(tmp_path)
+    monkeypatch.setattr(sys, "argv",
+                        ["check_doc_coverage.py", "--root", str(root)])
+    assert cdc.main() == 0
+    assert "doc coverage OK" in capsys.readouterr().out
+    (root / "docs" / "DESIGN.md").write_text("n_robots identity int8\n")
+    assert cdc.main() == 1
+    err = capsys.readouterr()
+    assert "undocumented public name(s)" in err.err + err.out
+
+
+def test_doc_coverage_checker_passes_on_this_repo():
+    """The real repo must stay clean — the same invocation CI runs."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    assert cdc.check(os.path.abspath(root)) == []

@@ -4,11 +4,11 @@ drifts from what downstream consumers (perf-trajectory tooling, the
 EXPERIMENTS.md tables, cross-PR diffs) expect.
 
 The schema is versioned: ``benchmarks/fleet_bench.py`` stamps
-``schema_version`` (currently 6 — the version that added the
-``overhead`` section: flight-recorder off/sampled/full wall-clock
-ratios with the sampled budget gate, plus the ``drift`` section:
-planner-predicted vs measured per-stage error distributions from
-``core/telemetry.DriftAudit``) and this checker validates
+``schema_version`` (currently 7 — the version that added the
+``delta`` section: temporal-delta transport bytes-per-step by scene
+class vs int4, key-frame rates, and the wire-bytes drift row auditing
+the planner's cycle-average pricing against measured per-frame bytes)
+and this checker validates
 
 * the top-level sections and their per-entry keys,
 * value sanity (latencies positive and finite, percentile ladders
@@ -23,6 +23,10 @@ planner-predicted vs measured per-stage error distributions from
   allowance,
 * the overhead section's ratios (>= 1 after the noise floor, sampled
   ratio inside its recorded budget) and walls,
+* the delta section's per-scene byte accounting (bytes-per-step
+  positive finite, key-frame rates in [0, 1], all three scene classes
+  present) and its drift row (relative error inside the recorded
+  tolerance),
 * the drift section's join counts, per-stage error stats (finite), and
   the stage-sum reconciliation bound (< 1e-6 s — the recorder's
   decomposition must re-sum to the reported latency).
@@ -40,11 +44,11 @@ import math
 import sys
 from typing import List
 
-EXPECTED_SCHEMA_VERSION = 6
+EXPECTED_SCHEMA_VERSION = 7
 
 TOP_SECTIONS = ("schema_version", "config", "planner", "fleet", "codecs",
-                "multicut", "streamed", "queue", "scale", "scaling_curve",
-                "autoscale", "overhead", "drift")
+                "multicut", "streamed", "queue", "delta", "scale",
+                "scaling_curve", "autoscale", "overhead", "drift")
 CONFIG_KEYS = ("n_robots", "n_ticks", "n_replicas", "seed", "smoke")
 PLANNER_KEYS = ("scalar_s", "vec_s", "cells", "codec_scalar_s",
                 "codec_vec_s", "codec_cells", "multicut_scalar_s",
@@ -77,6 +81,14 @@ OVERHEAD_KEYS = ("n_robots", "n_ticks", "off_wall_s", "sampled_wall_s",
 DRIFT_KEYS = ("n_joined", "n_pred_saturated", "reconcile_max_abs_s",
               "stages")
 DRIFT_STAGE_KEYS = ("n", "mean_err", "p50_err", "p95_err")
+DELTA_KEYS = ("resync_every", "static_gate_ratio", "scenes", "drift")
+DELTA_SCENE_KEYS = ("delta_bytes_per_step", "int4_bytes_per_step",
+                    "ratio_vs_int4", "keyframe_rate", "n_keyframes",
+                    "n_delta_frames")
+# the scene axis must carry the win case AND the honest negative
+DELTA_REQUIRED_SCENES = ("static", "slow", "dynamic")
+DELTA_DRIFT_KEYS = ("n", "mean_err_bytes", "p95_err_bytes",
+                    "meas_mean_bytes", "rel_err", "rel_tol")
 # the decomposition the recorder emits must re-sum to the latency it
 # reports; anything past accumulated float rounding is a threading bug
 DRIFT_RECONCILE_BOUND_S = 1e-6
@@ -164,6 +176,65 @@ def check(payload: dict) -> List[str]:
         if t.endswith("_seq"):
             need(t[:-4] + "_stream" in tags, f"streamed {t!r} lacks its "
                  f"'_stream' counterpart")
+
+    de = payload["delta"]
+    need(isinstance(de, dict) and de,
+         "section 'delta' must be a non-empty object")
+    if isinstance(de, dict) and de:
+        for k in DELTA_KEYS:
+            need(k in de, f"delta missing {k!r}")
+        v = de.get("resync_every")
+        if v is not None:
+            need(isinstance(v, int) and v >= 1,
+                 "delta.resync_every must be a positive int")
+        scenes = de.get("scenes")
+        need(isinstance(scenes, dict) and scenes,
+             "delta.scenes must be a non-empty object")
+        if isinstance(scenes, dict):
+            for s in DELTA_REQUIRED_SCENES:
+                need(s in scenes, f"delta.scenes missing {s!r}")
+            for tag, entry in scenes.items():
+                for k in DELTA_SCENE_KEYS:
+                    need(k in entry, f"delta.scenes[{tag!r}] missing {k!r}")
+                for k in ("delta_bytes_per_step", "int4_bytes_per_step",
+                          "ratio_vs_int4"):
+                    if k in entry:
+                        need(_finite_pos(entry[k]),
+                             f"delta.scenes[{tag!r}].{k} must be finite "
+                             f"positive")
+                kr = entry.get("keyframe_rate")
+                if kr is not None:
+                    need(isinstance(kr, (int, float)) and 0.0 <= kr <= 1.0,
+                         f"delta.scenes[{tag!r}].keyframe_rate out of "
+                         f"[0, 1]")
+                for k in ("n_keyframes", "n_delta_frames"):
+                    v = entry.get(k)
+                    if v is not None:
+                        need(isinstance(v, int) and v >= 0,
+                             f"delta.scenes[{tag!r}].{k} must be a "
+                             f"non-negative int")
+        dd = de.get("drift")
+        need(isinstance(dd, dict) and dd,
+             "delta.drift must be a non-empty object")
+        if isinstance(dd, dict) and dd:
+            for k in DELTA_DRIFT_KEYS:
+                need(k in dd, f"delta.drift missing {k!r}")
+            v = dd.get("n")
+            if v is not None:
+                need(isinstance(v, int) and v > 0,
+                     "delta.drift.n must be a positive int")
+            for k in ("mean_err_bytes", "p95_err_bytes",
+                      "meas_mean_bytes", "rel_err", "rel_tol"):
+                v = dd.get(k)
+                if v is not None:
+                    need(isinstance(v, (int, float)) and math.isfinite(v),
+                         f"delta.drift.{k} must be finite")
+            rel, tol = dd.get("rel_err"), dd.get("rel_tol")
+            if isinstance(rel, (int, float)) and isinstance(
+                    tol, (int, float)):
+                need(rel <= tol,
+                     f"delta.drift.rel_err {rel!r} exceeds its recorded "
+                     f"tolerance {tol!r}")
 
     sc = payload["scale"]
     need(isinstance(sc, dict), "section 'scale' must be an object")
@@ -354,9 +425,12 @@ def main() -> int:
         print(f"{args.path}: {e}", file=sys.stderr)
     if errs:
         return 1
+    static_ratio = payload["delta"]["scenes"]["static"]["ratio_vs_int4"]
     print(f"{args.path}: schema v{payload['schema_version']} OK "
           f"({len(payload['streamed'])} streamed, "
-          f"{len(payload['queue'])} queue entries, scale "
+          f"{len(payload['queue'])} queue entries, "
+          f"{len(payload['delta']['scenes'])} delta scenes "
+          f"(static x{static_ratio:.1f} vs int4), scale "
           f"{payload['scale']['n_robots']} robots in "
           f"{payload['scale']['wall_s']:.1f}s, curve "
           f"{len(payload['scaling_curve'])} sizes up to "

@@ -1,0 +1,140 @@
+#!/usr/bin/env python
+"""Doc-coverage checker: every public knob must be mentioned in the docs.
+
+Extracts, by parsing the source with ``ast`` (no import of ``repro``, so
+the check runs on any tree shape, including the unit tests' mini repos):
+
+* every public field of the ``FleetConfig`` dataclass in
+  ``src/repro/runtime/fleet.py`` (public = not underscore-prefixed), and
+* every codec name registered by ``make_codecs`` in
+  ``src/repro/core/codec.py`` (the ``out = {...}`` literal keys plus any
+  ``out["name"] = ...`` assignments),
+
+then requires each name to appear as a whole word somewhere in
+``docs/*.md`` or ``README.md``.  A config field or codec that ships
+without a single line of documentation fails CI with a pointed message.
+
+This is the companion gate to ``check_doc_links.py``: that one keeps the
+docs from citing files that do not exist; this one keeps the code from
+growing knobs the docs never heard of.
+
+    python tools/check_doc_coverage.py [--root PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import re
+import sys
+from typing import List
+
+FLEET_PY = os.path.join("src", "repro", "runtime", "fleet.py")
+CODEC_PY = os.path.join("src", "repro", "core", "codec.py")
+CONFIG_CLASS = "FleetConfig"
+REGISTRY_FN = "make_codecs"
+DOC_DIRS = ("docs",)                 # every *.md here
+DOC_FILES = ("README.md",)           # plus these root files
+
+
+def _parse(path: str, errors: List[str]) -> ast.Module:
+    try:
+        with open(path, encoding="utf-8") as f:
+            return ast.parse(f.read(), filename=path)
+    except (OSError, SyntaxError) as e:
+        errors.append(f"{path}: cannot parse: {e}")
+        return ast.Module(body=[], type_ignores=[])
+
+
+def config_fields(root: str, errors: List[str]) -> List[str]:
+    """Public annotated fields of FleetConfig, in declaration order."""
+    tree = _parse(os.path.join(root, FLEET_PY), errors)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == CONFIG_CLASS:
+            return [s.target.id for s in node.body
+                    if isinstance(s, ast.AnnAssign)
+                    and isinstance(s.target, ast.Name)
+                    and not s.target.id.startswith("_")]
+    errors.append(f"{FLEET_PY}: class {CONFIG_CLASS!r} not found")
+    return []
+
+
+def codec_names(root: str, errors: List[str]) -> List[str]:
+    """Registry keys built by make_codecs: dict-literal keys plus
+    string-subscript assignments (``out["delta"] = ...``)."""
+    tree = _parse(os.path.join(root, CODEC_PY), errors)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == REGISTRY_FN:
+            names: List[str] = []
+            for sub in ast.walk(node):
+                if not isinstance(sub, ast.Assign):
+                    continue
+                for tgt in sub.targets:
+                    if (isinstance(tgt, ast.Name)
+                            and isinstance(sub.value, ast.Dict)):
+                        names += [k.value for k in sub.value.keys
+                                  if isinstance(k, ast.Constant)
+                                  and isinstance(k.value, str)]
+                    elif (isinstance(tgt, ast.Subscript)
+                          and isinstance(tgt.slice, ast.Constant)
+                          and isinstance(tgt.slice.value, str)):
+                        names.append(tgt.slice.value)
+            if not names:
+                errors.append(f"{CODEC_PY}: {REGISTRY_FN} registers no "
+                              "codec names the checker can see")
+            return names
+    errors.append(f"{CODEC_PY}: function {REGISTRY_FN!r} not found")
+    return []
+
+
+def _doc_corpus(root: str) -> str:
+    chunks = []
+    paths = [os.path.join(root, f) for f in DOC_FILES]
+    for d in DOC_DIRS:
+        base = os.path.join(root, d)
+        if os.path.isdir(base):
+            paths += [os.path.join(base, fn)
+                      for fn in sorted(os.listdir(base))
+                      if fn.endswith(".md")]
+    for p in paths:
+        if os.path.isfile(p):
+            with open(p, encoding="utf-8") as f:
+                chunks.append(f.read())
+    return "\n".join(chunks)
+
+
+def check(root: str) -> List[str]:
+    errors: List[str] = []
+    fields = config_fields(root, errors)
+    codecs = codec_names(root, errors)
+    corpus = _doc_corpus(root)
+    where = "docs/*.md or " + "/".join(DOC_FILES)
+    for name in fields:
+        if not re.search(rf"\b{re.escape(name)}\b", corpus):
+            errors.append(f"{CONFIG_CLASS}.{name}: public config field "
+                          f"has no mention in {where}")
+    for name in codecs:
+        if not re.search(rf"\b{re.escape(name)}\b", corpus):
+            errors.append(f"codec {name!r}: registered codec has no "
+                          f"mention in {where}")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), ".."))
+    args = ap.parse_args()
+    errors = check(os.path.abspath(args.root))
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"\n{len(errors)} undocumented public name(s)",
+              file=sys.stderr)
+        return 1
+    print("doc coverage OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
